@@ -1,0 +1,68 @@
+"""Batched serving with SlideSparse-packed weights (paper §4 pipeline).
+
+Compares dense vs (2N-2):2N-compressed serving on the same prompts and
+reports throughput + the analytic speedup the packed format would yield on
+the target hardware (GPU Sparse Tensor Cores: N/(N-1); TPU decode:
+weight-traffic reduction — DESIGN.md §2).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--pattern 6 8]
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core.linear import SparsityConfig
+from repro.core.patterns import Pattern, SlideDecomposition, TWO_FOUR
+from repro.models import model as M
+from repro.runtime import serve_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-3-4b")
+    ap.add_argument("--pattern", nargs=2, type=int, default=(6, 8))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    base = registry.smoke_config(args.arch)
+    base = dataclasses.replace(base, d_model=256, num_heads=8, num_kv_heads=4,
+                               head_dim=32, d_ff=512, vocab_size=4096,
+                               num_layers=len(base.unit_pattern) * 2)
+    params = M.init(base, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        base.vocab_size)}
+
+    print(f"=== dense serving ({base.name} family) ===")
+    toks_d, stats_d = serve_loop.generate(params, base, batch,
+                                          args.new_tokens)
+    print(f"prefill {stats_d.prefill_s:.2f}s  decode "
+          f"{stats_d.decode_tok_s:.1f} tok/s")
+
+    z, l = args.pattern
+    cfg = dataclasses.replace(base, sparsity=SparsityConfig(
+        pattern=(z, l), mode="compressed", use_pallas=False))
+    packed = serve_loop.pack_params(params, cfg)
+    print(f"=== SlideSparse {z}:{l} serving (packed + compressed) ===")
+    toks_s, stats_s = serve_loop.generate(packed, cfg, batch,
+                                          args.new_tokens)
+    print(f"prefill {stats_s.prefill_s:.2f}s  decode "
+          f"{stats_s.decode_tok_s:.1f} tok/s")
+
+    agree = float(np.mean(np.asarray(toks_d) == np.asarray(toks_s)))
+    dec = SlideDecomposition(Pattern(z, l), TWO_FOUR)
+    print(f"\ntoken agreement dense vs {z}:{l}: {agree:.2f} "
+          "(pruning changes the model — agreement is expected to be "
+          "high for mild patterns, not exact)")
+    print(f"analytic bounds: GPU sparse-tensor-core S_eff = "
+          f"{float(dec.s_eff):.3f}x; TPU decode weight-traffic = "
+          f"{float(dec.source.density):.3f}x of dense bytes (+2-bit meta)")
+
+
+if __name__ == "__main__":
+    main()

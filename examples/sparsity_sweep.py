@@ -1,0 +1,62 @@
+"""Sparsity-accuracy sweep — the shape of paper Figure 2 on a tiny LM.
+
+The paper fine-tunes Qwen3 under Dense / 6:8 / 2:4 and shows 6:8 preserves
+accuracy while 2:4 collapses.  Model weights and reasoning benchmarks are
+not available offline, so this proxy trains a small LM from scratch under
+each (masked-STE) regime on the synthetic pipeline and reports final loss
+— the qualitative ordering dense <= 6:8 << 2:4 is the reproducible claim.
+
+Run:  PYTHONPATH=src python examples/sparsity_sweep.py [--steps 150]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import registry
+from repro.core.linear import SparsityConfig
+from repro.optim import adamw
+from repro.runtime import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, d_model=128, num_heads=8, num_kv_heads=4,
+                               head_dim=16, d_ff=256, vocab_size=2048,
+                               num_layers=4, logits_chunk=64)
+    regimes = {
+        "dense": None,
+        "10:12": (10, 12),
+        "6:8": (6, 8),
+        "4:6": (4, 6),
+        "2:4": (2, 4),
+    }
+    results = {}
+    for name, pat in regimes.items():
+        sp = (SparsityConfig(pattern=pat, mode="masked") if pat
+              else SparsityConfig())
+        cfg = dataclasses.replace(base, sparsity=sp)
+        out = train_loop.train(
+            cfg, adamw.AdamWConfig(lr=3e-3),
+            train_loop.TrainConfig(steps=args.steps, log_every=0,
+                                   global_batch=args.batch,
+                                   seq_len=args.seq))
+        k = max(1, args.steps // 10)
+        results[name] = sum(out["losses"][-k:]) / k
+        print(f"[sweep] {name:>6}: final loss {results[name]:.4f}")
+
+    print("\npattern  density  final-loss  (lower = better)")
+    for name, loss in results.items():
+        dens = "1.000" if name == "dense" else \
+            f"{int(name.split(':')[0]) / int(name.split(':')[1]):.3f}"
+        print(f"{name:>7}  {dens:>7}  {loss:.4f}")
+    print("\nExpected ordering (paper Fig. 2): mild patterns track dense; "
+          "2:4 degrades most.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro — SlideSparse (2N-2):2N structured sparsity on TPU, in JAX.
+
+A production-grade training/inference framework reproducing and extending
+*SlideSparse: Fast and Flexible (2N-2):2N Structured Sparsity* (2026).
+See DESIGN.md for the system map and EXPERIMENTS.md for results.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Checkpoint substrate: atomic publish, async save, elastic restore."""
+from .checkpointer import (  # noqa: F401
+    save, restore, latest_step, AsyncCheckpointer,
+)

@@ -1,0 +1,137 @@
+"""Fault-tolerant checkpointing: atomic publish, async save, auto-resume,
+reshard-on-load (elastic restore).
+
+Layout: <dir>/step_<N>/{arrays.npz, manifest.json}; a checkpoint becomes
+visible only when its directory is atomically renamed from a .tmp staging
+name — a host killed mid-save can never leave a half checkpoint that
+resume() would pick up.  Arrays are saved as host numpy (fully replicated
+view), so a restore may target a *different* mesh/device count: reshard-on-
+load is just device_put with the new shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import numpy as np
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+    """Synchronous atomic checkpoint. Returns the published path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp.{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(x))
+              for i, x in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "num_leaves": len(leaves),
+        "treedef": str(treedef),
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp") \
+                and ".tmp." not in name:
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like_tree, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``like_tree``; optionally reshard onto
+    new device placements (elastic restore). Returns (tree, step, extra)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(like_tree)
+    if manifest["num_leaves"] != len(leaves):
+        raise ValueError("checkpoint/model structure mismatch: "
+                         f"{manifest['num_leaves']} vs {len(leaves)} leaves")
+    restored = []
+    sh_leaves = (treedef.flatten_up_to(shardings) if shardings is not None
+                 else [None] * len(leaves))
+    for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i} shape mismatch: {arr.shape} vs "
+                             f"{ref.shape}")
+        arr = arr.astype(ref.dtype)
+        restored.append(jax.device_put(arr, sh) if sh is not None
+                        else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, restored), step, \
+        manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing: the step loop hands off host copies
+    and keeps training; ``wait()`` joins before exit/preemption."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, step: int, tree, extra: dict | None = None):
+        self.wait()
+        # device->host copy happens on the caller thread (cheap, ordered);
+        # file IO happens in the background
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        host_tree = jax.tree_util.tree_unflatten(treedef, host)
+
+        def _work():
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.ckpt_dir)
+            if n.startswith("step_") and ".tmp" not in n)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,134 @@
+"""Hardware-compressed representation of slided 2:4 windows (paper §4.3).
+
+cuSPARSELt stores a 2:4 operand as the two non-zero values per window plus
+2-bit position metadata.  We mirror that layout for the TPU kernels:
+
+* ``values``  [..., G, w, M]   — per-window non-zero values (pad = 0)
+* ``indices`` [..., G, w, M]   — int8 in-window positions (0..N-1)
+
+For the (2N-2):2N family the compressed value count is exactly the source
+non-zero budget (``dec.compressed_len(K) == density*K``): the slide expansion
+incurs **no storage overhead** (§4.3).  ``pack_meta``/``unpack_meta`` bit-pack
+the 2-bit indices 16-per-int32 for HBM-bandwidth accounting and kernel use.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .patterns import SlideDecomposition
+from . import packer
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompressedSlided:
+    """Pytree carrying the compressed operand + static decomposition info."""
+
+    values: jax.Array   # [out, G*w*M] flattened compressed values
+    indices: jax.Array  # [out, G*w*M] int8 in-window positions
+    k: int              # original contraction length
+    z: int
+    l: int
+    m: int
+    n: int
+
+    def tree_flatten(self):
+        return (self.values, self.indices), (self.k, self.z, self.l, self.m, self.n)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def decomposition(self) -> SlideDecomposition:
+        from .patterns import Pattern, HardwarePattern
+
+        return SlideDecomposition(Pattern(self.z, self.l), HardwarePattern(self.m, self.n))
+
+    @property
+    def nbytes_values(self) -> int:
+        return int(np.prod(self.values.shape)) * self.values.dtype.itemsize
+
+    @property
+    def nbytes_meta_packed(self) -> int:
+        # 2-bit indices, 16 per int32 word
+        return (int(np.prod(self.indices.shape)) + 15) // 16 * 4
+
+
+def compress(w_slided: jax.Array, dec: SlideDecomposition) -> CompressedSlided:
+    """Pack a slided (hardware-compliant) tensor into values + metadata."""
+    wv = packer.slided_window_view(w_slided, dec)  # [..., G, w, n]
+    n, m = dec.hw.n, dec.hw.m
+    nz = wv != 0
+    # sort key: non-zeros first (in position order), zeros after
+    key = jnp.arange(n, dtype=jnp.int32) + n * (~nz).astype(jnp.int32)
+    order = jnp.argsort(key, axis=-1)[..., :m]  # first m slots
+    vals = jnp.take_along_axis(wv, order, axis=-1)
+    idx = order.astype(jnp.int8)
+    lead = wv.shape[:-3]
+    g, nw = wv.shape[-3], wv.shape[-2]
+    k = g * dec.source.l
+    return CompressedSlided(
+        values=vals.reshape(lead + (g * nw * m,)),
+        indices=idx.reshape(lead + (g * nw * m,)),
+        k=k, z=dec.source.z, l=dec.source.l, m=dec.hw.m, n=dec.hw.n,
+    )
+
+
+def _window_view(c: CompressedSlided):
+    dec = c.decomposition
+    g = c.k // c.l
+    nw, m = dec.num_windows, c.m
+    lead = c.values.shape[:-1]
+    return (c.values.reshape(lead + (g, nw, m)),
+            c.indices.reshape(lead + (g, nw, m)), dec, g, nw)
+
+
+def decompress_slided(c: CompressedSlided) -> jax.Array:
+    """Inverse of ``compress``: [..., gamma*K] slided dense windows."""
+    vals, idx, dec, g, nw = _window_view(c)
+    onehot = jax.nn.one_hot(idx.astype(jnp.int32), dec.hw.n, dtype=vals.dtype)
+    wv = jnp.einsum("...m,...mn->...n", vals, onehot)
+    lead = vals.shape[:-3]
+    return wv.reshape(lead + (g * nw * dec.hw.n,))
+
+
+def decompress_original(c: CompressedSlided) -> jax.Array:
+    """Scatter compressed values straight back to the original K layout.
+
+    == packer.unslide(decompress_slided(c)); exact because Algorithm 2 assigns
+    each source non-zero to exactly one window slot.  This is the weight path
+    of the TPU-optimized matmul (DESIGN.md §2).
+    """
+    vals, idx, dec, g, nw = _window_view(c)
+    # in-group source position: s*j + idx  (j = window index)
+    j = jnp.arange(nw, dtype=jnp.int32)[:, None]
+    pos = dec.hw.stride * j + idx.astype(jnp.int32)  # [..., g, w, m]
+    onehot = jax.nn.one_hot(pos, c.l, dtype=vals.dtype)
+    grp = jnp.einsum("...wm,...wml->...l", vals, onehot)  # [..., g, l]
+    lead = vals.shape[:-3]
+    return grp.reshape(lead + (g * c.l,))
+
+
+def pack_meta(indices: jax.Array) -> jax.Array:
+    """Bit-pack int8 2-bit indices into int32 words (16 per word)."""
+    flat = indices.reshape(indices.shape[:-1] + (-1,))
+    n = flat.shape[-1]
+    pad = (-n) % 16
+    if pad:
+        flat = jnp.pad(flat, [(0, 0)] * (flat.ndim - 1) + [(0, pad)])
+    grp = flat.reshape(flat.shape[:-1] + ((n + pad) // 16, 16)).astype(jnp.int32)
+    shifts = (2 * jnp.arange(16, dtype=jnp.int32))
+    return jnp.sum(grp << shifts, axis=-1, dtype=jnp.int32)
+
+
+def unpack_meta(words: jax.Array, count: int) -> jax.Array:
+    """Inverse of ``pack_meta``; returns int8 indices of length ``count``."""
+    shifts = (2 * jnp.arange(16, dtype=jnp.int32))
+    idx = (words[..., None] >> shifts) & 3
+    idx = idx.reshape(words.shape[:-1] + (-1,))[..., :count]
+    return idx.astype(jnp.int8)

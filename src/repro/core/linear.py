@@ -1,0 +1,129 @@
+"""SparseLinear — SlideSparse as a first-class linear-layer feature.
+
+One config object selects the execution path for every projection in the
+model stack (mirrors the paper's single vLLM flag, §4.3):
+
+  mode='dense'       plain dense matmul (baseline, cuBLASLt analogue)
+  mode='masked'      training-time STE magnitude masking (sparse-aware train)
+  mode='slided'      paper-faithful: Psi(x) @ Phi(W)^T over gamma*K
+  mode='compressed'  TPU-adapted: compressed storage, decompress-to-original
+                     matmul (Pallas kernel on TPU, jnp path elsewhere)
+
+Quantization (act_quant=None | 'int8') composes with every mode — for
+'slided' the activation quantization is the fused quant+slide kernel of
+paper Alg. 1; for 'compressed' it is plain per-token quant (the unslide
+happens on the weight side).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .patterns import Pattern, SlideDecomposition, TWO_FOUR
+from . import slide, packer, compressed as comp, quant, masks
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    pattern: tuple[int, int] | None = None  # (Z, L), e.g. (6, 8)
+    mode: str = "dense"  # dense | masked | slided | compressed
+    act_quant: str | None = None  # None | 'int8'
+    use_pallas: bool | None = None  # None -> auto (TPU backend only)
+
+    def decomposition(self) -> SlideDecomposition | None:
+        if self.pattern is None:
+            return None
+        return SlideDecomposition(Pattern(*self.pattern), TWO_FOUR)
+
+
+DENSE = SparsityConfig()
+
+
+def init(key: jax.Array, k_in: int, m_out: int, dtype=jnp.float32,
+         scale: float | None = None) -> dict[str, Any]:
+    """Dense master weights [out, in] (paper orientation W in R^{M x K})."""
+    scale = scale if scale is not None else k_in ** -0.5
+    w = jax.random.normal(key, (m_out, k_in), dtype=jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def prepare(params: dict[str, Any], cfg: SparsityConfig) -> dict[str, Any]:
+    """Offline phase (§4.1) + load-time compression (§4.3).
+
+    Prune master weights to the pattern, optionally quantize per-row (zeros
+    stay zero, so quantization commutes with the pattern and with Phi), run
+    the packer, and emit the serving-side operand.  'dense'/'masked' pass
+    through unchanged.
+    """
+    dec = cfg.decomposition()
+    if cfg.mode in ("dense", "masked") or dec is None:
+        return dict(params)
+    w = packer.prune_to_pattern(params["w"], dec.source)
+    out = {k: v for k, v in params.items() if k != "w"}
+    if cfg.act_quant == "int8":
+        qw = quant.quantize_weight_int8_rowwise(w)
+        w_store, out["s_w"] = qw.q, qw.scale
+    else:
+        w_store = w
+    ws = slide.phi(w_store, dec)
+    if cfg.mode == "slided":
+        out["w_slided"] = ws
+    elif cfg.mode == "compressed":
+        c = comp.compress(ws, dec)
+        out["values"], out["indices"] = c.values, c.indices
+        # K is recoverable from shapes (compressed_len == K * Z/L); storing
+        # it as a pytree leaf would get traced to an abstract value under jit
+    else:
+        raise ValueError(f"unknown mode {cfg.mode}")
+    return out
+
+
+def apply(params: dict[str, Any], x: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """y = x @ W^T under the configured execution path. x: [..., K]."""
+    from repro.kernels import ops as kops  # deferred: kernels import core
+
+    dec = cfg.decomposition()
+    out_dtype = x.dtype
+
+    if cfg.mode == "dense" or dec is None:
+        return _plain(x, params["w"], cfg, out_dtype)
+
+    if cfg.mode == "masked":
+        w = masks.ste_prune(params["w"], dec.source)
+        return _plain(x, w, cfg, out_dtype)
+
+    params = params if _prepared(params, cfg) else prepare(params, cfg)
+
+    if cfg.mode == "slided":
+        ws = params["w_slided"]
+        if cfg.act_quant == "int8":
+            return kops.slided_matmul_int8(
+                x, ws, params["s_w"], dec, out_dtype=out_dtype,
+                use_pallas=cfg.use_pallas)
+        return slide.slided_matmul(x, ws, dec).astype(out_dtype)
+
+    if cfg.mode == "compressed":
+        k = params["values"].shape[-1] * dec.source.l // dec.source.z
+        c = comp.CompressedSlided(
+            params["values"], params["indices"], k,
+            dec.source.z, dec.source.l, dec.hw.m, dec.hw.n)
+        return kops.compressed_matmul(
+            x, c, s_w=params.get("s_w"), act_quant=cfg.act_quant,
+            out_dtype=out_dtype, use_pallas=cfg.use_pallas)
+
+    raise ValueError(f"unknown mode {cfg.mode}")
+
+
+def _prepared(params: dict[str, Any], cfg: SparsityConfig) -> bool:
+    return ("w_slided" in params) if cfg.mode == "slided" else ("values" in params)
+
+
+def _plain(x, w, cfg: SparsityConfig, out_dtype):
+    if cfg.act_quant == "int8":
+        qx = quant.quantize_int8(x)
+        qw = quant.quantize_weight_int8_rowwise(w)
+        return quant.int8_matmul_dequant(qx, qw, out_dtype)
+    return jnp.einsum("...k,mk->...m", x, w.astype(x.dtype)).astype(out_dtype)

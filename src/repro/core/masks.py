@@ -1,0 +1,25 @@
+"""(2N-2):2N magnitude pruning masks + straight-through-estimator training.
+
+The paper evaluates post-hoc magnitude pruning (§7 Limitations); we also
+expose STE masked training ("sparse-aware training", Zhou et al. 2021) so the
+framework can *train* under the pattern from initialization (paper §8
+Future Directions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .patterns import Pattern
+from .packer import prune_to_pattern, magnitude_keep_mask
+
+
+def magnitude_mask(w: jax.Array, pattern: Pattern) -> jax.Array:
+    """Boolean keep-mask: top-Z by |w| in every L-group."""
+    return magnitude_keep_mask(w, pattern)
+
+
+def ste_prune(w: jax.Array, pattern: Pattern) -> jax.Array:
+    """Forward: magnitude-pruned weights. Backward: identity (dense grads)."""
+    pruned = prune_to_pattern(w, pattern)
+    return w + jax.lax.stop_gradient(pruned - w)

@@ -1,0 +1,153 @@
+"""Offline weight packer — paper Algorithm 2 (greedy residual allocation).
+
+Transforms a Z:L-sparse weight matrix into ``w`` concatenated M:N-compliant
+windows (default: (2N-2):2N -> 2:4).  The 2-position overlap between adjacent
+windows acts as the "spillover buffer" of §4.1: when a window reaches its
+capacity of M non-zeros, rejected elements are guaranteed to fall within the
+next window's coverage (Thm 1 / Thm 2 induction).
+
+Two implementations:
+
+* ``pack_slided``      — vectorized JAX, O(w) sequential window steps, each a
+                         cheap vector op over all rows/groups simultaneously.
+                         Used at model-load time ("initial compression").
+* ``pack_slided_ref``  — direct numpy transliteration of Algorithm 2, used as
+                         the oracle in tests.
+
+Both are deterministic (App B.1: fixed iteration order g, l, d).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .patterns import Pattern, HardwarePattern, SlideDecomposition, TWO_FOUR
+
+
+def _check_shapes(w, dec: SlideDecomposition):
+    k = w.shape[-1]
+    if k % dec.source.l:
+        raise ValueError(f"K={k} must be a multiple of L={dec.source.l}")
+    return k // dec.source.l
+
+
+def pack_slided(w: jax.Array, dec: SlideDecomposition) -> jax.Array:
+    """Vectorized Algorithm 2.
+
+    Args:
+      w:  [..., K] weight rows satisfying ``dec.source`` (Z:L) sparsity.
+      dec: the sliding-window decomposition.
+
+    Returns:
+      [..., gamma*K] slided weights; every aligned N-window holds at most M
+      non-zeros (hardware-compliant).
+    """
+    g = _check_shapes(w, dec)
+    l, n, m, s, nw = dec.source.l, dec.hw.n, dec.hw.m, dec.hw.stride, dec.num_windows
+    lead = w.shape[:-1]
+    wg = w.reshape(lead + (g, l))
+    used = jnp.zeros(wg.shape, dtype=bool)
+    nz = wg != 0
+
+    outs = []
+    for j in range(nw):  # N-1 sequential window steps; each fully vectorized
+        b = s * j
+        cand = (nz & ~used)[..., b : b + n]  # [..., g, n]
+        rank = jnp.cumsum(cand, axis=-1)
+        take = cand & (rank <= m)  # earliest-first, capacity M (cnt < M rule)
+        outs.append(jnp.where(take, wg[..., b : b + n], 0))
+        pad = [(0, 0)] * (len(lead) + 1) + [(b, l - b - n)]
+        used = used | jnp.pad(take, pad)
+    out = jnp.stack(outs, axis=-2)  # [..., g, w, n]
+    return out.reshape(lead + (g * nw * n,))
+
+
+def pack_slided_ref(w: np.ndarray, dec: SlideDecomposition) -> np.ndarray:
+    """Literal per-row Algorithm 2 (the paper's pseudocode), numpy oracle."""
+    l, n, m, s, nw = dec.source.l, dec.hw.n, dec.hw.m, dec.hw.stride, dec.num_windows
+    w2 = np.asarray(w).reshape(-1, w.shape[-1])
+    rows, k = w2.shape
+    g = k // l
+    out = np.zeros((rows, g * nw * n), dtype=w2.dtype)
+    for r in range(rows):
+        used = np.zeros(k, dtype=bool)
+        for gg in range(g):
+            for ll in range(nw):
+                b = l * gg + s * ll
+                cnt = 0
+                for d in range(n):
+                    if w2[r, b + d] != 0 and not used[b + d] and cnt < m:
+                        out[r, (nw * n) * gg + n * ll + d] = w2[r, b + d]
+                        used[b + d] = True
+                        cnt += 1
+    return out.reshape(w.shape[:-1] + (g * nw * n,))
+
+
+def slided_window_view(ws: jax.Array, dec: SlideDecomposition):
+    """Reshape a slided [..., gamma*K] tensor to windows [..., G, w, n]."""
+    n, nw = dec.hw.n, dec.num_windows
+    gk = ws.shape[-1]
+    g = gk // (nw * n)
+    return ws.reshape(ws.shape[:-1] + (g, nw, n))
+
+
+def unslide(ws: jax.Array, dec: SlideDecomposition) -> jax.Array:
+    """Inverse of ``pack_slided``: scatter window values back to original K.
+
+    Because Algorithm 2 assigns each source non-zero to exactly one window
+    slot (the ``used`` array), summing window contributions back into source
+    coordinates reconstructs the original weights exactly.  This is the basis
+    of the TPU-optimized "decompress to original layout" execution path
+    (DESIGN.md §2).
+    """
+    l, n, s, nw = dec.source.l, dec.hw.n, dec.hw.stride, dec.num_windows
+    wv = slided_window_view(ws, dec)  # [..., g, w, n]
+    g = wv.shape[-3]
+    lead = wv.shape[:-3]
+    out = jnp.zeros(lead + (g, l), wv.dtype)
+    for j in range(nw):
+        b = s * j
+        out = out.at[..., b : b + n].add(wv[..., j, :])
+    return out.reshape(lead + (g * l,))
+
+
+def is_hw_compliant(ws: np.ndarray | jax.Array, dec: SlideDecomposition) -> bool:
+    """Check every aligned N-window of a slided tensor has <= M non-zeros."""
+    n, m = dec.hw.n, dec.hw.m
+    arr = np.asarray(ws)
+    win = arr.reshape(-1, n)
+    return bool(((win != 0).sum(axis=-1) <= m).all())
+
+
+def magnitude_keep_mask(w: jax.Array, pattern: Pattern) -> jax.Array:
+    """Boolean top-Z-by-|w| keep mask per L-group.
+
+    Rank by pairwise comparison counting (O(L^2), L <= 16) instead of
+    argsort: deterministic position tie-breaking and a trivially
+    differentiable-context-safe graph (no gather in the VJP).
+    """
+    k = w.shape[-1]
+    if k % pattern.l:
+        raise ValueError(f"K={k} not a multiple of L={pattern.l}")
+    grp = jnp.abs(w.astype(jnp.float32)).reshape(
+        w.shape[:-1] + (k // pattern.l, pattern.l))
+    a, b = grp[..., :, None], grp[..., None, :]
+    pos = jnp.arange(pattern.l)
+    earlier = pos[None, :] < pos[:, None]
+    beats_me = (b > a) | ((b == a) & earlier)  # strict rank of each slot
+    rank = jnp.sum(beats_me, axis=-1)
+    mask = rank < pattern.z
+    return jax.lax.stop_gradient(mask.reshape(w.shape))
+
+
+def prune_to_pattern(w: jax.Array, pattern: Pattern) -> jax.Array:
+    """Magnitude-prune to Z:L: zero the (L-Z) smallest-|.| per L-group (§2/§7)."""
+    return jnp.where(magnitude_keep_mask(w, pattern), w, 0)
+
+
+def pattern_violations(w: np.ndarray | jax.Array, pattern: Pattern) -> int:
+    """Number of L-groups violating the Z:L budget (0 == compliant)."""
+    arr = np.asarray(w)
+    grp = arr.reshape(-1, pattern.l)
+    return int(((grp != 0).sum(axis=-1) > pattern.z).sum())

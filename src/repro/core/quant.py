@@ -1,0 +1,69 @@
+"""Per-token dynamic quantization (paper §3.3/§4.2 "synergy with quantization").
+
+LLM inference already pays a per-token quantization pass (INT8/FP8); the fused
+kernel piggybacks activation lifting on its store phase.  These are the pure
+jnp semantics shared by the models, the kernels' oracles, and tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_QMAX = 127.0
+FP8_E4M3_MAX = 448.0
+
+
+class Quantized(NamedTuple):
+    q: jax.Array       # int8 or float8_e4m3fn, same shape as input
+    scale: jax.Array   # [..., 1] per-token (per-row) scale, fp32
+
+
+def _absmax(x: jax.Array) -> jax.Array:
+    a = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return jnp.maximum(a, 1e-8)
+
+
+def quantize_int8(x: jax.Array) -> Quantized:
+    """Pass 1/2 of Alg. 1: per-row absmax scale, clamp, round-to-nearest.
+
+    Uses the paper's reciprocal form (Alg. 1 line 7: r <- Qmax/a) so the
+    Pallas kernel and this oracle share bit-identical arithmetic.
+    """
+    a = _absmax(x)
+    r = INT8_QMAX / a
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * r), -INT8_QMAX, INT8_QMAX)
+    return Quantized(q.astype(jnp.int8), a / INT8_QMAX)
+
+
+def quantize_fp8(x: jax.Array) -> Quantized:
+    a = _absmax(x)
+    scale = a / FP8_E4M3_MAX
+    q = (x.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+    return Quantized(q, scale)
+
+
+def dequantize(qx: Quantized, dtype=jnp.float32) -> jax.Array:
+    return (qx.q.astype(jnp.float32) * qx.scale).astype(dtype)
+
+
+def quantize_weight_int8_rowwise(w: jax.Array) -> Quantized:
+    """Per-output-channel symmetric int8 weight quantization (w8a8).
+
+    w: [out, K]; scale: [out, 1].  Zeros stay exactly zero, so quantization
+    commutes with the Z:L sparsity pattern and with Phi (pure permutation).
+    """
+    return quantize_int8(w)
+
+
+def int8_matmul_dequant(qx: Quantized, qw: Quantized,
+                        out_dtype=jnp.float32) -> jax.Array:
+    """y = (q_x @ q_w^T) * s_x * s_w — int32 accumulation, dequant epilogue."""
+    acc = jnp.einsum(
+        "...k,mk->...m",
+        qx.q.astype(jnp.int32),
+        qw.q.astype(jnp.int32),
+    )
+    scale = qx.scale * jnp.squeeze(qw.scale, -1)  # [...,1]*[m] -> [...,m]
+    return (acc.astype(jnp.float32) * scale).astype(out_dtype)

@@ -1,0 +1,91 @@
+"""The SlideSparse operator pair (Phi, Psi) — paper §3.
+
+``Phi`` (weight transformation) is the packer (packer.pack_slided): it maps a
+(2N-2):2N row of width K to N-1 concatenated 2:4-compliant windows of total
+width gamma*K.
+
+``Psi`` (activation lifting, §3.3) replicates input elements according to
+window coverage — *pure index remapping, no arithmetic* — such that
+
+    w^T x  ==  Phi(w)^T Psi(x)            (paper Eq. 3)
+
+This module provides the lifting gather, its index map (shared with the
+Pallas fused kernel), and the two mathematically-equivalent matmul semantics:
+
+* ``slided_matmul``      — paper-faithful GPU semantics: lifted activations
+                           against slided weights (gamma*K contraction).
+* ``unslid_matmul``      — TPU-adapted semantics: weights scattered back to
+                           the original layout (K contraction, 1.0x FLOPs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .patterns import Pattern, SlideDecomposition, TWO_FOUR
+from . import packer
+
+
+@functools.lru_cache(maxsize=None)
+def lift_index_map(k: int, z: int, l: int, m: int, n: int) -> np.ndarray:
+    """Gather indices idx[gamma*K] with Psi(x) = x[..., idx].
+
+    Output position (group g, window j, offset d) reads source position
+    L*g + s*j + d — the generalized form of Alg. 1 line 11 (b = 2Ng + 2l).
+    """
+    from .patterns import HardwarePattern
+
+    dec = SlideDecomposition(Pattern(z, l), HardwarePattern(m, n))
+    g = k // l
+    block = np.asarray(dec.lift_indices_block(), dtype=np.int32)
+    return (np.arange(g, dtype=np.int32)[:, None] * l + block[None, :]).reshape(-1)
+
+
+def lift(x: jax.Array, dec: SlideDecomposition) -> jax.Array:
+    """Activation lifting Psi: [..., K] -> [..., gamma*K] (paper Eq. 4)."""
+    k = x.shape[-1]
+    idx = lift_index_map(k, dec.source.z, dec.source.l, dec.hw.m, dec.hw.n)
+    return jnp.take(x, jnp.asarray(idx), axis=-1)
+
+
+def phi(w: jax.Array, dec: SlideDecomposition) -> jax.Array:
+    """Weight transformation Phi (Thm 1 constructive proof / Alg. 2)."""
+    return packer.pack_slided(w, dec)
+
+
+def slided_matmul(x: jax.Array, w_slided: jax.Array, dec: SlideDecomposition,
+                  precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """Paper-faithful execution: y = Psi(x) @ Phi(W)^T.
+
+    x: [..., K]; w_slided: [M, gamma*K] (from ``phi``); returns [..., M].
+    On GPU Sparse Tensor Cores this contraction runs at alpha=2x on the
+    compressed form; on a dense MXU it costs gamma x dense FLOPs — kept as
+    the validation/baseline semantics (see DESIGN.md §2).
+    """
+    xl = lift(x, dec)
+    return jnp.einsum("...k,mk->...m", xl, w_slided, precision=precision)
+
+
+def unslid_matmul(x: jax.Array, w_slided: jax.Array, dec: SlideDecomposition,
+                  precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """TPU-adapted execution: scatter windows back to original K, dense matmul.
+
+    Mathematically identical output (the packer is lossless), 1.0x dense
+    FLOPs, and the weight *storage/traffic* stays compressed upstream.
+    """
+    w_rec = packer.unslide(w_slided, dec)
+    return jnp.einsum("...k,mk->...m", x, w_rec, precision=precision)
+
+
+def dense_matmul(x: jax.Array, w: jax.Array,
+                 precision=jax.lax.Precision.HIGHEST) -> jax.Array:
+    """Baseline y = x @ W^T with W [M, K]."""
+    return jnp.einsum("...k,mk->...m", x, w, precision=precision)
+
+
+def decomposition_for(pattern: Pattern) -> SlideDecomposition:
+    """Default mapping of a source pattern onto 2:4 hardware windows."""
+    return SlideDecomposition(pattern, TWO_FOUR)

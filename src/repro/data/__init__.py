@@ -1,0 +1,2 @@
+"""Data substrate: deterministic synthetic pipeline + background prefetch."""
+from .pipeline import SyntheticLM, Prefetcher  # noqa: F401

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for SlideSparse's two hot spots (paper §4):
+
+* fused_quant_slide — Alg. 1: per-token quantization fused with activation
+  lifting (one HBM read, one HBM write).
+* slide_matmul — the sparse-GEMM analogue: compressed-weight matmul with
+  in-VMEM 2:4 decompression ("unslide fusion") feeding the dense MXU.
+* quant_matmul — dense w8a8 baseline (cuBLASLt-INT8 analogue) + the shared
+  dequant epilogue.
+
+ops.py holds the jit'd public wrappers (with jnp fallbacks from ref.py).
+"""
+from . import ops, ref  # noqa: F401
+from .fused_quant_slide import fused_quant_slide_pallas, lift_pairs  # noqa: F401
+from .slide_matmul import compressed_matmul_pallas, decompress_tile  # noqa: F401
+from .quant_matmul import quant_matmul_pallas  # noqa: F401

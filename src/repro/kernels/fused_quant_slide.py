@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused per-token quantization + activation lifting.
+
+Paper Algorithm 1, adapted to TPU (DESIGN.md §2).  One HBM read of X and one
+HBM write of the lifted-quantized Y — vs. four memory ops for the naive
+quantize-then-slide pipeline (§4.2).
+
+TPU-native lifting (no gather): with the 2:4 hardware window (size 4,
+stride 2), view each 2N-group as N pairs; window j covers pairs (j, j+1):
+
+    lifted[g, j, 0:2] = pairs[g, j]
+    lifted[g, j, 2:4] = pairs[g, j+1]
+
+i.e. two static shifted slices + a concat — pure relayout work for the VPU,
+realizing Psi (= paper's b = 2Ng + 2l index walk) with zero index arithmetic
+in the inner loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.patterns import SlideDecomposition
+
+_QMAX = 127.0
+_FP8_MAX = 448.0  # e4m3
+
+
+def lift_pairs(q: jax.Array, n_fam: int) -> jax.Array:
+    """Static-slice realization of Psi for (2N-2):2N -> 2:4. q: [R, K]."""
+    r, k = q.shape
+    g = k // (2 * n_fam)
+    pairs = q.reshape(r, g, n_fam, 2)
+    lo = pairs[:, :, : n_fam - 1, :]  # window j, first covered pair
+    hi = pairs[:, :, 1:, :]           # window j, second covered pair
+    lifted = jnp.concatenate([lo, hi], axis=-1)  # [R, G, N-1, 4]
+    return lifted.reshape(r, g * (n_fam - 1) * 4)
+
+
+def _kernel(x_ref, q_ref, s_ref, *, n_fam: int, fp8: bool):
+    x = x_ref[...].astype(jnp.float32)
+    a = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
+    qmax = _FP8_MAX if fp8 else _QMAX
+    r = qmax / a                                        # pass 1 (Alg.1 l.6-8)
+    scale = a / qmax
+    if fp8:
+        q8 = (x * r).astype(jnp.float8_e4m3fn)          # saturating cast
+    else:
+        q8 = jnp.clip(jnp.round(x * r), -qmax, qmax
+                      ).astype(jnp.int8)                # pass 2 (l.9-19)
+    q_ref[...] = lift_pairs(q8, n_fam)                  # Psi on the store path
+    s_ref[...] = scale
+
+
+def _row_block(k: int, itemsize: int, vmem_budget: int = 4 * 1024 * 1024) -> int:
+    # in + lifted out + fp32 working copy per row
+    per_row = k * (itemsize + 4) + (2 * k) * 1
+    r = max(8, min(512, vmem_budget // max(per_row, 1)))
+    return int(r) // 8 * 8
+
+
+@functools.partial(jax.jit, static_argnames=("n_fam", "interpret",
+                                              "block_rows", "fp8"))
+def fused_quant_slide_pallas(x: jax.Array, *, n_fam: int,
+                             interpret: bool = False,
+                             block_rows: int | None = None,
+                             fp8: bool = False):
+    """x: [rows, K] float -> (q_lifted int8|e4m3 [rows, gamma*K],
+    scale [rows, 1])."""
+    rows, k = x.shape
+    if k % (2 * n_fam):
+        raise ValueError(f"K={k} must be a multiple of 2N={2 * n_fam}")
+    gk = (k // (2 * n_fam)) * (n_fam - 1) * 4
+    br = block_rows or _row_block(k, x.dtype.itemsize)
+    pad = (-rows) % br
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    grid = (xp.shape[0] // br,)
+    out_dtype = jnp.float8_e4m3fn if fp8 else jnp.int8
+    q, s = pl.pallas_call(
+        functools.partial(_kernel, n_fam=n_fam, fp8=fp8),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, gk), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0], gk), out_dtype),
+            jax.ShapeDtypeStruct((xp.shape[0], 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp)
+    if pad:
+        q, s = q[:rows], s[:rows]
+    return q, s
+
+
+def fused_quant_slide(x: jax.Array, dec: SlideDecomposition,
+                      interpret: bool = False, block_rows: int | None = None,
+                      fp8: bool = False):
+    n = dec.source.family_n
+    if n is None or dec.hw.m != 2 or dec.hw.n != 4:
+        raise ValueError("Pallas kernel supports the (2N-2):2N -> 2:4 family")
+    return fused_quant_slide_pallas(
+        x, n_fam=n, interpret=interpret, block_rows=block_rows, fp8=fp8)

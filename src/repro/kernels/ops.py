@@ -1,0 +1,102 @@
+"""Public jit'd wrappers for the Pallas kernels, with jnp fallbacks.
+
+Dispatch rule (DESIGN.md §6): Pallas lowers only on real TPU backends; the
+multi-pod dry-run and CPU tests use the mathematically identical jnp paths
+from ref.py.  ``use_pallas=None`` auto-selects; tests force
+``use_pallas=True, interpret=True`` to execute kernel bodies on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.compressed import CompressedSlided
+from repro.core.patterns import SlideDecomposition
+
+from . import ref
+from . import fused_quant_slide as _fqs
+from . import slide_matmul as _smm
+from . import quant_matmul as _qmm
+
+
+def _auto(use_pallas: bool | None) -> bool:
+    if use_pallas is None:
+        return jax.default_backend() == "tpu"
+    return use_pallas
+
+
+def _flatten_rows(x: jax.Array):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def fused_quant_slide(x: jax.Array, dec: SlideDecomposition,
+                      use_pallas: bool | None = None,
+                      interpret: bool = False):
+    """Per-token int8 quant + lifting. x: [..., K] -> ([..., gamma*K], [..., 1])."""
+    x2, lead = _flatten_rows(x)
+    if _auto(use_pallas):
+        q, s = _fqs.fused_quant_slide(x2, dec, interpret=interpret)
+    else:
+        q, s = ref.fused_quant_slide(x2, dec)
+    return q.reshape(lead + (q.shape[-1],)), s.reshape(lead + (1,))
+
+
+def quant_matmul(q_x, s_x, q_w, s_w, out_dtype=jnp.float32,
+                 use_pallas: bool | None = None, interpret: bool = False):
+    """Dense w8a8 GEMM + dequant. q_x: [..., K] int8."""
+    x2, lead = _flatten_rows(q_x)
+    s2 = s_x.reshape(-1, 1)
+    if _auto(use_pallas):
+        y = _qmm.quant_matmul_pallas(x2, q_w, s2, s_w, out_dtype=out_dtype,
+                                     interpret=interpret)
+    else:
+        y = ref.quant_matmul(x2, s2, q_w, s_w, out_dtype)
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def compressed_matmul(x: jax.Array, c: CompressedSlided,
+                      s_w: jax.Array | None = None,
+                      act_quant: str | None = None,
+                      out_dtype=None, use_pallas: bool | None = None,
+                      interpret: bool = False):
+    """y = x @ decompress(c)^T — the TPU-adapted SlideSparse linear.
+
+    act_quant='int8' requires int8 compressed values + s_w row scales and
+    performs the fused per-token quantization on x.
+    """
+    out_dtype = out_dtype or x.dtype
+    x2, lead = _flatten_rows(x)
+    if act_quant == "int8":
+        assert c.values.dtype == jnp.int8 and s_w is not None
+        if _auto(use_pallas):
+            qx = quant.quantize_int8(x2)
+            y = _smm.compressed_matmul(qx.q, c, s_x=qx.scale, s_w=s_w,
+                                       out_dtype=out_dtype, interpret=interpret)
+        else:
+            y = ref.compressed_matmul_int8(x2, c, s_w, out_dtype)
+    else:
+        if _auto(use_pallas):
+            y = _smm.compressed_matmul(x2.astype(c.values.dtype), c,
+                                       out_dtype=out_dtype, interpret=interpret)
+        else:
+            y = ref.compressed_matmul_fp(x2, c, out_dtype)
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def slided_matmul_int8(x: jax.Array, w_slided_q: jax.Array, s_w: jax.Array,
+                       dec: SlideDecomposition, out_dtype=None,
+                       use_pallas: bool | None = None,
+                       interpret: bool = False):
+    """Paper-faithful GPU-semantics path: fused quant+slide, then the
+    gamma*K-contraction GEMM against Phi(W) (int8)."""
+    out_dtype = out_dtype or x.dtype
+    x2, lead = _flatten_rows(x)
+    if _auto(use_pallas):
+        q, s = _fqs.fused_quant_slide(x2, dec, interpret=interpret)
+        y = _qmm.quant_matmul_pallas(q, w_slided_q, s, s_w,
+                                     out_dtype=out_dtype, interpret=interpret)
+    else:
+        y = ref.slided_matmul_int8(x2, w_slided_q, s_w, dec, out_dtype)
+    return y.reshape(lead + (y.shape[-1],))

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: dense w8a8 GEMM with per-token dequant epilogue.
+
+The dense-quantized baseline (cuBLASLt INT8 analogue) that SlideSparse is
+compared against in the paper's tables; also the epilogue pattern shared by
+slide_matmul.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        o_ref[...] = (acc * sx_ref[...] * sw_ref[...].reshape(1, -1)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret", "bm",
+                                             "br", "bk"))
+def quant_matmul_pallas(q_x, q_w, s_x, s_w, *, out_dtype=jnp.float32,
+                        interpret: bool = False, bm: int = 256,
+                        br: int = 256, bk: int = 512):
+    """y[R, M] = (q_x[R, K] @ q_w[M, K]^T) * s_x * s_w  (int32 accumulate)."""
+    rows, k = q_x.shape
+    m = q_w.shape[0]
+    br = min(br, max(8, 1 << (rows - 1).bit_length()))
+    pad_r, pad_k, pad_m = (-rows) % br, (-k) % bk, (-m) % bm
+    if pad_r or pad_k:
+        q_x = jnp.pad(q_x, ((0, pad_r), (0, pad_k)))
+    if pad_r:
+        s_x = jnp.pad(s_x, ((0, pad_r), (0, 0)), constant_values=1.0)
+    if pad_m or pad_k:
+        q_w = jnp.pad(q_w, ((0, pad_m), (0, pad_k)))
+    if pad_m:
+        s_w = jnp.pad(s_w, ((0, pad_m), (0, 0)), constant_values=1.0)
+    rp, kp, mp = q_x.shape[0], q_x.shape[1], q_w.shape[0]
+    k_steps = kp // bk
+    grid = (rp // br, mp // bm, k_steps)
+    y = pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bk), lambda r, m_, k_: (r, k_)),
+            pl.BlockSpec((bm, bk), lambda r, m_, k_: (m_, k_)),
+            pl.BlockSpec((br, 1), lambda r, m_, k_: (r, 0)),
+            pl.BlockSpec((bm, 1), lambda r, m_, k_: (m_, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bm), lambda r, m_, k_: (r, m_)),
+        out_shape=jax.ShapeDtypeStruct((rp, mp), out_dtype),
+        scratch_shapes=[pltpu.VMEM((br, bm), jnp.int32)],
+        interpret=interpret,
+    )(q_x, q_w, s_x, s_w)
+    return y[:rows, :m]

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; kernels must match them (tests sweep shapes and
+dtypes with ``interpret=True`` and assert allclose).  They are also the
+execution path on non-TPU backends and inside the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant, slide, compressed as comp
+from repro.core.patterns import SlideDecomposition
+
+
+def fused_quant_slide(x: jax.Array, dec: SlideDecomposition,
+                      fp8: bool = False):
+    """Paper Alg. 1: per-row dynamic quantization + activation lifting.
+
+    x: [rows, K] -> (q_lifted int8|e4m3 [rows, gamma*K], scale fp32
+    [rows, 1]).  Quantize-then-lift == lift-then-quantize (lifting only
+    duplicates values, so the per-row absmax is unchanged).
+    """
+    qx = quant.quantize_fp8(x) if fp8 else quant.quantize_int8(x)
+    return slide.lift(qx.q, dec), qx.scale
+
+
+def quant_matmul(q_x: jax.Array, s_x: jax.Array, q_w: jax.Array,
+                 s_w: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """w8a8 GEMM + dequant epilogue: (q_x @ q_w^T) * s_x * s_w.
+
+    q_x: [rows, K] int8; s_x: [rows, 1] fp32; q_w: [out, K] int8;
+    s_w: [out, 1] fp32.
+    """
+    acc = jax.lax.dot_general(
+        q_x, q_w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * s_x * s_w[:, 0][None, :]).astype(out_dtype)
+
+
+def compressed_matmul_fp(x: jax.Array, c: comp.CompressedSlided,
+                         out_dtype=None) -> jax.Array:
+    """Float path: decompress-to-original-layout weights, dense matmul.
+
+    x: [rows, K]; returns [rows, out].  The TPU-adapted execution of
+    DESIGN.md §2 — 1.0x dense FLOPs, compressed weight storage.
+    """
+    out_dtype = out_dtype or x.dtype
+    w_rec = comp.decompress_original(c)  # [out, K]
+    acc = jax.lax.dot_general(
+        x.astype(jnp.float32), w_rec.astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)
+
+
+def compressed_matmul_int8(x: jax.Array, c: comp.CompressedSlided,
+                           s_w: jax.Array, out_dtype=None) -> jax.Array:
+    """w8a8 path: per-token int8 quant + int8 decompress-matmul + dequant.
+
+    c.values must be int8 (weights quantized per-output-row before
+    compression); s_w: [out, 1] fp32 row scales.
+    """
+    out_dtype = out_dtype or x.dtype
+    qx = quant.quantize_int8(x)
+    w_rec = comp.decompress_original(c)  # int8 [out, K]
+    acc = jax.lax.dot_general(
+        qx.q, w_rec, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * qx.scale * s_w[:, 0][None, :]
+    return y.astype(out_dtype)
+
+
+def slided_matmul_int8(x: jax.Array, w_slided_q: jax.Array, s_w: jax.Array,
+                       dec: SlideDecomposition, out_dtype=None) -> jax.Array:
+    """Paper-faithful GPU semantics end-to-end in int8:
+
+    y = (Psi(q_x) @ Phi(q_W)^T) * s_x * s_w   over the gamma*K contraction.
+    """
+    out_dtype = out_dtype or x.dtype
+    q_lift, s_x = fused_quant_slide(x, dec)
+    acc = jax.lax.dot_general(
+        q_lift, w_slided_q, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * s_x * s_w[:, 0][None, :]
+    return y.astype(out_dtype)

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: compressed-weight matmul with in-VMEM decompression.
+
+The TPU adaptation of the paper's sparse GEMM (DESIGN.md §2): weights live in
+HBM in the slided-compressed 2:4 format (values + 2-bit positions = exactly
+the (2N-2)/2N non-zero budget), stream HBM->VMEM at *density* bytes, are
+decompressed to dense tiles by the VPU, and the MXU consumes dense tiles at
+1.0x dense FLOPs in the **original** K layout (the slide is undone during
+decompression — "unslide fusion", our beyond-paper optimization).
+
+TPU-native decompression (no scatter): per window, compare the two 2-bit
+positions against delta=0..3 (select), then add the two pair-halves into the
+group's pair grid with static shifted slices — the mirror image of the
+lifting trick in fused_quant_slide.py.  The packer guarantees each source
+position receives at most one non-zero, so the adds never collide.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compressed import CompressedSlided
+
+
+def decompress_tile(vals: jax.Array, idx: jax.Array, n_fam: int) -> jax.Array:
+    """[BM, BKc] compressed (values, int8 positions) -> [BM, BK] dense tile
+    in the ORIGINAL weight layout (slide undone).  BKc = BK*(N-1)/N... for
+    the (2N-2):2N family: BKc = BK * (2N-2)/(2N)."""
+    bm, bkc = vals.shape
+    w = n_fam - 1
+    g = bkc // (w * 2)
+    v = vals.reshape(bm, g, w, 2)
+    p = idx.reshape(bm, g, w, 2)
+    # select: contribution of slot t to in-window offset d (d = 0..3)
+    delta = jnp.arange(4, dtype=jnp.int8).reshape(1, 1, 1, 1, 4)
+    hit = (p[..., None] == delta)
+    contrib = jnp.sum(jnp.where(hit, v[..., None], 0), axis=3)  # [bm,g,w,4]
+    # window j covers pairs (j, j+1): low half -> pair j, high half -> pair j+1
+    lo, hi = contrib[..., 0:2], contrib[..., 2:4]
+    zpair = jnp.zeros((bm, g, 1, 2), vals.dtype)
+    pairs = (jnp.concatenate([lo, zpair], axis=2)
+             + jnp.concatenate([zpair, hi], axis=2))  # [bm, g, N, 2]
+    return pairs.reshape(bm, g * 2 * n_fam)
+
+
+def _mm_kernel(x_ref, v_ref, i_ref, sx_ref, sw_ref, o_ref, acc_ref,
+               *, n_fam: int, k_steps: int, acc_dtype, quantized: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_dense = decompress_tile(v_ref[...], i_ref[...], n_fam)  # [BM, BK]
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_dense, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        if quantized:
+            acc = acc * sx_ref[...] * sw_ref[...].reshape(1, -1)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def choose_bk(l: int, target: int = 512) -> int:
+    base = l * 128 // math.gcd(l, 128)  # lcm(L, 128): lane- and group-aligned
+    return base * max(1, round(target / base))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_fam", "quantized", "interpret", "bm", "br", "bk",
+                     "out_dtype"))
+def compressed_matmul_pallas(x, values, indices, s_x, s_w, *, n_fam: int,
+                             quantized: bool, out_dtype=jnp.float32,
+                             interpret: bool = False,
+                             bm: int = 256, br: int = 256, bk: int | None = None):
+    """y[R, M] = x[R, K] @ decompress(values, indices)[M, K]^T  (+ dequant).
+
+    quantized=True: x/values int8, int32 accumulate, epilogue * s_x * s_w.
+    quantized=False: float path, fp32 accumulate (s_x/s_w ignored; pass ones).
+    """
+    rows, k = x.shape
+    m = values.shape[0]
+    l = 2 * n_fam
+    density_num, density_den = 2 * n_fam - 2, 2 * n_fam
+    bk = bk or choose_bk(l)
+    bkc = bk * density_num // density_den
+
+    br = min(br, max(8, 1 << (rows - 1).bit_length()))  # don't over-tile tiny R
+    pad_r, pad_k, pad_m = (-rows) % br, (-k) % bk, (-m) % bm
+    if pad_r or pad_k:
+        x = jnp.pad(x, ((0, pad_r), (0, pad_k)))
+    if pad_r:
+        s_x = jnp.pad(s_x, ((0, pad_r), (0, 0)), constant_values=1.0)
+    kc = values.shape[1]
+    pad_kc = (k + pad_k) * density_num // density_den - kc
+    if pad_kc or pad_m:
+        values = jnp.pad(values, ((0, pad_m), (0, pad_kc)))
+        indices = jnp.pad(indices, ((0, pad_m), (0, pad_kc)))
+    if pad_m:
+        s_w = jnp.pad(s_w, ((0, pad_m), (0, 0)), constant_values=1.0)
+
+    rp, kp, mp = x.shape[0], x.shape[1], values.shape[0]
+    k_steps = kp // bk
+    grid = (rp // br, mp // bm, k_steps)
+    acc_dtype = jnp.int32 if quantized else jnp.float32
+
+    y = pl.pallas_call(
+        functools.partial(_mm_kernel, n_fam=n_fam, k_steps=k_steps,
+                          acc_dtype=acc_dtype, quantized=quantized),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bk), lambda r, m_, k_: (r, k_)),
+            pl.BlockSpec((bm, bkc), lambda r, m_, k_: (m_, k_)),
+            pl.BlockSpec((bm, bkc), lambda r, m_, k_: (m_, k_)),
+            pl.BlockSpec((br, 1), lambda r, m_, k_: (r, 0)),
+            pl.BlockSpec((bm, 1), lambda r, m_, k_: (m_, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bm), lambda r, m_, k_: (r, m_)),
+        out_shape=jax.ShapeDtypeStruct((rp, mp), out_dtype),
+        scratch_shapes=[pltpu.VMEM((br, bm), acc_dtype)],
+        interpret=interpret,
+    )(x, values, indices, s_x, s_w)
+    return y[:rows, :m]
+
+
+def compressed_matmul(x: jax.Array, c: CompressedSlided,
+                      s_x: jax.Array | None = None,
+                      s_w: jax.Array | None = None,
+                      out_dtype=jnp.float32, interpret: bool = False,
+                      **tiles):
+    n = c.decomposition.source.family_n
+    if n is None or c.m != 2 or c.n != 4:
+        raise ValueError("Pallas kernel supports the (2N-2):2N -> 2:4 family")
+    quantized = c.values.dtype == jnp.int8
+    rows = x.shape[0]
+    mout = c.values.shape[0]
+    if s_x is None:
+        s_x = jnp.ones((rows, 1), jnp.float32)
+    if s_w is None:
+        s_w = jnp.ones((mout, 1), jnp.float32)
+    return compressed_matmul_pallas(
+        x, c.values, c.indices, s_x, s_w, n_fam=n, quantized=quantized,
+        out_dtype=out_dtype, interpret=interpret, **tiles)

@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: do NOT import dryrun here — it sets XLA_FLAGS at import time and must
+only ever be imported as the main module of a fresh process.
+"""
+from .mesh import make_production_mesh, make_host_mesh  # noqa: F401

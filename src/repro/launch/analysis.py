@@ -1,0 +1,313 @@
+"""Roofline-term derivation from compiled dry-run artifacts (brief §Roofline).
+
+    compute   = HLO_FLOPs      / (chips * peak_FLOP/s)
+    memory    = HLO_bytes      / (chips * HBM_bw)
+    collective= collective_B   / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the compiled HLO text and sum the
+wire bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, using ring-algorithm wire-cost multipliers over the
+replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e hardware constants (per the brief)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# computation definitions start at column 0; ops inside are indented
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def _split_computations(text: str) -> tuple[dict[str, str], str | None]:
+    """Map computation name -> body text; also return the ENTRY name.
+
+    Definitions start at column 0 (ops are indented), so anchoring on the
+    line start is robust even when a header's parameter list spans lines.
+    """
+    comps: dict[str, str] = {}
+    entry = None
+    starts = []
+    for m in _COMP_HDR_RE.finditer(text):
+        if m.start() > 0 and text[m.start() - 1] != "\n":
+            continue
+        starts.append((m.start(), m.group(2)))
+        if m.group(1):
+            entry = m.group(2)
+    starts.append((len(text), None))
+    for (s, name), (e, _) in zip(starts[:-1], starts[1:]):
+        comps[name] = text[s:e]
+    return comps, entry
+
+
+def _local_collectives(body: str, total_devices: int) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(body):
+        shape_str, kind = m.group(1), m.group(2)
+        line = body[m.start():body.find("\n", m.start())]
+        size = _shape_bytes(shape_str)
+        g = max(_group_size(line, total_devices), 1)
+        if kind == "all-gather":
+            wire = size * (g - 1) / g          # result is the gathered tensor
+        elif kind == "all-reduce":
+            wire = 2 * size * (g - 1) / g      # reduce-scatter + all-gather
+        elif kind == "reduce-scatter":
+            wire = size * (g - 1)              # operand = result * g
+        elif kind == "all-to-all":
+            wire = size * (g - 1) / g
+        else:  # collective-permute
+            wire = size
+        out[kind] = out.get(kind, 0.0) + wire
+    return out
+
+
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_WHILE_CALL_RE = re.compile(
+    r"while\(%?[\w\.\-]+\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_EDGE_RES = [
+    re.compile(r"to_apply=%?([\w\.\-]+)"),
+    re.compile(r"calls=%?([\w\.\-]+)"),
+    re.compile(r"(?:true|false)_computation=%?([\w\.\-]+)"),
+    re.compile(r"branch_computations=\{([^}]*)\}"),
+]
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> dict[str, float]:
+    """Per-device wire bytes by collective kind.
+
+    While-loop aware: XLA annotates ``known_trip_count`` on while ops (scans
+    lower to whiles), so collectives inside scanned layer stacks are
+    multiplied by their trip counts — HloCostAnalysis-style single-visit
+    counting would under-report per-layer FSDP all-gathers by ~num_layers.
+    """
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return _local_collectives(hlo_text, total_devices)
+
+    memo: dict[str, dict[str, float]] = {}
+
+    def total(name: str, stack: frozenset) -> dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {}
+        body = comps[name]
+        acc = dict(_local_collectives(body, total_devices))
+        for line in body.splitlines():
+            wm = _WHILE_CALL_RE.search(line)
+            if wm:
+                trip_m = _TRIP_RE.search(line)
+                trips = int(trip_m.group(1)) if trip_m else 1
+                sub = total(wm.group(2), stack | {name})
+                for k, v in sub.items():
+                    acc[k] = acc.get(k, 0.0) + trips * v
+                continue
+            for edge_re in _EDGE_RES:
+                em = edge_re.search(line)
+                if not em:
+                    continue
+                targets = [t.strip().lstrip("%")
+                           for t in em.group(1).split(",") if t.strip()]
+                for tgt in targets:
+                    sub = total(tgt, stack | {name})
+                    for k, v in sub.items():
+                        acc[k] = acc.get(k, 0.0) + v
+                break
+        memo[name] = acc
+        return acc
+
+    return total(entry, frozenset())
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # total global FLOPs (jaxpr-exact when avail.)
+    hbm_bytes: float           # total global traffic estimate
+    coll_bytes: float          # per-device collective wire bytes
+    coll_breakdown: dict
+    chips: int
+    model_flops: float = 0.0   # analytic 6*N*D (or serving 2*N*D)
+    model_bytes: float = 0.0   # analytic useful HBM traffic (global)
+    raw_cost_analysis: dict | None = None  # trip-count-blind XLA numbers
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW  # already per-device
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful work vs the machine limit: the larger of the useful
+        compute time and the useful memory-stream time, over the modeled
+        step time — an MFU analogue that stays meaningful for memory-bound
+        (decode) cells where useful FLOPs are tiny by construction."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        useful = max(self.model_flops / (self.chips * PEAK_FLOPS),
+                     self.model_bytes / (self.chips * HBM_BW))
+        return useful / t
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown, "chips": self.chips,
+            "model_flops": self.model_flops, "model_bytes": self.model_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "raw_cost_analysis": self.raw_cost_analysis,
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: float = 0.0,
+                  jaxpr_cost: dict | None = None,
+                  model_bytes: float = 0.0) -> Roofline:
+    """jaxpr_cost (exact, trip-count-aware) takes precedence over the
+    trip-count-blind compiled.cost_analysis() values, which are recorded
+    in raw_cost_analysis for transparency."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    raw = {"flops": float(cost.get("flops", 0.0)),
+           "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+    if jaxpr_cost is not None:
+        # memory term uses the fusion-aware dot-traffic proxy; the unfused
+        # upper bound is carried in raw for transparency
+        flops, hbm = jaxpr_cost["flops"], jaxpr_cost["bytes_dots"]
+        raw["bytes_unfused_bound"] = jaxpr_cost["bytes"]
+    else:
+        flops, hbm = raw["flops"], raw["bytes_accessed"]
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll = collective_bytes(text, chips)
+    return Roofline(flops=flops, hbm_bytes=hbm,
+                    coll_bytes=sum(coll.values()), coll_breakdown=coll,
+                    chips=chips, model_flops=model_flops,
+                    model_bytes=model_bytes, raw_cost_analysis=raw)
+
+
+def model_bytes_estimate(cfg, shape) -> float:
+    """Analytic *useful* HBM traffic per step (global), for the memory-side
+    roofline fraction: parameters streamed per pass (+KV cache for decode).
+
+    train:   3 passes over params (fwd + recompute + bwd) in bf16
+             + optimizer state r/w (int8 m,v + scales ~ 2.1 B/param)
+    prefill: 1 pass over params + cache write
+    decode:  1 pass over (active) params + full cache read
+    """
+    params = _active_params(cfg)
+    full_params = params
+    if cfg.uses_moe:
+        # memory streams *resident* experts, not just routed ones
+        d, f = cfg.d_model, cfg.d_ff
+        per_moe = 3 * d * f * (cfg.moe_num_experts - cfg.moe_top_k)
+        full_params = params + per_moe * sum(cfg.moe_pattern) * cfg.num_units
+    cache = 0.0
+    if shape.kind in ("decode",):
+        kv = cfg.num_kv_heads * cfg.resolved_head_dim
+        n_attn = cfg.num_units * sum(k != "ssm" for k in cfg.unit_pattern)
+        cache = 2 * shape.global_batch * shape.seq_len * kv * 2 * n_attn
+    if shape.kind == "train":
+        return full_params * 2 * 3 + full_params * 4.1
+    if shape.kind == "prefill":
+        return full_params * 2 + shape.global_batch * shape.seq_len * 1000
+    return full_params * 2 + cache
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS per the brief: 6*N*D for training (N = params used in
+    matmuls, D = tokens); 2*N_active*D for a forward/serving step; MoE uses
+    active params only."""
+    active = _active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active * tokens
+
+
+def _active_params(cfg) -> float:
+    """Matmul-visible parameters with MoE counted at top_k/E utilization."""
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim
+    qdim, kvdim = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    total = 0.0
+    for kind, is_moe in zip(cfg.unit_pattern, cfg.moe_pattern):
+        if kind == "ssm":
+            di = cfg.ssm_expand * d
+            total += 2 * d * di + 2 * d * cfg.ssm_state \
+                + d * (di // cfg.ssm_head_dim) + di * d
+        else:
+            total += d * qdim + 2 * d * kvdim + qdim * d
+        if f:
+            ffn = 3 * d * f
+            total += ffn * cfg.moe_top_k if is_moe else ffn
+    total *= cfg.num_units
+    total += cfg.vocab_size * d  # LM head matmul (embed lookup is not a GEMM)
+    if cfg.is_encoder_decoder:
+        per = 2 * (d * qdim + 2 * d * kvdim + qdim * d) + 2 * d * f
+        total += cfg.encoder_layers * per / 2 + cfg.num_layers * per
+    return total

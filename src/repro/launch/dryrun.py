@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell: build the production
+mesh from 512 placeholder host devices, lower the appropriate step function
+against ShapeDtypeStruct stand-ins (zero allocation), ``.compile()`` it,
+print ``memory_analysis()`` (proves it fits) and ``cost_analysis()``
+(FLOPs/bytes for §Roofline), and emit a JSON record including the parsed
+collective-byte breakdown.
+
+The two lines above run before ANY other import — jax locks the device
+count on first init.  Nothing else in the repo sets this flag.
+
+Usage:
+  python -m repro.launch.dryrun --arch phi3-medium-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod|--single-pod|--both]
+  python -m repro.launch.dryrun --all --jobs 4     # subprocess per cell
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+import jax
+
+from repro.configs import registry, shapes as shp
+from repro.configs.base import ModelConfig
+from repro.launch import analysis, jaxpr_cost
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime import steps
+from repro.sharding import rules, ctx as shard_ctx
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _eval_shape_tree(fn, *args, **kwargs):
+    return jax.eval_shape(fn, *args, **kwargs)
+
+
+def lower_cell(cfg: ModelConfig, shape: shp.ShapeSpec, mesh,
+               opt_cfg: adamw.AdamWConfig, serve_tp_only: bool = False,
+               grad_accum: int = 1):
+    """Returns (lowered, compiled, aux info dict)."""
+    chips = mesh.devices.size
+    specs = shp.input_specs(cfg, shape)
+    key = jax.random.PRNGKey(0)
+    params_shapes = _eval_shape_tree(lambda k: M.init(cfg, k), key)
+    params_sh = rules.params_shardings(
+        params_shapes, mesh,
+        serve_tp_only=serve_tp_only and shape.kind != "train")
+    batch_sh = rules.batch_shardings(specs, mesh)
+
+    with mesh, shard_ctx.use_mesh(mesh):
+        if shape.kind == "train":
+            opt_shapes = _eval_shape_tree(
+                lambda p: adamw.init(p, opt_cfg), params_shapes)
+            opt_sh = rules.opt_state_shardings(opt_shapes, params_sh, mesh)
+            fn = steps.bind(steps.train_step, cfg, opt_cfg)
+            if grad_accum > 1:
+                base = fn
+                fn = lambda p, o, b: base(p, o, b, accum=grad_accum)
+                fn.__name__ = "train_step"
+            jfn = jax.jit(
+                fn,
+                in_shardings=(params_sh, opt_sh, batch_sh),
+                out_shardings=(params_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            args = (params_shapes, opt_shapes, specs)
+            lowered = jfn.lower(*args)
+        elif shape.kind == "prefill":
+            fn = steps.bind(steps.prefill_step, cfg, shape.seq_len)
+            cache_shapes = _eval_shape_tree(
+                lambda: M.make_cache(cfg, shape.global_batch, shape.seq_len))
+            cache_sh = rules.cache_shardings(cache_shapes, mesh)
+            jfn = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                          out_shardings=(None, cache_sh, None))
+            args = (params_shapes, specs)
+            lowered = jfn.lower(*args)
+        else:  # decode
+            cache_shapes = _eval_shape_tree(
+                lambda: M.make_cache(cfg, shape.global_batch, shape.seq_len))
+            cache_sh = rules.cache_shardings(cache_shapes, mesh)
+            fn = steps.bind(steps.serve_step, cfg)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(params_sh, batch_sh["token"], cache_sh,
+                              batch_sh["kv_len"]),
+                out_shardings=(None, cache_sh, None),
+                donate_argnums=(2,),
+            )
+            args = (params_shapes, specs["token"], cache_shapes,
+                    specs["kv_len"])
+            lowered = jfn.lower(*args)
+        compiled = lowered.compile()
+        jx_cost = jaxpr_cost.of_function(fn, *args)
+    return lowered, compiled, {"chips": chips, "jaxpr_cost": jx_cost}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opt_state_dtype: str = "int8", verbose: bool = True,
+             serve_tp_only: bool = False, swa_tile_skip: bool = False,
+             sparse: tuple[int, int] | None = None,
+             act_quant: str | None = None, moe_pad: int = 0,
+             no_remat2: bool = False, seq_par: bool = False,
+             kv_int8: bool = False, grad_accum: int = 1) -> dict:
+    cfg = registry.get(arch)
+    if swa_tile_skip:
+        cfg = dataclasses.replace(cfg, swa_tile_skip=True)
+    if moe_pad:
+        cfg = dataclasses.replace(cfg, moe_expert_padding=moe_pad)
+    if no_remat2:
+        cfg = dataclasses.replace(cfg, remat_2level=False)
+    if seq_par:
+        cfg = dataclasses.replace(cfg, sequence_parallel=True)
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    if sparse:
+        from repro.core.linear import SparsityConfig
+        cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
+            pattern=tuple(sparse), mode="compressed", act_quant=act_quant,
+            use_pallas=False))
+    shape = shp.SHAPES[shape_name]
+    ok, reason = shp.applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {reason}")
+        return rec
+
+    opt_cfg = adamw.AdamWConfig(state_dtype=opt_state_dtype)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, compiled, aux = lower_cell(cfg, shape, mesh, opt_cfg,
+                                        serve_tp_only=serve_tp_only,
+                                        grad_accum=grad_accum)
+    dt = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    model_flops = analysis.model_flops_estimate(cfg, shape)
+    model_bytes = analysis.model_bytes_estimate(cfg, shape)
+    roof = analysis.from_compiled(compiled, aux["chips"], model_flops,
+                                  jaxpr_cost=aux["jaxpr_cost"],
+                                  model_bytes=model_bytes)
+    rec.update(
+        status="ok", compile_s=round(dt, 1), chips=aux["chips"],
+        memory_analysis=_mem_dict(mem), roofline=roof.to_dict(),
+    )
+    if verbose:
+        print(f"[dryrun] OK {arch} x {shape_name} x {rec['mesh']} "
+              f"(compile {dt:.0f}s)")
+        print("  memory_analysis:", rec["memory_analysis"])
+        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+              (roof.flops, roof.hbm_bytes))
+        print("  collective bytes/device: %.3e %s" %
+              (roof.coll_bytes, roof.coll_breakdown))
+        print("  roofline: compute=%.4fs memory=%.4fs collective=%.4fs "
+              "dominant=%s useful=%.2f" %
+              (roof.t_compute, roof.t_memory, roof.t_collective,
+               roof.dominant, roof.useful_flops_ratio))
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if out.get("argument_size_in_bytes") is not None:
+        live = (out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+        out["per_device_live_bytes"] = int(live)
+    return out
+
+
+def all_cells(meshes: list[bool]):
+    for arch in registry.ARCH_IDS:
+        for shape_name in shp.SHAPES:
+            for multi in meshes:
+                yield arch, shape_name, multi
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(shp.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--both", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt-state", default="int8", choices=["int8", "float32"])
+    ap.add_argument("--json", help="write a JSON record to this path")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="subprocesses for --all")
+    # hillclimb levers (§Perf) — defaults are the recorded baseline
+    ap.add_argument("--serve-tp-only", action="store_true",
+                    help="serving weight layout: TP-only (no FSDP gathers)")
+    ap.add_argument("--swa-tile-skip", action="store_true",
+                    help="windowed KV slicing on SWA layers")
+    ap.add_argument("--sparse", nargs=2, type=int, metavar=("Z", "L"),
+                    help="SlideSparse compressed weights")
+    ap.add_argument("--act-quant", choices=["int8"], default=None)
+    ap.add_argument("--moe-pad", type=int, default=0,
+                    help="pad expert stacks to N for EP divisibility")
+    ap.add_argument("--no-remat2", action="store_true",
+                    help="single-level remat (one fewer forward pass)")
+    ap.add_argument("--seq-par", action="store_true",
+                    help="Megatron-SP residual stream")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache (halves decode cache traffic)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="microbatches per optimizer step")
+    args = ap.parse_args(argv)
+
+    meshes = [True] if args.multi_pod else [False]
+    if args.both:
+        meshes = [False, True]
+
+    if args.all:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        cells = list(all_cells(meshes))
+        procs: list = []
+        failed = []
+        for arch, shape_name, multi in cells:
+            out = os.path.join(
+                RESULTS_DIR,
+                f"{arch}__{shape_name}__{'mp' if multi else 'sp'}.json")
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape_name,
+                   "--multi-pod" if multi else "--single-pod",
+                   "--opt-state", args.opt_state, "--json", out]
+            procs.append((cmd, out))
+        running: list = []
+        for cmd, out in procs:
+            while len(running) >= args.jobs:
+                running = _reap(running, failed)
+            print("[dryrun] launch:", " ".join(cmd[3:]))
+            running.append((subprocess.Popen(cmd), cmd))
+        while running:
+            running = _reap(running, failed)
+        print(f"[dryrun] done: {len(procs) - len(failed)}/{len(procs)} ok")
+        for cmd in failed:
+            print("[dryrun] FAILED:", " ".join(cmd))
+        sys.exit(1 if failed else 0)
+
+    rec = run_cell(args.arch, args.shape, multi_pod=meshes[-1],
+                   opt_state_dtype=args.opt_state,
+                   serve_tp_only=args.serve_tp_only,
+                   swa_tile_skip=args.swa_tile_skip,
+                   sparse=tuple(args.sparse) if args.sparse else None,
+                   act_quant=args.act_quant, moe_pad=args.moe_pad,
+                   no_remat2=args.no_remat2, seq_par=args.seq_par,
+                   kv_int8=args.kv_int8, grad_accum=args.grad_accum)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json), exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2)
+    sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+def _reap(running, failed):
+    import time as _t
+    still = []
+    for proc, cmd in running:
+        ret = proc.poll()
+        if ret is None:
+            still.append((proc, cmd))
+        elif ret != 0:
+            failed.append(cmd)
+    if len(still) == len(running):
+        _t.sleep(2)
+    return still
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Exact FLOP (and primitive-traffic) accounting from the lowered jaxpr.
+
+Why: XLA's HloCostAnalysis visits while-loop bodies ONCE, so for scanned
+layer stacks ``compiled.cost_analysis()`` under-counts FLOPs by ~num_layers
+(and likewise bytes).  The jaxpr retains ``scan`` with its static ``length``,
+so traversing it with trip-count multipliers gives exact global FLOPs for
+dot/conv ops — the number EXPERIMENTS.md §Roofline uses (cost_analysis raw
+values are reported alongside for transparency).
+
+Bytes here are an unfused primitive-traffic estimate (sum of operand+result
+bytes over all eqns, scan-multiplied): an upper bound on HBM traffic that is
+uniform across cells, used for the memory roofline term.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(math.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    dn = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dn
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    contract = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    lfree = math.prod(d for i, d in enumerate(lhs.shape)
+                      if i not in lc and i not in lb)
+    rfree = math.prod(d for i, d in enumerate(rhs.shape)
+                      if i not in rc and i not in rb)
+    return 2.0 * batch * lfree * rfree * contract
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    dn = eqn.params["dimension_numbers"]
+    groups = eqn.params.get("feature_group_count", 1)
+    kernel_spatial = math.prod(rhs.shape[i] for i in dn.rhs_spec[2:])
+    in_feat = rhs.shape[dn.rhs_spec[1]]
+    return 2.0 * math.prod(out.shape) * kernel_spatial * in_feat / max(groups, 1)
+
+
+_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "body_jaxpr", "cond_jaxpr",
+                  "fun_jaxpr")
+
+
+def count(closed_jaxpr) -> dict[str, float]:
+    """Returns:
+      flops      — exact dot/conv FLOPs (scan-trip-aware)
+      bytes      — unfused traffic upper bound (all eqn operands+results)
+      bytes_dots — dot/conv operand+result bytes only: the fusion-aware
+                   HBM-traffic proxy (weights + matmul activations are what
+                   must cross HBM; elementwise chains fuse on TPU)
+    """
+    return _count_jaxpr(closed_jaxpr.jaxpr, 1.0)
+
+
+def _merge(a, b, scale=1.0):
+    for k in a:
+        a[k] += scale * b[k]
+
+
+def _count_jaxpr(jaxpr, mult: float) -> dict[str, float]:
+    out = {"flops": 0.0, "bytes": 0.0, "bytes_dots": 0.0}
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        io_bytes = (sum(_aval_bytes(v.aval) for v in eqn.invars
+                        if hasattr(v, "aval"))
+                    + sum(_aval_bytes(v.aval) for v in eqn.outvars))
+        if prim == "dot_general":
+            out["flops"] += mult * _dot_flops(eqn)
+            out["bytes"] += mult * io_bytes
+            out["bytes_dots"] += mult * io_bytes
+            continue
+        if prim == "conv_general_dilated":
+            out["flops"] += mult * _conv_flops(eqn)
+            out["bytes"] += mult * io_bytes
+            out["bytes_dots"] += mult * io_bytes
+            continue
+        if prim == "scan":
+            length = eqn.params.get("length", 1)
+            _merge(out, _count_jaxpr(eqn.params["jaxpr"].jaxpr,
+                                     mult * length))
+            continue
+        if prim == "while":
+            # we never emit unbounded whiles ourselves; count the body once
+            _merge(out, _count_jaxpr(eqn.params["body_jaxpr"].jaxpr, mult))
+            continue
+        if prim == "cond":
+            branches = eqn.params.get("branches", ())
+            if branches:
+                subs = [_count_jaxpr(b.jaxpr, mult) for b in branches]
+                for k in out:
+                    out[k] += max(s[k] for s in subs)
+            continue
+        handled = False
+        for key in _SUBJAXPR_KEYS:
+            if key in eqn.params:
+                sub = eqn.params[key]
+                sub = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                _merge(out, _count_jaxpr(sub, mult))
+                handled = True
+                break
+        if not handled:
+            out["bytes"] += mult * io_bytes
+    return out
+
+
+def of_function(fn, *args, **kwargs) -> dict[str, float]:
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return count(closed)

@@ -1,0 +1,22 @@
+"""Production mesh construction (DESIGN.md §4).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state.  Single-pod: 16x16 = 256 chips (data x model).  Multi-pod:
+2x16x16 = 512 chips (pod x data x model); the 'pod' axis carries only
+DCN-friendly gradient all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1-D 'data' mesh (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

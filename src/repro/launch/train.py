@@ -1,0 +1,62 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On a real TPU fleet this process runs per host (jax.distributed handles
+rendezvous); here it drives the same code on the local devices.  Sets the
+XLA latency-hiding-scheduler flags that overlap collectives with compute
+(distributed-optimization posture, DESIGN.md §4) — only when XLA_FLAGS is
+not already pinned by the environment.
+"""
+import os
+
+_OVERLAP_FLAGS = (
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+)
+if "XLA_FLAGS" not in os.environ and os.environ.get("REPRO_TPU"):
+    os.environ["XLA_FLAGS"] = _OVERLAP_FLAGS
+
+import argparse
+import dataclasses
+
+from repro.configs import registry
+from repro.core.linear import SparsityConfig
+from repro.optim import adamw
+from repro.runtime import train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--sparse", nargs=2, type=int, metavar=("Z", "L"))
+    ap.add_argument("--sparse-mode", default="masked",
+                    choices=["masked", "dense"])
+    ap.add_argument("--opt-state", default="float32",
+                    choices=["float32", "int8"])
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    cfg = registry.smoke_config(args.arch) if args.smoke \
+        else registry.get(args.arch)
+    if args.sparse:
+        cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
+            pattern=tuple(args.sparse), mode=args.sparse_mode))
+
+    opt = adamw.AdamWConfig(lr=args.lr, state_dtype=args.opt_state)
+    tc = train_loop.TrainConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, global_batch=args.global_batch,
+        seq_len=args.seq_len)
+    out = train_loop.train(cfg, opt, tc)
+    print(f"[launch.train] done at step {out['final_step']}; "
+          f"final loss {out['losses'][-1]:.4f}" if out["losses"] else "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: composable pure-JAX modules for all assigned architectures."""
+from . import layers, attention, moe, ssm, transformer, encdec, model  # noqa: F401

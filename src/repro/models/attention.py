@@ -1,0 +1,292 @@
+"""Attention: GQA with RoPE/M-RoPE, sliding-window + local:global variants.
+
+Prefill/training uses a memory-efficient chunked (flash-style) two-level
+scan with online softmax — scores never materialize beyond a
+[B, H, q_chunk, kv_chunk] tile, which is what makes 32k-prefill cells fit
+the v5e memory analysis.  Decode is a single-query attention over the KV
+cache (supports sequence-sharded caches for long_500k — softmax statistics
+combine across shards via XLA SPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear as sl
+from repro.core.linear import SparsityConfig
+from . import layers
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 1e4
+    causal: bool = True
+    sliding_window: int | None = None  # None -> full/global attention
+    m_rope: bool = False
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    # hillclimb C: per-q-chunk dynamic KV slicing for SWA layers — compute
+    # only the <= ceil((window+cq)/ck)+1 tiles a window can touch instead
+    # of scanning (and masking) every KV chunk
+    tile_skip: bool = False
+
+    @property
+    def q_dim(self):
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self):
+        return self.num_kv_heads * self.head_dim
+
+
+def init(key, spec: AttnSpec, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": sl.init(kq, spec.d_model, spec.q_dim, dtype),
+        "wk": sl.init(kk, spec.d_model, spec.kv_dim, dtype),
+        "wv": sl.init(kv, spec.d_model, spec.kv_dim, dtype),
+        "wo": sl.init(ko, spec.q_dim, spec.d_model, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _rope(spec: AttnSpec, x, positions):
+    if positions is None:
+        return x
+    if spec.m_rope:
+        if positions.ndim == 2:  # text-only: all three streams equal
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return layers.apply_mrope(x, positions, spec.rope_theta)
+    return layers.apply_rope(x, positions, spec.rope_theta)
+
+
+def _mask_tile(spec: AttnSpec, q_pos, k_pos):
+    """[q, k] additive mask tile from absolute positions."""
+    d = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(d.shape, bool)
+    if spec.causal:
+        ok &= d >= 0
+    if spec.sliding_window is not None:
+        ok &= d < spec.sliding_window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _chunked_sdpa(spec: AttnSpec, q, k, v, q_offset: int = 0):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, KVH, hd] -> [B, Sq, H, hd].
+
+    Two-level scan: outer over query chunks, inner over KV chunks with
+    running (max, denom, acc) — FlashAttention dataflow in pure JAX.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    rep = h // k.shape[2]
+    cq, ck = min(spec.q_chunk, sq), min(spec.kv_chunk, sk)
+    nq, nk = -(-sq // cq), -(-sk // ck)
+    pad_q, pad_k = nq * cq - sq, nk * ck - sk
+    scale = hd ** -0.5
+
+    qf = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kf = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vf = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    # [nq, B, cq, H, hd] / [nk, B, ck, KVH, hd]
+    qs = qf.reshape(b, nq, cq, h, hd).transpose(1, 0, 2, 3, 4) * scale
+    ks = kf.reshape(b, nk, ck, k.shape[2], hd).transpose(1, 0, 2, 3, 4)
+    vs = vf.reshape(b, nk, ck, k.shape[2], hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos_base = jnp.arange(cq, dtype=jnp.int32) + q_offset
+    k_pos_base = jnp.arange(ck, dtype=jnp.int32)
+    k_valid = jnp.arange(ck, dtype=jnp.int32)
+
+    kvh = k.shape[2]
+
+    def inner_step(carry, xs):
+        m, l, acc, q_i, qi_idx = carry[0], carry[1], carry[2], carry[3], carry[4]
+        k_j, v_j, kj_idx = xs
+        q_pos = q_pos_base + qi_idx * cq
+        k_pos = k_pos_base + kj_idx * ck
+        mask = _mask_tile(spec, q_pos, k_pos)
+        mask = jnp.where((k_pos < sk)[None, :], mask, NEG_INF)  # kv padding
+        # GQA-native: group query heads per KV head instead of repeating
+        # K/V — a jnp.repeat here materializes (and under SPMD all-gathers)
+        # rep x the KV tile
+        q5 = q_i.reshape(b, cq, kvh, rep, hd)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", q5, k_j).astype(jnp.float32)
+        s = s.reshape(b, h, cq, ck) + mask[None, None]
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        p5 = p.astype(v_j.dtype).reshape(b, kvh, rep, cq, ck)
+        upd = jnp.einsum("bgrqk,bkgd->bgrqd", p5, v_j
+                         ).reshape(b, h, cq, hd)
+        acc_new = acc * alpha[..., None] + upd.astype(jnp.float32)
+        return (m_new, l_new, acc_new, q_i, qi_idx), None
+
+    inner_step = jax.checkpoint(inner_step)
+
+    # hillclimb C: SWA layers only ever see ceil((w+cq)/ck)+1 KV chunks per
+    # query chunk — slice them instead of scanning (and masking) all nk
+    use_window = (spec.tile_skip and spec.causal
+                  and spec.sliding_window is not None)
+    n_win = min(nk, (spec.sliding_window + cq + ck - 1) // ck + 1) \
+        if use_window else nk
+
+    def outer_step(_, xs):
+        q_i, qi_idx = xs
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+        if use_window and n_win < nk:
+            first = jnp.clip(
+                (qi_idx * cq - spec.sliding_window + 1) // ck, 0, nk - n_win)
+            ksw = jax.lax.dynamic_slice_in_dim(ks, first, n_win, axis=0)
+            vsw = jax.lax.dynamic_slice_in_dim(vs, first, n_win, axis=0)
+            idxw = first + jnp.arange(n_win, dtype=jnp.int32)
+        else:
+            ksw, vsw = ks, vs
+            idxw = jnp.arange(nk, dtype=jnp.int32)
+        (m, l, acc, _, _), _ = jax.lax.scan(
+            inner_step, (m0, l0, a0, q_i, qi_idx), (ksw, vsw, idxw))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3)  # [B, cq, H, hd]
+
+    _, outs = jax.lax.scan(outer_step, None,
+                           (qs, jnp.arange(nq, dtype=jnp.int32)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * cq, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def _decode_sdpa(spec: AttnSpec, q, k, v, kv_len):
+    """Single-query attention over the cache. q: [B, 1, H, hd];
+    k/v: [B, S_cache, KVH, hd]; kv_len: [B] valid lengths.
+
+    GQA-native (no K/V repeat — the repeat would all-gather the whole
+    sequence-or-head-sharded cache under SPMD).  Softmax over a sharded S
+    combines via XLA's psum of (max, sum) — sequence-parallel decode for
+    the long_500k cells.
+    """
+    b, _, h, hd = q.shape
+    s = k.shape[1]
+    kvh = k.shape[2]
+    rep = h // kvh
+    q5 = (q * hd ** -0.5).reshape(b, 1, kvh, rep, hd)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", q5, k).astype(jnp.float32)
+    k_pos = jnp.arange(s, dtype=jnp.int32)[None, :]  # [1, S]
+    valid = k_pos < kv_len[:, None]
+    if spec.sliding_window is not None:
+        valid &= k_pos >= (kv_len[:, None] - spec.sliding_window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def apply(params, spec: AttnSpec, x, positions, sp_cfg: SparsityConfig,
+          cache=None, kv_len=None, cross_kv=None):
+    """Returns (out [B, S, D], new_cache | None).
+
+    cache: {'k','v'} [B, S_max, KVH, hd] + write position == kv_len.
+    cross_kv: precomputed (k, v) for encoder-decoder cross attention.
+    """
+    b, s, _ = x.shape
+    q = _split_heads(sl.apply(params["wq"], x, sp_cfg), spec.num_heads,
+                     spec.head_dim)
+    q = _rope(spec, q, positions)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = _chunked_sdpa(dataclasses.replace(spec, causal=False,
+                                                sliding_window=None),
+                            q, k, v)
+        new_cache = cache
+    elif cache is None:
+        k = _split_heads(sl.apply(params["wk"], x, sp_cfg),
+                         spec.num_kv_heads, spec.head_dim)
+        v = _split_heads(sl.apply(params["wv"], x, sp_cfg),
+                         spec.num_kv_heads, spec.head_dim)
+        k = _rope(spec, k, positions)
+        out = _chunked_sdpa(spec, q, k, v)
+        new_cache = None
+    else:
+        # decode: append one token, attend over the cache
+        k_new = _split_heads(sl.apply(params["wk"], x, sp_cfg),
+                             spec.num_kv_heads, spec.head_dim)
+        v_new = _split_heads(sl.apply(params["wv"], x, sp_cfg),
+                             spec.num_kv_heads, spec.head_dim)
+        k_new = _rope(spec, k_new, positions)
+        pos = kv_len[0]  # uniform write position (batched decode, same step)
+        quantized = cache["k"].dtype == jnp.int8
+        if quantized:
+            k_new, ks_new = _quant_kv(k_new)
+            v_new, vs_new = _quant_kv(v_new)
+        dus = jax.lax.dynamic_update_slice_in_dim
+        ck = dus(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+        cv = dus(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        if quantized:
+            new_cache["k_scale"] = dus(cache["k_scale"], ks_new, pos, axis=1)
+            new_cache["v_scale"] = dus(cache["v_scale"], vs_new, pos, axis=1)
+            kd = _dequant_kv(ck, new_cache["k_scale"], x.dtype)
+            vd = _dequant_kv(cv, new_cache["v_scale"], x.dtype)
+        else:
+            kd, vd = ck, cv
+        out = _decode_sdpa(spec, q, kd, vd, kv_len + 1)
+
+    out = out.reshape(b, s, spec.q_dim)
+    return sl.apply(params["wo"], out, sp_cfg), new_cache
+
+
+def make_cache(spec: AttnSpec, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """dtype=int8 -> quantized cache with per-(token, kv-head) fp32 scales
+    (KIVI-style): halves decode HBM traffic, the dominant term for large
+    decode batches (hillclimb B iteration 3)."""
+    shape = (batch, max_len, spec.num_kv_heads, spec.head_dim)
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if dtype == jnp.int8:
+        sshape = (batch, max_len, spec.num_kv_heads, 1)
+        cache["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        cache["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    return cache
+
+
+def _quant_kv(x):
+    """[B, S, KVH, hd] -> int8 + per-(token, head) scale."""
+    a = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                            keepdims=True), 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * (127.0 / a)), -127, 127)
+    return q.astype(jnp.int8), (a / 127.0)
+
+
+def _dequant_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def build_prefill_cache(params, spec: AttnSpec, x, positions,
+                        sp_cfg: SparsityConfig, max_len: int,
+                        dtype=jnp.bfloat16):
+    """Compute K/V for a full prompt and right-pad to max_len."""
+    k = _split_heads(sl.apply(params["wk"], x, sp_cfg), spec.num_kv_heads,
+                     spec.head_dim)
+    v = _split_heads(sl.apply(params["wv"], x, sp_cfg), spec.num_kv_heads,
+                     spec.head_dim)
+    k = _rope(spec, k, positions)
+    pad = max_len - k.shape[1]
+    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if dtype == jnp.int8:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return {"k": k.astype(dtype), "v": v.astype(dtype)}

@@ -1,0 +1,207 @@
+"""Whisper-style encoder-decoder LM (audio family).
+
+The conv frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed frame embeddings [B, T_frames, d_model] (what Whisper's two
+strided convs would emit).  Positions are sinusoidal (unbounded), so any
+decode length lowers.  Decoder layers: causal self-attention (KV cache) +
+cross-attention over the encoder output + GELU MLP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear as sl
+from repro.configs.base import ModelConfig
+from . import layers, attention
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _spec(cfg: ModelConfig, causal: bool) -> attention.AttnSpec:
+    return attention.AttnSpec(
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        causal=causal, sliding_window=None)
+
+
+def _mlp_init(key, d, f, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"w_in": sl.init(k1, d, f, dtype), "w_out": sl.init(k2, f, d, dtype)}
+
+
+def _mlp(params, x, sp):
+    return sl.apply(params["w_out"],
+                    jax.nn.gelu(sl.apply(params["w_in"], x, sp)), sp)
+
+
+def _enc_layer_init(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": layers.rmsnorm_init(cfg.d_model),
+        "attn": attention.init(k1, _spec(cfg, False), _dtype(cfg)),
+        "mlp_norm": layers.rmsnorm_init(cfg.d_model),
+        "mlp": _mlp_init(k2, cfg.d_model, cfg.d_ff, _dtype(cfg)),
+    }
+
+
+def _dec_layer_init(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": layers.rmsnorm_init(cfg.d_model),
+        "self_attn": attention.init(k1, _spec(cfg, True), _dtype(cfg)),
+        "cross_norm": layers.rmsnorm_init(cfg.d_model),
+        "cross_attn": attention.init(k2, _spec(cfg, False), _dtype(cfg)),
+        "mlp_norm": layers.rmsnorm_init(cfg.d_model),
+        "mlp": _mlp_init(k3, cfg.d_model, cfg.d_ff, _dtype(cfg)),
+    }
+
+
+def init(cfg: ModelConfig, key) -> dict[str, Any]:
+    ke, kd, kemb, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": layers.embed_init(kemb, cfg.vocab_size, cfg.d_model,
+                                   _dtype(cfg)),
+        "encoder": jax.vmap(lambda k: _enc_layer_init(cfg, k))(enc_keys),
+        "enc_norm": layers.rmsnorm_init(cfg.d_model),
+        "decoder": jax.vmap(lambda k: _dec_layer_init(cfg, k))(dec_keys),
+        "final_norm": layers.rmsnorm_init(cfg.d_model),
+        "lm_head": sl.init(kh, cfg.d_model, cfg.vocab_size, _dtype(cfg)),
+    }
+
+
+def encode(params, cfg: ModelConfig, audio_embeds) -> jax.Array:
+    """audio_embeds: [B, T, D] (conv-frontend stub output) -> [B, T, D]."""
+    b, t, d = audio_embeds.shape
+    pos = layers.sinusoidal_positions(t, d).astype(_dtype(cfg))
+    x = audio_embeds.astype(_dtype(cfg)) + pos[None]
+    sp = cfg.sparsity
+
+    def layer_fn(h, lp):
+        a, _ = attention.apply(lp["attn"], _spec(cfg, False),
+                               layers.rmsnorm(lp["attn_norm"], h, cfg.norm_eps),
+                               None, sp)
+        h = h + a
+        m = _mlp(lp["mlp"], layers.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps), sp)
+        return h + m, None
+
+    if cfg.remat:
+        layer_fn = jax.checkpoint(layer_fn)
+    x, _ = jax.lax.scan(layer_fn, x, params["encoder"])
+    return layers.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _decoder_pass(params, cfg, x, positions, enc_out, cache, kv_len):
+    """Shared decoder stack. cache: stacked per-layer {'k','v'} or None."""
+    sp = cfg.sparsity
+    spec_self = _spec(cfg, True)
+    spec_cross = _spec(cfg, False)
+
+    def layer_fn(h, xs):
+        lp, lcache = xs
+        a, nc = attention.apply(
+            lp["self_attn"], spec_self,
+            layers.rmsnorm(lp["self_norm"], h, cfg.norm_eps),
+            positions, sp, cache=lcache, kv_len=kv_len)
+        h = h + a
+        c, _ = attention.apply(
+            lp["cross_attn"], spec_cross,
+            layers.rmsnorm(lp["cross_norm"], h, cfg.norm_eps),
+            None, sp, cross_kv=_cross_kv(lp, cfg, enc_out))
+        h = h + c
+        m = _mlp(lp["mlp"], layers.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps), sp)
+        return h + m, nc
+
+    if cfg.remat and cache is None:
+        layer_fn = jax.checkpoint(layer_fn)
+    if cache is None:
+        x, _ = jax.lax.scan(lambda h, lp: layer_fn(h, (lp, None)), x,
+                            params["decoder"])
+        new_cache = None
+    else:
+        x, new_cache = jax.lax.scan(layer_fn, x, (params["decoder"], cache))
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps), new_cache
+
+
+def _cross_kv(lp, cfg, enc_out):
+    sp = cfg.sparsity
+    spec = _spec(cfg, False)
+    k = sl.apply(lp["cross_attn"]["wk"], enc_out, sp)
+    v = sl.apply(lp["cross_attn"]["wv"], enc_out, sp)
+    shp = enc_out.shape[:-1] + (spec.num_kv_heads, spec.head_dim)
+    return k.reshape(shp), v.reshape(shp)
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, audio_embeds):
+    enc_out = encode(params, cfg, audio_embeds)
+    b, s = tokens.shape
+    x = layers.embed(params["embed"], tokens).astype(_dtype(cfg))
+    pos_tab = layers.sinusoidal_positions(s, cfg.d_model).astype(_dtype(cfg))
+    x = x + pos_tab[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h, _ = _decoder_pass(params, cfg, x, positions, enc_out, None, None)
+    from .transformer import chunked_xent
+    return chunked_xent(params["lm_head"], cfg, h, labels)
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int):
+    def one(_):
+        return attention.make_cache(_spec(cfg, True), batch, max_len,
+                                    _dtype(cfg))
+    return jax.vmap(one)(jnp.arange(cfg.num_layers))
+
+
+def prefill(params, cfg: ModelConfig, tokens, audio_embeds,
+            max_len: int | None = None):
+    """Encode audio + run decoder prompt; returns (logits, cache, kv_len)."""
+    enc_out = encode(params, cfg, audio_embeds)
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = layers.embed(params["embed"], tokens).astype(_dtype(cfg))
+    x = x + layers.sinusoidal_positions(s, cfg.d_model
+                                        ).astype(_dtype(cfg))[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    sp = cfg.sparsity
+    spec_self = _spec(cfg, True)
+
+    def layer_fn(h, lp):
+        hh = layers.rmsnorm(lp["self_norm"], h, cfg.norm_eps)
+        a, _ = attention.apply(lp["self_attn"], spec_self, hh, positions, sp)
+        cache_i = attention.build_prefill_cache(
+            lp["self_attn"], spec_self, hh, positions, sp, max_len,
+            _dtype(cfg))
+        h = h + a
+        c, _ = attention.apply(
+            lp["cross_attn"], _spec(cfg, False),
+            layers.rmsnorm(lp["cross_norm"], h, cfg.norm_eps),
+            None, sp, cross_kv=_cross_kv(lp, cfg, enc_out))
+        h = h + c
+        m = _mlp(lp["mlp"], layers.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps), sp)
+        return h + m, cache_i
+
+    x, cache = jax.lax.scan(layer_fn, x, params["decoder"])
+    h = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = sl.apply(params["lm_head"], h[:, -1:], sp)[:, 0]
+    return logits, {"self": cache, "enc_out": enc_out}, \
+        jnp.full((b,), s, jnp.int32)
+
+
+def serve_step(params, cfg: ModelConfig, token, cache, kv_len):
+    b = token.shape[0]
+    x = layers.embed(params["embed"], token[:, None]).astype(_dtype(cfg))
+    # sinusoidal position of the current step
+    pos_vec = layers.sinusoidal_positions_at(kv_len, cfg.d_model
+                                             ).astype(_dtype(cfg))
+    x = x + pos_vec[:, None, :]
+    positions = kv_len[:, None]
+    h, new_self = _decoder_pass(params, cfg, x, positions, cache["enc_out"],
+                                cache["self"], kv_len)
+    logits = sl.apply(params["lm_head"], h, cfg.sparsity)[:, 0]
+    return logits, {"self": new_self, "enc_out": cache["enc_out"]}, kv_len + 1

@@ -1,0 +1,115 @@
+"""Shared neural-net layers (pure-JAX pytree modules: init/apply pairs).
+
+All projections route through repro.core.linear (SparseLinear) so the
+paper's technique is a single-flag feature across every architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear as sl
+from repro.core.linear import SparsityConfig
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["g"]).astype(dt)
+
+
+# ------------------------------------------------------------------ rope
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] int32. Half-split convention."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections=(2, 3, 3)) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): head_dim split into (t, h, w) sections,
+    each rotated by its own position stream.  positions: [3, B, S] — for
+    text-only inputs all three streams are equal and M-RoPE reduces to RoPE.
+    ``sections`` are relative weights over hd/2 (Qwen2-VL uses 16/24/24 of 64).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    total = sum(sections)
+    sizes = [half * s // total for s in sections]
+    sizes[-1] = half - sum(sizes[:-1])
+    freqs = rope_frequencies(hd, theta)  # [half]
+    # build per-frequency position ids by section
+    pos_parts = []
+    off = 0
+    for stream, size in enumerate(sizes):
+        pos_parts.append(
+            positions[stream][..., None].astype(jnp.float32)
+            * freqs[off:off + size])
+        off += size
+    angles = jnp.concatenate(pos_parts, axis=-1)  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (unbounded lengths)."""
+    return sinusoidal_positions_at(jnp.arange(max_len, dtype=jnp.int32), d)
+
+
+def sinusoidal_positions_at(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal rows at arbitrary positions [N] -> [N, d]."""
+    pos = positions.astype(jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ------------------------------------------------------------------- mlp
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": sl.init(k1, d_model, d_ff, dtype),
+        "w_up": sl.init(k2, d_model, d_ff, dtype),
+        "w_down": sl.init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params, x, cfg: SparsityConfig):
+    g = sl.apply(params["w_gate"], x, cfg)
+    u = sl.apply(params["w_up"], x, cfg)
+    return sl.apply(params["w_down"], jax.nn.silu(g) * u, cfg)
+
+
+# ------------------------------------------------------------- embedding
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+    return {"w": w.astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["w"], tokens, axis=0)
+
+
+def unembed(params, x, cfg: SparsityConfig = sl.DENSE):
+    """LM head (SparseLinear-routed so the technique covers it too)."""
+    return sl.apply(params, x, cfg)

@@ -1,0 +1,66 @@
+"""Unified model API over all assigned architecture families.
+
+Batch dicts:
+  train:   {'tokens': [B,S] i32, 'labels': [B,S] i32,
+            optional 'audio_embeds'/'vision_embeds': [B,T,D]}
+  prefill: {'tokens': [B,S], optional modality embeds}
+  decode:  token [B] + cache + kv_len
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import transformer, encdec
+
+
+def init(cfg: ModelConfig, key) -> dict[str, Any]:
+    if cfg.is_encoder_decoder:
+        return encdec.init(cfg, key)
+    return transformer.init(cfg, key)
+
+
+def _extra_embeds(cfg: ModelConfig, batch):
+    if cfg.frontend == "audio":
+        return batch["audio_embeds"]
+    if cfg.frontend == "vision":
+        return batch.get("vision_embeds")
+    return None
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jax.Array:
+    if cfg.is_encoder_decoder:
+        return encdec.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                              batch["audio_embeds"])
+    return transformer.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                               _extra_embeds(cfg, batch))
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int | None = None):
+    if cfg.is_encoder_decoder:
+        return encdec.prefill(params, cfg, batch["tokens"],
+                              batch["audio_embeds"], max_len)
+    return transformer.prefill(params, cfg, batch["tokens"], max_len,
+                               _extra_embeds(cfg, batch))
+
+
+def serve_step(params, cfg: ModelConfig, token, cache, kv_len):
+    if cfg.is_encoder_decoder:
+        return encdec.serve_step(params, cfg, token, cache, kv_len)
+    return transformer.serve_step(params, cfg, token, cache, kv_len)
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.is_encoder_decoder:
+        return {"self": encdec.make_cache(cfg, batch, max_len),
+                "enc_out": jnp.zeros(
+                    (batch, cfg.max_source_positions, cfg.d_model),
+                    jnp.dtype(cfg.dtype))}
+    return transformer.make_cache(cfg, batch, max_len)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,174 @@
+"""Mixture-of-Experts FFN — top-k routing with capacity, scatter dispatch.
+
+Dispatch is scatter/gather (per-slot segment-sum into per-expert capacity
+buffers + inverse gather for combine), NOT the GShard dense one-hot einsum:
+the [tokens, E, C] dispatch tensor is O(T*E*C) and reaches hundreds of GB
+per device for mixtral-scale cells, while the scatter form is O(T*k*D).
+Tokens are grouped ([G, Tg]) so the G axis carries the (pod, data) batch
+sharding; per-group indices keep every scatter/gather shard-local.
+
+Expert stacks are [E, out, in]: expert-parallel over 'model' when E divides
+it (jamba), else FSDP'd like dense weights (mixtral 8e, granite 40e on a
+16-way axis).  The same pruning/packing math as SparseLinear applies along
+the contraction dim, so SlideSparse covers expert FFNs (paper §4.3
+"generality").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear as sl
+from repro.core import packer, masks
+from repro.core.linear import SparsityConfig
+from repro.sharding import ctx as shard_ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 256  # tokens per dispatch group
+    expert_padding: int = 0  # stack padded to this (>= num_experts); 0 = off
+
+    @property
+    def num_stacked(self) -> int:
+        return max(self.num_experts, self.expert_padding)
+
+
+def init(key, spec: MoESpec, dtype=jnp.float32):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, d, f = spec.num_stacked, spec.d_model, spec.d_ff
+
+    def expert_stack(k, kin, kout):
+        w = jax.random.normal(k, (e, kout, kin), jnp.float32) * kin ** -0.5
+        return {"w": w.astype(dtype)}
+
+    return {
+        "router": {"w": (jax.random.normal(
+            kr, (spec.num_experts, d), jnp.float32)  # router: REAL experts
+            * d ** -0.5).astype(jnp.float32)},
+        "w_gate": expert_stack(kg, d, f),
+        "w_up": expert_stack(ku, d, f),
+        "w_down": expert_stack(kd, f, d),
+    }
+
+
+def _model_divides(n: int) -> bool:
+    mesh = shard_ctx.current_mesh()
+    if mesh is None:
+        return True
+    size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    return n % size == 0
+
+
+def _expert_weights(params, sp_cfg: SparsityConfig):
+    """Stacked [E, M, K] expert weights under the configured sparsity."""
+    w = params["w"]
+    dec = sp_cfg.decomposition()
+    if dec is not None:
+        if sp_cfg.mode == "masked":
+            w = masks.ste_prune(w, dec.source)
+        elif sp_cfg.mode in ("slided", "compressed"):
+            # dry-run/jnp path: pruned-dense semantics (kernels engage on
+            # TPU via per-expert SparseLinear at serving time)
+            w = packer.prune_to_pattern(w, dec.source)
+    return w
+
+
+def apply(params, spec: MoESpec, x, sp_cfg: SparsityConfig):
+    """x: [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    t = b * s
+    tg = min(spec.group_size, t)
+    g = t // tg
+    assert g * tg == t, f"tokens {t} not divisible by group size {tg}"
+    e, k = spec.num_experts, spec.top_k
+    cap = max(1, int(spec.capacity_factor * tg * k / e))
+    xg = x.reshape(g, tg, d)
+
+    # router dot in the activation dtype (an f32 cast here would materialize
+    # a full-activation f32 copy); only the [G,Tg,E] logits go to f32
+    logits = jnp.einsum("gtd,ed->gte", xg,
+                        params["router"]["w"].astype(x.dtype)
+                        ).astype(jnp.float32)
+    top_vals, top_idx = jax.lax.top_k(logits, k)       # [G,Tg,K]
+    gates = jax.nn.softmax(top_vals, axis=-1)
+
+    # position of every (token, slot) in its expert queue; slots are ordered
+    # (t, k)-major so earlier tokens win capacity deterministically
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)   # [G,Tg,K,E]
+    flat = onehot.reshape(g, tg * k, e)
+    pos_all = jnp.cumsum(flat, axis=1) - flat              # [G,Tg*K,E]
+    pos = jnp.sum(pos_all * flat, axis=-1).reshape(g, tg, k)
+    keep = pos < cap                                       # capacity drop
+    # destination row in the [E*C] expert buffer; overflow bucket = E*C
+    dest = jnp.where(keep, top_idx * cap + pos, e * cap)   # [G,Tg,K]
+
+    ep = spec.num_stacked  # padded stack size (pads receive no tokens)
+
+    # ---- slot -> token permutation map (each capacity slot holds <= 1
+    # token, so integer segment-sums recover the exact index/gate).  Routing
+    # both dispatch and combine through this map keeps every *large* scatter
+    # x-sized: XLA promotes bf16 scatter-adds to f32, so scattering into the
+    # [G, E*C, D] expert buffers would cost 2x memory in the backward pass.
+    nslot = ep * cap + 1
+    seg = jax.vmap(lambda data, ids: jax.ops.segment_sum(
+        data, ids, num_segments=nslot))
+    tok_ids = jnp.broadcast_to(jnp.arange(tg, dtype=jnp.int32)[None], (g, tg))
+    src_tok = jnp.zeros((g, nslot), jnp.int32)
+    slot_gate = jnp.zeros((g, nslot), jnp.float32)
+    filled = jnp.zeros((g, nslot), jnp.int32)
+    ones = jnp.ones((g, tg), jnp.int32)
+    for kk in range(k):
+        src_tok = src_tok + seg(tok_ids, dest[:, :, kk])
+        slot_gate = slot_gate + seg(gates[:, :, kk], dest[:, :, kk])
+        filled = filled + seg(ones, dest[:, :, kk])
+    src = src_tok[:, :ep * cap]                            # [G, Ep*C]
+    live = (filled[:, :ep * cap] > 0)
+
+    # ---- dispatch: gather tokens into capacity buffers (bwd = scatter
+    # into the x-sized [G,Tg,D] cotangent)
+    xin = jnp.take_along_axis(xg, src[..., None], axis=1)
+    xin = jnp.where(live[..., None], xin, 0)
+    xin = xin.reshape(g, ep, cap, d)                       # [G,Ep,C,D]
+    xin = shard_ctx.constrain(xin, "dp", "model", None, None)
+
+    w_gate = _expert_weights(params["w_gate"], sp_cfg)
+    w_up = _expert_weights(params["w_up"], sp_cfg)
+    w_down = _expert_weights(params["w_down"], sp_cfg)
+    dt = x.dtype
+    h = jax.nn.silu(jnp.einsum("gecd,efd->gecf", xin, w_gate.astype(dt)))
+    h = h * jnp.einsum("gecd,efd->gecf", xin, w_up.astype(dt))
+    # the hidden is the largest MoE transient: [G,Ep,C,F] — put 'model' on
+    # the expert dim when it divides (EP), else on F
+    if _model_divides(ep):
+        h = shard_ctx.constrain(h, "dp", "model", None, None)
+    else:
+        h = shard_ctx.constrain(h, "dp", None, None, "model")
+    out = jnp.einsum("gecf,edf->gecd", h, w_down.astype(dt))
+    out = shard_ctx.constrain(out, "dp", "model", None, None)
+
+    # ---- combine: gate-weighted scatter of slot outputs back to their
+    # source tokens (bwd = gather, no big scatter cotangent)
+    out_flat = out.reshape(g, ep * cap, d)
+    upd = out_flat * slot_gate[:, :ep * cap, None].astype(dt)
+    tgt = jnp.where(live, src, tg)                         # OOB -> dropped
+    y = jax.vmap(lambda yz, idx, u: yz.at[idx].add(u, mode="drop"))(
+        jnp.zeros((g, tg, d), dt), tgt, upd)
+    y = shard_ctx.constrain(y, "dp", None, None)
+    return y.reshape(b, s, d)
+
+
+def aux_load_balance_loss(logits: jax.Array, top_idx: jax.Array,
+                          num_experts: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (used by the train loop)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    density = jnp.mean(jax.nn.one_hot(top_idx[..., 0], num_experts), axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    return num_experts * jnp.sum(density * density_proxy)

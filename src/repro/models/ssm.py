@@ -1,0 +1,171 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD algorithm: intra-chunk quadratic (attention-like) term +
+inter-chunk linear state recurrence; decode is an O(1) per-token state
+update.  Projections route through SparseLinear so SlideSparse covers the
+in/out projections (the scan itself is not GEMM-shaped — see DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear as sl
+from repro.core.linear import SparsityConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self):
+        return self.d_inner // self.head_dim
+
+
+def init(key, spec: SSMSpec, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    p = {
+        "wx": sl.init(ks[0], spec.d_model, spec.d_inner, dtype),
+        "wz": sl.init(ks[1], spec.d_model, spec.d_inner, dtype),
+        "wB": sl.init(ks[2], spec.d_model, spec.d_state, dtype),
+        "wC": sl.init(ks[3], spec.d_model, spec.d_state, dtype),
+        "wdt": sl.init(ks[4], spec.d_model, spec.num_heads, dtype),
+        "wo": sl.init(ks[5], spec.d_inner, spec.d_model, dtype),
+        "conv_w": (jax.random.normal(ks[6], (spec.d_conv, spec.d_inner),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((spec.num_heads,), jnp.float32),
+        "dt_bias": jnp.full((spec.num_heads,), -2.0, jnp.float32),
+        "D": jnp.ones((spec.num_heads,), jnp.float32),
+    }
+    return p
+
+
+def _segsum(x):
+    """L[..., i, j] = sum_{j < k <= i} x[..., k]; -inf above the diagonal."""
+    cs = jnp.cumsum(x, -1)
+    d = cs[..., :, None] - cs[..., None, :]
+    ll = x.shape[-1]
+    mask = jnp.tril(jnp.ones((ll, ll), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: [B, S, C]; w: [K, C].
+    state: [B, K-1, C] trailing context (decode) or None (prefill)."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(x, a, b_mat, c_mat, chunk):
+    """Chunked SSD scan (Mamba-2 'ssd_minimal_discrete').
+
+    x: [B, S, H, P] (already * dt); a: [B, S, H] log-decay (dt * A);
+    b_mat/c_mat: [B, S, N] (single group, broadcast over heads).
+    Returns y [B, S, H, P] and final state [B, H, P, N].
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = a.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # [B,H,C,Q]
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    a_cum = jnp.cumsum(ac, -1)                        # [B,H,C,Q]
+    el = jnp.exp(_segsum(ac))                         # [B,H,C,Q,Q]
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", cc, bc, el, xc)
+
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)   # [B,H,C,Q]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bc, decay_states, xc)
+
+    chunk_decay = jnp.exp(jnp.pad(a_cum[..., -1], ((0, 0), (0, 0), (1, 0))))
+    # inter-chunk recurrence (sequential scan over chunks)
+    def step(h_prev, xs):
+        st, dec = xs  # st: [B,H,P,N]; dec: [B,H]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    sts = states.transpose(1, 0, 2, 3, 4)             # [C,B,H,P,N]
+    decs = chunk_decay[:, :, 1:].transpose(2, 0, 1)   # [C,B,H]
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(step, h0, (sts.astype(jnp.float32), decs))
+    prev_states = h_prevs.transpose(1, 0, 2, 3, 4)    # [B,C,H,P,N]
+
+    state_decay_out = jnp.exp(a_cum)                  # [B,H,C,Q]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc,
+                       prev_states.astype(cc.dtype), state_decay_out)
+    y = (y_diag + y_off).reshape(bsz, nc * chunk, h, p)
+    return y[:, :s], h_final
+
+
+def apply(params, spec: SSMSpec, x, sp_cfg: SparsityConfig, cache=None):
+    """x: [B, S, D]. cache (decode): {'conv': [B,K-1,dI], 'ssd': [B,H,P,N]}.
+    Returns (out, new_cache | None)."""
+    bsz, s, _ = x.shape
+    h, p, n = spec.num_heads, spec.head_dim, spec.d_state
+
+    xi = sl.apply(params["wx"], x, sp_cfg)
+    z = sl.apply(params["wz"], x, sp_cfg)
+    dt = jax.nn.softplus(
+        sl.apply(params["wdt"], x, sp_cfg).astype(jnp.float32)
+        + params["dt_bias"])                                  # [B,S,H]
+    a = -jnp.exp(params["A_log"])                             # [H]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xi, new_conv = _causal_conv(xi, params["conv_w"], conv_state)
+    b_mat = sl.apply(params["wB"], x, sp_cfg).astype(jnp.float32)
+    c_mat = sl.apply(params["wC"], x, sp_cfg).astype(jnp.float32)
+
+    xh = xi.reshape(bsz, s, h, p).astype(jnp.float32)
+    if cache is None:
+        y, h_final = _ssd_chunked(xh * dt[..., None], dt * a, b_mat, c_mat,
+                                  min(spec.chunk, s))
+        # prefill cache: final SSD state + trailing conv window
+        new_cache = {"conv": new_conv, "ssd": h_final}
+    else:
+        # O(1) decode: h' = h * exp(dt A) + dt * (B outer x); y = C . h'
+        hst = cache["ssd"]
+        dt1 = dt[:, 0]                                        # [B,H]
+        da = jnp.exp(dt1 * a)                                 # [B,H]
+        upd = jnp.einsum("bhp,bn->bhpn", xh[:, 0] * dt1[..., None],
+                         b_mat[:, 0])
+        h_new = hst * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h_new, c_mat[:, 0])[:, None]
+        new_cache = {"conv": new_conv, "ssd": h_new}
+    y = y + xh * params["D"][:, None]
+    y = y.reshape(bsz, s, spec.d_inner).astype(x.dtype)
+    out = sl.apply(params["wo"], y * jax.nn.silu(z), sp_cfg)
+    return out, new_cache
+
+
+def make_cache(spec: SSMSpec, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, spec.d_conv - 1, spec.d_inner), dtype),
+        "ssd": jnp.zeros((batch, spec.num_heads, spec.head_dim, spec.d_state),
+                         jnp.float32),
+    }

@@ -1,0 +1,323 @@
+"""Decoder-only LM stack: dense / SWA / local:global / MoE / SSM / hybrid.
+
+Layers are grouped into the config's repeating *unit* (e.g. gemma3's
+5 local : 1 global, jamba's 7 mamba : 1 attn) and scanned with stacked
+parameters — one traced unit regardless of depth, which keeps 80-layer
+compiles tractable and gives the sharding rules a single leading 'unit'
+axis.  ``jax.checkpoint`` wraps the unit for training (remat)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear as sl
+from repro.configs.base import ModelConfig
+from repro.sharding import ctx as shard_ctx
+from . import layers, attention, moe, ssm
+
+
+def _sp(x, cfg):
+    """Sequence parallelism (Megatron-SP): at unit boundaries the residual
+    stream is sharded over ('model' on S) so the per-unit activations saved
+    for backward shrink by the TP degree; GSPMD turns the boundary
+    collectives into all-gather/reduce-scatter pairs.  No-op without a mesh,
+    when S doesn't divide (decode steps), or when the config disables it
+    (measured: on some stacks GSPMD answers with collective-permute churn —
+    see EXPERIMENTS.md §Perf)."""
+    if not cfg.sequence_parallel:
+        return x
+    return shard_ctx.constrain(x, "dp", "model", None)
+
+
+def _remat_split(u: int) -> tuple[int, int]:
+    """Factor u = s1 * s2 with s1 + s2 minimal (2-level remat segments)."""
+    best = (1, u)
+    d = 1
+    while d * d <= u:
+        if u % d == 0 and d + u // d < sum(best):
+            best = (d, u // d)
+        d += 1
+    return best
+
+
+# ----------------------------------------------------------------- specs
+def attn_spec(cfg: ModelConfig, kind: str) -> attention.AttnSpec:
+    return attention.AttnSpec(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta,
+        causal=True,
+        sliding_window=cfg.sliding_window if kind == "swa" else None,
+        m_rope=cfg.m_rope,
+        tile_skip=cfg.swa_tile_skip,
+    )
+
+
+def ssm_spec(cfg: ModelConfig) -> ssm.SSMSpec:
+    return ssm.SSMSpec(d_model=cfg.d_model, d_state=cfg.ssm_state,
+                       d_conv=cfg.ssm_conv, expand=cfg.ssm_expand,
+                       head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+
+
+def moe_spec(cfg: ModelConfig) -> moe.MoESpec:
+    return moe.MoESpec(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       num_experts=cfg.moe_num_experts,
+                       top_k=cfg.moe_top_k,
+                       capacity_factor=cfg.moe_capacity_factor,
+                       expert_padding=cfg.moe_expert_padding)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ init
+def _unit_init(cfg: ModelConfig, key) -> dict[str, Any]:
+    unit = {}
+    for i, (kind, is_moe) in enumerate(zip(cfg.unit_pattern, cfg.moe_pattern)):
+        key, k1, k2 = jax.random.split(key, 3)
+        lp = {"pre_norm": layers.rmsnorm_init(cfg.d_model)}
+        if kind == "ssm":
+            lp["mixer"] = ssm.init(k1, ssm_spec(cfg), _dtype(cfg))
+        else:
+            lp["mixer"] = attention.init(k1, attn_spec(cfg, kind), _dtype(cfg))
+        if cfg.d_ff > 0:
+            lp["ffn_norm"] = layers.rmsnorm_init(cfg.d_model)
+            if is_moe:
+                lp["ffn"] = moe.init(k2, moe_spec(cfg), _dtype(cfg))
+            else:
+                lp["ffn"] = layers.swiglu_init(k2, cfg.d_model, cfg.d_ff,
+                                               _dtype(cfg))
+        unit[f"layer_{i}"] = lp
+    return unit
+
+
+def init(cfg: ModelConfig, key) -> dict[str, Any]:
+    ke, kh, ku = jax.random.split(key, 3)
+    unit_keys = jax.random.split(ku, cfg.num_units)
+    units = jax.vmap(lambda k: _unit_init(cfg, k))(unit_keys)
+    return {
+        "embed": layers.embed_init(ke, cfg.vocab_size, cfg.d_model,
+                                   _dtype(cfg)),
+        "units": units,
+        "final_norm": layers.rmsnorm_init(cfg.d_model),
+        "lm_head": sl.init(kh, cfg.d_model, cfg.vocab_size, _dtype(cfg)),
+    }
+
+
+# --------------------------------------------------------------- forward
+def _apply_unit(cfg: ModelConfig, unit_params, x, positions, cache=None,
+                kv_len=None):
+    """One unit (len(unit_pattern) layers). Returns (x, new_unit_cache).
+
+    In training (cache is None) each *layer* is checkpointed: multi-layer
+    units (jamba's 8) would otherwise hold every layer's FFN/SSD
+    intermediates live at once during the unit's backward — ~10x the
+    residual-stream footprint at d_ff=24576.
+    """
+    sp = cfg.sparsity
+    new_cache = {}
+    for i, (kind, is_moe) in enumerate(zip(cfg.unit_pattern, cfg.moe_pattern)):
+        def layer_body(xx, lp, lcache, kind=kind, is_moe=is_moe):
+            lc = {}
+            h = layers.rmsnorm(lp["pre_norm"], xx, cfg.norm_eps)
+            if kind == "ssm":
+                y, nc = ssm.apply(lp["mixer"], ssm_spec(cfg), h, sp,
+                                  cache=lcache)
+            else:
+                y, nc = attention.apply(lp["mixer"], attn_spec(cfg, kind), h,
+                                        positions, sp, cache=lcache,
+                                        kv_len=kv_len)
+            xx = xx + y
+            if cfg.d_ff > 0:
+                h = layers.rmsnorm(lp["ffn_norm"], xx, cfg.norm_eps)
+                y = (moe.apply(lp["ffn"], moe_spec(cfg), h, sp) if is_moe
+                     else layers.swiglu(lp["ffn"], h, sp))
+                xx = xx + y
+            return xx, nc
+
+        # NOTE: an additional per-layer jax.checkpoint here was measured and
+        # REFUTED on jamba train (EXPERIMENTS §Perf extras): +15% FLOPs,
+        # +12% collectives, memory flat — the unit-level checkpoint already
+        # bounds the backward working set
+        lcache = None if cache is None else cache[f"layer_{i}"]
+        x, nc = layer_body(x, unit_params[f"layer_{i}"], lcache)
+        if nc is not None:
+            new_cache[f"layer_{i}"] = nc
+    return x, (new_cache or None)
+
+
+def backbone(params, cfg: ModelConfig, x, positions):
+    """Embedded inputs [B, S, D] -> final hidden [B, S, D] (no cache).
+
+    Two-level rematerialized scan over units: with U units split s1 x s2,
+    backward-saved residual-stream carries drop from U to ~(s1 + s2) —
+    e.g. mixtral's 56 units save 15 x [B,S,D] instead of 56 (the dominant
+    training temp at 4k sequence length).
+    """
+    def unit_fn(carry, unit_params):
+        out, _ = _apply_unit(cfg, unit_params, carry, positions)
+        return _sp(out, cfg), None
+
+    if cfg.remat:
+        unit_fn = jax.checkpoint(unit_fn)
+    s1, s2 = (_remat_split(cfg.num_units)
+              if cfg.remat and cfg.remat_2level else (1, cfg.num_units))
+    x = _sp(x, cfg)
+    if s1 == 1:
+        x, _ = jax.lax.scan(unit_fn, x, params["units"])
+    else:
+        seg_params = jax.tree_util.tree_map(
+            lambda a: a.reshape((s1, s2) + a.shape[1:]), params["units"])
+
+        def seg_fn(carry, seg):
+            out, _ = jax.lax.scan(unit_fn, carry, seg)
+            return out, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(seg_fn), x, seg_params)
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens, extra_embeds=None):
+    """Token ids [B, S] (+ optional stub modality embeddings) -> [B, S, D]."""
+    x = layers.embed(params["embed"], tokens).astype(_dtype(cfg))
+    if extra_embeds is not None:
+        # modality frontend stub: precomputed embeddings are summed into the
+        # reserved prefix positions (vision/audio tokens)
+        n = extra_embeds.shape[1]
+        x = x.at[:, :n].add(extra_embeds.astype(_dtype(cfg)))
+    return x
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    return layers.unembed(params["lm_head"], hidden, cfg.sparsity)
+
+
+def chunked_xent(lm_head, cfg: ModelConfig, h, labels):
+    """Sequence-chunked LM head + next-token cross entropy.
+
+    Caps the [*, chunk, V] logits transient — with gemma3's 262k vocab a
+    full-sequence fp32 logits tensor would dominate peak memory.
+    labels < 0 are masked out.
+    """
+    b, s, _ = h.shape
+    chunk = min(cfg.logits_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nch = (s + pad) // chunk
+    hs = h.reshape(b, nch, chunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nch, chunk).transpose(1, 0, 2)
+
+    def chunk_loss(carry, xs):
+        hc, lc = xs
+        logits = layers.unembed(lm_head, hc, cfg.sparsity).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        nll = (lse - picked) * valid
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    # remat: without this the scan saves per-chunk logits for the backward
+    # pass (~[S/chunk, B, chunk, V] fp32 — dominates peak memory at 262k
+    # vocab); recomputing them is a few % of step FLOPs
+    chunk_loss = jax.checkpoint(chunk_loss)
+    (total, count), _ = jax.lax.scan(
+        chunk_loss, (jnp.float32(0), jnp.float32(0)), (hs, ls))
+    return total / jnp.maximum(count, 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, labels, extra_embeds=None):
+    """Next-token cross entropy, sequence-chunked LM head (peak-memory cap)."""
+    x = embed_tokens(params, cfg, tokens, extra_embeds)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h = backbone(params, cfg, x, positions)
+    return chunked_xent(params["lm_head"], cfg, h, labels)
+
+
+# ------------------------------------------------------------- inference
+def make_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked [U, ...] cache pytree matching the unit scan."""
+    kv_dtype = jnp.dtype(cfg.kv_cache_dtype)
+
+    def one_unit(_):
+        c = {}
+        for i, kind in enumerate(cfg.unit_pattern):
+            if kind == "ssm":
+                c[f"layer_{i}"] = ssm.make_cache(ssm_spec(cfg), batch)
+            else:
+                c[f"layer_{i}"] = attention.make_cache(
+                    attn_spec(cfg, kind), batch, max_len, kv_dtype)
+        return c
+
+    return jax.vmap(one_unit)(jnp.arange(cfg.num_units))
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int | None = None,
+            extra_embeds=None):
+    """Full-prompt forward; returns (logits_last [B, V], cache, kv_len)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = embed_tokens(params, cfg, tokens, extra_embeds)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    sp = cfg.sparsity
+
+    def unit_fn(carry, unit_params):
+        h, = carry
+        new_cache = {}
+        xx = h
+        for i, (kind, is_moe) in enumerate(
+                zip(cfg.unit_pattern, cfg.moe_pattern)):
+            lp = unit_params[f"layer_{i}"]
+            hh = layers.rmsnorm(lp["pre_norm"], xx, cfg.norm_eps)
+            if kind == "ssm":
+                spec = ssm_spec(cfg)
+                y, cache_i = ssm.apply(lp["mixer"], spec, hh, sp)
+            else:
+                spec = attn_spec(cfg, kind)
+                y, _ = attention.apply(lp["mixer"], spec, hh, positions, sp)
+                cache_i = attention.build_prefill_cache(
+                    lp["mixer"], spec, hh, positions, sp, max_len,
+                    jnp.dtype(cfg.kv_cache_dtype))
+            new_cache[f"layer_{i}"] = cache_i
+            xx = xx + y
+            if cfg.d_ff > 0:
+                hh = layers.rmsnorm(lp["ffn_norm"], xx, cfg.norm_eps)
+                y = (moe.apply(lp["ffn"], moe_spec(cfg), hh, sp) if is_moe
+                     else layers.swiglu(lp["ffn"], hh, sp))
+                xx = xx + y
+        return (_sp(xx, cfg),), new_cache
+
+    (h,), cache = jax.lax.scan(unit_fn, (_sp(x, cfg),), params["units"])
+    h = layers.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_fn(params, cfg, h[:, -1:, :])[:, 0]
+    kv_len = jnp.full((b,), s, jnp.int32)
+    return logits, cache, kv_len
+
+
+def serve_step(params, cfg: ModelConfig, token, cache, kv_len):
+    """One-token decode. token: [B] int32; cache: stacked unit cache;
+    kv_len: [B] current lengths. Returns (logits [B, V], cache, kv_len+1)."""
+    b = token.shape[0]
+    x = layers.embed(params["embed"], token[:, None]).astype(_dtype(cfg))
+    positions = kv_len[:, None]
+
+    def unit_fn(carry, xs):
+        h = carry
+        unit_params, unit_cache = xs
+        out, new_cache = _apply_unit(cfg, unit_params, h, positions,
+                                     cache=unit_cache, kv_len=kv_len)
+        return out, new_cache
+
+    x, new_cache = jax.lax.scan(unit_fn, x, (params["units"], cache))
+    h = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, cfg, h)[:, 0]
+    return logits, new_cache, kv_len + 1

@@ -1,0 +1,3 @@
+"""Optimizer substrate: pure-JAX AdamW (+int8 state), schedules."""
+from .adamw import AdamWConfig, OptState, init, update, global_norm  # noqa: F401
+from .schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,2 @@
+"""Distributed runtime: step functions, train/serve loops, fault tolerance."""
+from . import steps  # noqa: F401

@@ -1,0 +1,37 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and reshard.
+
+On node failure the job restarts with fewer (or later, more) hosts: the
+launcher calls ``elastic_mesh()`` to build the largest valid mesh from
+whatever devices exist, then ``reshard()`` moves restored host arrays onto
+it.  Checkpoints are stored as host numpy (checkpoint/checkpointer.py), so
+restore-time resharding is exact regardless of the previous topology.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.sharding import rules
+
+
+def elastic_mesh(prefer_model: int = 16):
+    """Largest (data, model) mesh over the available devices.
+
+    model axis targets ``prefer_model`` but degrades by halving so TP stays
+    valid when a slice loses chips (model must divide head/ffn dims; the
+    divisibility-aware rules handle the rest).
+    """
+    n = len(jax.devices())
+    model = prefer_model
+    while model > 1 and n % model:
+        model //= 2
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def reshard(tree, mesh):
+    """Place a (host or device) pytree onto ``mesh`` per the sharding rules."""
+    sh = rules.params_shardings(tree, mesh)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s),
+        tree, sh)

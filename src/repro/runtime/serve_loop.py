@@ -1,0 +1,81 @@
+"""Batched serving loop: prefill + decode with SlideSparse-packed weights.
+
+Mirrors the paper's three phases (§4): the offline packer output is applied
+at load time via ``pack_params`` (prune -> quantize -> Phi -> compress),
+then per-request execution runs the fused-kernel linears.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import linear as sl
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_s: float
+    decode_s: float
+    tokens_generated: int
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.tokens_generated / max(self.decode_s, 1e-9)
+
+
+def pack_params(params: dict[str, Any], cfg: ModelConfig) -> dict[str, Any]:
+    """Load-time compression (§4.3): walk the tree and run linear.prepare on
+    every SparseLinear leaf-dict (identified by holding a 2-D 'w')."""
+    sp = cfg.sparsity
+    if sp.mode in ("dense", "masked") or sp.pattern is None:
+        return params
+
+    def walk(node, name=""):
+        if isinstance(node, dict):
+            if name in ("embed", "router"):
+                return node  # lookup tables / routers are not GEMMs
+            if set(node) == {"w"} and node["w"].ndim == 2 \
+                    and node["w"].shape[-1] % sp.pattern[1] == 0:
+                return sl.prepare(node, sp)
+            return {k: walk(v, k) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
+def generate(params, cfg: ModelConfig, batch, max_new_tokens: int,
+             greedy: bool = True, key=None):
+    """Prefill the prompt batch then decode ``max_new_tokens`` steps.
+    Returns (tokens [B, max_new_tokens], ServeStats)."""
+    b, s = batch["tokens"].shape
+    max_len = s + max_new_tokens
+
+    t0 = time.time()
+    logits, cache, kv_len = jax.block_until_ready(
+        M.prefill(params, cfg, batch, max_len=max_len))[0], None, None
+    logits, cache, kv_len = M.prefill(params, cfg, batch, max_len=max_len)
+    logits = jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    step = jax.jit(lambda p, tok, c, kl: M.serve_step(p, cfg, tok, c, kl))
+    outs = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    t1 = time.time()
+    for i in range(max_new_tokens):
+        outs.append(tok)
+        logits, cache, kv_len = step(params, tok, cache, kv_len)
+        if greedy or key is None:
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t1
+    return jnp.stack(outs, 1), ServeStats(t_prefill, t_decode,
+                                          int(b * max_new_tokens))

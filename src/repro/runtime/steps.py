@@ -1,0 +1,63 @@
+"""The jit-able step functions shared by the dry-run, trainer and server."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw, schedule
+
+
+def train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+               params, opt_state, batch, accum: int = 1):
+    """loss -> grads -> global-norm clip -> AdamW -> new state.
+
+    accum > 1: gradient accumulation — the global batch is split into
+    ``accum`` microbatches processed sequentially (scan), with fp32 grad
+    accumulation.  Same math as one big batch; activation working set
+    shrinks ~accum x (the standard lever when a cell's train shape
+    overflows HBM).
+    """
+    if accum <= 1:
+        loss, grads = jax.value_and_grad(M.loss_fn)(params, cfg, batch)
+    else:
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+            batch)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def mb_step(carry, mb):
+            loss_sum, acc = carry
+            l, g = jax.value_and_grad(M.loss_fn)(params, cfg, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), acc, g)
+            return (loss_sum + l, acc), None
+
+        (loss, grads), _ = jax.lax.scan(
+            mb_step, (jnp.float32(0), zeros), mbs)
+        loss = loss / accum
+        grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+    lr_scale = schedule.warmup_cosine(opt_state.step)
+    params, opt_state, metrics = adamw.update(params, grads, opt_state,
+                                              opt_cfg, lr_scale)
+    metrics = dict(metrics, loss=loss)
+    return params, opt_state, metrics
+
+
+def prefill_step(cfg: ModelConfig, max_len: int, params, batch):
+    return M.prefill(params, cfg, batch, max_len=max_len)
+
+
+def serve_step(cfg: ModelConfig, params, token, cache, kv_len):
+    return M.serve_step(params, cfg, token, cache, kv_len)
+
+
+def bind(fn, *static):
+    """functools.partial preserving a useful __name__ for HLO dumps."""
+    out = functools.partial(fn, *static)
+    out.__name__ = fn.__name__  # type: ignore[attr-defined]
+    return out

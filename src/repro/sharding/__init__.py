@@ -1,0 +1,5 @@
+"""Sharding rules: logical-axis -> mesh-axis with divisibility fallback."""
+from .rules import (  # noqa: F401
+    param_spec, params_shardings, batch_spec, batch_shardings,
+    cache_spec, cache_shardings, opt_state_shardings,
+)

@@ -1,0 +1,63 @@
+"""Mesh context for in-model sharding constraints.
+
+Modules like moe.py need to constrain big transients (the dispatch tensor)
+whose shardings GSPMD cannot infer.  They call ``constrain(x, roles)`` with
+abstract roles; if no mesh is active (unit tests, single-device smoke) it is
+a no-op, so model code stays mesh-agnostic.
+Roles: 'dp' -> (pod, data) batch axes; 'model' -> TP/EP axis; None.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def _resolve(role, mesh):
+    if role is None:
+        return None
+    if role == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if axes else None
+    if role in mesh.axis_names:
+        return role
+    return None
+
+
+def constrain(x, *roles):
+    """with_sharding_constraint by role names; no-op without an active mesh.
+    A dim is left unconstrained when its size doesn't divide the axis."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    for dim, role in enumerate(roles):
+        ax = _resolve(role, mesh)
+        if ax is None:
+            spec.append(None)
+            continue
+        n = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            n *= sizes[a]
+        spec.append(ax if x.shape[dim] % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,240 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Mesh axes (DESIGN.md §4):
+  pod   — DCN data parallelism (2 pods); only gradient all-reduce crosses it
+  data  — FSDP: parameters/optimizer state sharded; batch sharded
+  model — TP/EP: heads / FFN hidden / vocab / experts
+
+Rules are name+rank based over the parameter pytree (no framework metadata
+needed).  Every rule degrades gracefully: a dim is only sharded if it is
+divisible by the axis size, so one rule set serves all ten architectures,
+their reduced smoke configs, and arbitrary meshes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+REPLICATED_NAMES = {"g", "A_log", "dt_bias", "D", "s_w", "_k"}
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _dp_axes(mesh: Mesh):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return tuple(axes) if axes else None
+
+
+def _fits(shape, dim, size):
+    return size > 1 and shape[dim] % size == 0
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+    last = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+    model = _axis(mesh, "model")
+    data = _axis(mesh, "data")
+
+    if last in REPLICATED_NAMES or nd <= 1:
+        return P()
+    if last == "conv_w":  # [*, K, d_inner]
+        spec = [None] * nd
+        if _fits(shape, nd - 1, model):
+            spec[nd - 1] = "model"
+        return P(*spec)
+    if "router" in names:
+        return P(*( [None] * nd ))
+
+    # weight matrices: trailing dims are (out, in); leading dims are
+    # (unit-stack) and, for MoE expert stacks, (experts)
+    spec: list = [None] * nd
+    out_dim, in_dim = nd - 2, nd - 1
+    expert_dim = 1 if nd == 4 else None
+
+    if expert_dim is not None and _fits(shape, expert_dim, model):
+        # expert parallelism: tokens travel, weights stay (jamba 16e on 16)
+        spec[expert_dim] = "model"
+        if _fits(shape, in_dim, data):
+            spec[in_dim] = "data"           # FSDP on the contraction dim
+        return P(*spec)
+
+    if expert_dim is not None and "w_down" in names:
+        # non-EP expert down-projection: the MoE hidden is 'model'-sharded
+        # on F (see moe.apply constraints), so the contraction dim must be
+        # 'model' here — the generic out:model/in:data pairing would force
+        # an all-gather of the [G,E,C,F] hidden on every layer
+        if _fits(shape, in_dim, model):
+            spec[in_dim] = "model"
+        if _fits(shape, out_dim, data):
+            spec[out_dim] = "data"
+        return P(*spec)
+
+    if _fits(shape, out_dim, model):
+        spec[out_dim] = "model"             # tensor parallelism
+    elif _fits(shape, in_dim, model):
+        spec[in_dim] = "model"
+    if spec[in_dim] is None and _fits(shape, in_dim, data):
+        spec[in_dim] = "data"               # FSDP
+    elif spec[out_dim] is None and _fits(shape, out_dim, data):
+        spec[out_dim] = "data"
+    return P(*spec)
+
+
+def params_shardings(params, mesh: Mesh, serve_tp_only: bool = False):
+    """serve_tp_only (hillclimb A): shard weights over 'model' ONLY —
+    replicated across 'data'/'pod', so decode never re-gathers FSDP shards
+    per step.  Valid when params_bytes/model_size fits HBM (all assigned
+    archs except jamba-398B)."""
+    if serve_tp_only:
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: NamedSharding(
+                mesh, _tp_only_spec(path, leaf, mesh)), params)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        params)
+
+
+def _tp_only_spec(path, leaf, mesh: Mesh) -> P:
+    spec = list(param_spec(path, leaf, mesh))
+    cleaned = []
+    for ax in spec:
+        axes = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+        axes = tuple(a for a in axes if a == "model")
+        cleaned.append(axes[0] if len(axes) == 1 else (axes or None))
+    return P(*cleaned)
+
+
+def batch_spec(leaf, mesh: Mesh, batch_dim: int = 0) -> P:
+    """Batch inputs: shard the batch dim over (pod, data) when divisible."""
+    dp = _dp_axes(mesh)
+    nd = len(leaf.shape)
+    spec = [None] * nd
+    if dp:
+        size = int(np.prod([_axis(mesh, a) for a in dp]))
+        if leaf.shape[batch_dim] % size == 0:
+            spec[batch_dim] = dp
+    return P(*spec)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf, mesh)), batch)
+
+
+def cache_spec(path, leaf, mesh: Mesh) -> P:
+    """KV/SSM cache sharding for serving.
+
+    attn 'k'/'v': [U, B, S, KVH, HD]  — B over (pod,data) when divisible
+        (else S takes the dp axes too: long_500k batch=1), and S over
+        'model': decode attention then keeps QK^T local per S-shard and
+        only psums the softmax statistics and the tiny p@V partials —
+        sharding HD or KVH instead makes GSPMD all-gather the whole cache
+        every step (measured: 53 GB/step on phi3 decode_32k).
+    ssm 'conv':   [U, B, K-1, dI]     — B over dp, dI over model.
+    ssm 'ssd':    [U, B, H, P, N]     — B over dp, H over model.
+    'enc_out':    [B, T, D]           — B over dp, D over model.
+    """
+    names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+    last = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+    model = _axis(mesh, "model")
+    dp = _dp_axes(mesh)
+    dp_size = int(np.prod([_axis(mesh, a) for a in (dp or ())])) if dp else 1
+    spec: list = [None] * nd
+
+    if last in ("k", "v", "k_scale", "v_scale") and nd == 5:
+        seq_axes: list = []
+        if dp and shape[1] % dp_size == 0 and shape[1] >= dp_size:
+            spec[1] = dp
+        elif dp:
+            seq_axes.extend(dp)             # batch=1: S takes dp too
+        if model > 1:
+            seq_axes.append("model")
+        n = 1
+        for a in seq_axes:
+            n *= _axis(mesh, a)
+        if seq_axes and shape[2] % n == 0:
+            spec[2] = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
+        return P(*spec)
+    if last == "conv" and nd == 4:
+        if dp and shape[1] % dp_size == 0:
+            spec[1] = dp
+        if _fits(shape, 3, model):
+            spec[3] = "model"
+        return P(*spec)
+    if last == "ssd" and nd == 5:
+        if dp and shape[1] % dp_size == 0:
+            spec[1] = dp
+        if _fits(shape, 2, model):
+            spec[2] = "model"
+        return P(*spec)
+    if last == "enc_out" and nd == 3:
+        if dp and shape[0] % dp_size == 0:
+            spec[0] = dp
+        if _fits(shape, 2, model):
+            spec[2] = "model"
+        return P(*spec)
+    # fallback: shard the largest divisible dim over dp
+    if dp:
+        sizes = list(shape)
+        order = sorted(range(nd), key=lambda i: -sizes[i])
+        for i in order:
+            if sizes[i] % dp_size == 0 and sizes[i] >= dp_size:
+                spec[i] = dp
+                break
+    return P(*spec)
+
+
+def cache_shardings(cache, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_spec(path, leaf, mesh)),
+        cache)
+
+
+def opt_state_shardings(opt_state, params_sh, mesh: Mesh):
+    """Adam moments mirror their parameters exactly (both fp32 and the
+    shape-preserving int8 layout); int8 block scales inherit the parameter
+    spec on leading dims, with the blocked last dim sharded only when the
+    block count still divides the axis."""
+    import repro.optim.adamw as adamw
+
+    def mirror(p_sh, m):
+        return NamedSharding(mesh, p_sh.spec)
+
+    mu_sh = jax.tree_util.tree_map(mirror, params_sh, opt_state.mu)
+    nu_sh = jax.tree_util.tree_map(mirror, params_sh, opt_state.nu)
+
+    if opt_state.mu_scale is None:
+        scale_sh = None
+    else:
+        def scales_sh(p_sh, scale_leaf):
+            spec = list(p_sh.spec) + [None] * (
+                len(scale_leaf.shape) - len(p_sh.spec))
+            spec = spec[:len(scale_leaf.shape)]
+            last = len(scale_leaf.shape) - 1
+            ax = spec[last]
+            if ax is not None:
+                n = 1
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    n *= _axis(mesh, a)
+                if scale_leaf.shape[last] % max(n, 1):
+                    spec[last] = None
+            return NamedSharding(mesh, P(*spec))
+
+        scale_sh = (
+            jax.tree_util.tree_map(scales_sh, params_sh, opt_state.mu_scale),
+            jax.tree_util.tree_map(scales_sh, params_sh, opt_state.nu_scale))
+    step_sh = NamedSharding(mesh, P())
+    return adamw.OptState(
+        step_sh, mu_sh, nu_sh,
+        scale_sh[0] if scale_sh else None,
+        scale_sh[1] if scale_sh else None)

@@ -1,0 +1,135 @@
+"""Roofline machinery: jaxpr cost model + HLO collective parsing."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import analysis, jaxpr_cost
+
+
+# ------------------------------------------------------------ jaxpr flops
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b  # [M,K]@[K,N]: 2*M*N*K
+
+    a = jnp.zeros((8, 32))
+    b = jnp.zeros((32, 16))
+    c = jaxpr_cost.of_function(f, a, b)
+    assert c["flops"] == 2 * 8 * 16 * 32
+
+
+def test_scan_multiplies_trip_count():
+    w = jnp.zeros((16, 16))
+
+    def step(x, _):
+        return x @ w, None
+
+    def f(x):
+        out, _ = jax.lax.scan(step, x, None, length=7)
+        return out
+
+    c = jaxpr_cost.of_function(f, jnp.zeros((4, 16)))
+    assert c["flops"] == 7 * 2 * 4 * 16 * 16
+
+
+def test_nested_scan_and_remat():
+    w = jnp.zeros((8, 8))
+
+    def inner(x, _):
+        return x @ w, None
+
+    def outer(x, _):
+        y, _ = jax.lax.scan(jax.checkpoint(inner), x, None, length=3)
+        return y, None
+
+    def f(x):
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    c = jaxpr_cost.of_function(f, jnp.zeros((2, 8)))
+    assert c["flops"] == 5 * 3 * 2 * 2 * 8 * 8
+
+
+def test_grad_includes_backward_flops():
+    w = jnp.ones((16, 16))
+
+    def loss(x):
+        return jnp.sum((x @ w) ** 2)
+
+    fwd = jaxpr_cost.of_function(loss, jnp.ones((4, 16)))["flops"]
+    both = jaxpr_cost.of_function(jax.grad(loss), jnp.ones((4, 16)))["flops"]
+    assert both >= 2 * fwd  # dx and (here unused) dw paths
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    c = jaxpr_cost.of_function(f, jnp.zeros((3, 4, 5)), jnp.zeros((3, 5, 6)))
+    assert c["flops"] == 2 * 3 * 4 * 6 * 5
+
+
+# ------------------------------------------------------ HLO text parsing
+HLO_SAMPLE = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %x = f32[128,256] get-tuple-element(%p), index=1
+  %ag = f32[128,256] all-gather(%x), replica_groups=[16,16]<=[256]T(1,0), dimensions={0}
+  %ar = f32[128,256] all-reduce(%ag), replica_groups=[16,16]<=[256]T(1,0), to_apply=%add
+  ROOT %t = (s32[], f32[128,256]) tuple(%x, %ar)
+}
+
+%cond (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  ROOT %lt = pred[] compare(%p, %p), direction=LT
+}
+
+ENTRY %main (arg: f32[128,256]) -> f32[128,256] {
+  %arg = f32[128,256] parameter(0)
+  %w = (s32[], f32[128,256]) while(%arg), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  %cp = f32[64,64] collective-permute(%arg), source_target_pairs={{0,1}}
+  ROOT %out = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parse_trip_counts():
+    out = analysis.collective_bytes(HLO_SAMPLE, 256)
+    size = 128 * 256 * 4
+    g = 16
+    assert out["all-gather"] == pytest.approx(12 * size * (g - 1) / g)
+    assert out["all-reduce"] == pytest.approx(12 * 2 * size * (g - 1) / g)
+    assert out["collective-permute"] == pytest.approx(64 * 64 * 4)
+
+
+def test_roofline_terms_and_dominance():
+    r = analysis.Roofline(flops=197e12 * 256, hbm_bytes=0.0, coll_bytes=0.0,
+                          coll_breakdown={}, chips=256,
+                          model_flops=197e12 * 256 * 0.5)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.dominant == "compute"
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(0.5)
+
+    r2 = analysis.Roofline(flops=0, hbm_bytes=819e9 * 256 * 2.0,
+                           coll_bytes=0.0, coll_breakdown={}, chips=256)
+    assert r2.t_memory == pytest.approx(2.0)
+    assert r2.dominant == "memory"
+
+
+def test_model_flops_estimate_scale():
+    from repro.configs import registry, shapes as shp
+    cfg = registry.get("phi3-medium-14b")
+    tr = analysis.model_flops_estimate(cfg, shp.SHAPES["train_4k"])
+    # ~6 * 13e9 active * 1.05M tokens ~ 8e16 (order of magnitude check)
+    assert 2e16 < tr < 3e17
+    dec = analysis.model_flops_estimate(cfg, shp.SHAPES["decode_32k"])
+    assert dec < tr / 1000  # one token per sequence vs 4096

@@ -1,0 +1,127 @@
+"""Attention equivalences: chunked-vs-exact, GQA grouping, SWA tile skip."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import attention
+
+
+def _spec(**kw):
+    base = dict(d_model=64, num_heads=8, num_kv_heads=2, head_dim=16,
+                causal=True, sliding_window=None, q_chunk=16, kv_chunk=16)
+    base.update(kw)
+    return attention.AttnSpec(**base)
+
+
+def _exact_reference(spec, q, k, v):
+    """O(S^2) dense attention oracle with the same masks."""
+    b, s, h, hd = q.shape
+    rep = h // k.shape[2]
+    kf = np.repeat(np.asarray(k, np.float64), rep, axis=2)
+    vf = np.repeat(np.asarray(v, np.float64), rep, axis=2)
+    qf = np.asarray(q, np.float64) * hd ** -0.5
+    scores = np.einsum("bqhd,bkhd->bhqk", qf, kf)
+    qpos = np.arange(s)[:, None]
+    kpos = np.arange(s)[None, :]
+    ok = np.ones((s, s), bool)
+    if spec.causal:
+        ok &= qpos >= kpos
+    if spec.sliding_window is not None:
+        ok &= (qpos - kpos) < spec.sliding_window
+    scores = np.where(ok, scores, -1e30)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+@pytest.mark.parametrize("window", [None, 8, 24])
+@pytest.mark.parametrize("s", [48, 64])
+def test_chunked_matches_exact(window, s):
+    spec = _spec(sliding_window=window)
+    rng = np.random.default_rng(0)
+    b, h, kvh, hd = 2, 8, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    out = attention._chunked_sdpa(spec, q, k, v)
+    np.testing.assert_allclose(np.asarray(out), _exact_reference(spec, q, k, v),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window,s,cq", [(8, 64, 16), (16, 128, 16),
+                                         (24, 96, 32)])
+def test_swa_tile_skip_equivalent(window, s, cq):
+    """Hillclimb C: windowed KV slicing is numerically identical to the
+    full masked scan."""
+    rng = np.random.default_rng(1)
+    b, h, kvh, hd = 2, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    spec0 = _spec(sliding_window=window, q_chunk=cq, kv_chunk=cq,
+                  tile_skip=False)
+    spec1 = dataclasses.replace(spec0, tile_skip=True)
+    out0 = attention._chunked_sdpa(spec0, q, k, v)
+    out1 = attention._chunked_sdpa(spec1, q, k, v)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_swa_tile_skip_cuts_flops():
+    """The skip variant lowers to fewer dot FLOPs (that's its point)."""
+    from repro.launch import jaxpr_cost
+    rng = np.random.default_rng(2)
+    b, s, h, kvh, hd = 1, 512, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    spec0 = _spec(sliding_window=32, q_chunk=64, kv_chunk=64)
+    spec1 = dataclasses.replace(spec0, tile_skip=True)
+    f0 = jaxpr_cost.of_function(
+        lambda a, b_, c: attention._chunked_sdpa(spec0, a, b_, c), q, k, v)
+    f1 = jaxpr_cost.of_function(
+        lambda a, b_, c: attention._chunked_sdpa(spec1, a, b_, c), q, k, v)
+    assert f1["flops"] < 0.5 * f0["flops"], (f0["flops"], f1["flops"])
+
+
+def test_decode_matches_prefix_of_chunked():
+    """Decoding position s with a cache equals row s of full attention."""
+    spec = _spec(sliding_window=None)
+    rng = np.random.default_rng(3)
+    b, s, h, kvh, hd = 2, 33, 8, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    full = attention._chunked_sdpa(spec, q, k, v)
+    kv_len = jnp.full((b,), s, jnp.int32)
+    dec = attention._decode_sdpa(spec, q[:, -1:], k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(dec)[:, 0],
+                               np.asarray(full)[:, -1], rtol=2e-4, atol=2e-4)
+
+
+def test_int8_kv_cache_decode_close():
+    """int8 KV cache decode tracks the bf16-cache decode closely."""
+    import dataclasses as dc
+    from repro.configs import registry
+    from repro.models import model as M
+    cfg = registry.smoke_config("phi3-medium-14b")
+    cfg8 = dc.replace(cfg, kv_cache_dtype="int8")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                                          cfg.vocab_size)}
+    lg0, c0, kl0 = M.prefill(params, cfg, batch, max_len=32)
+    lg8, c8, kl8 = M.prefill(params, cfg8, batch, max_len=32)
+    assert jax.tree_util.tree_leaves(c8)[0] is not None
+    tok = jnp.argmax(lg0, -1).astype(jnp.int32)
+    d0, _, _ = M.serve_step(params, cfg, tok, c0, kl0)
+    d8, _, _ = M.serve_step(params, cfg8, tok, c8, kl8)
+    # int8 KV quantization noise is ~1% relative on logits
+    rel = np.abs(np.asarray(d8) - np.asarray(d0)) / (
+        np.abs(np.asarray(d0)) + 1.0)
+    assert rel.mean() < 0.02, rel.mean()
+    # greedy argmax should almost always agree
+    agree = (np.argmax(np.asarray(d8), -1) == np.argmax(np.asarray(d0), -1))
+    assert agree.mean() >= 0.5

@@ -1,0 +1,99 @@
+"""Algorithm 2 (offline weight packer): App B correctness properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.patterns import Pattern, HardwarePattern, SlideDecomposition, TWO_FOUR
+from repro.core import packer
+
+
+def _random_pattern_rows(rng, rows, groups, z, l, dense_groups=False):
+    """Rows of G groups each with <= Z of L non-zeros (exactly Z if dense_groups)."""
+    w = np.zeros((rows, groups * l), dtype=np.float32)
+    for r in range(rows):
+        for g in range(groups):
+            cnt = z if dense_groups else rng.integers(0, z + 1)
+            pos = rng.choice(l, size=cnt, replace=False)
+            vals = rng.standard_normal(cnt)
+            vals[vals == 0] = 1.0
+            w[r, g * l + pos] = vals
+    return w
+
+
+family = st.integers(3, 8)
+
+
+@settings(max_examples=40, deadline=None)
+@given(family, st.integers(1, 4), st.integers(1, 3), st.booleans(), st.integers(0, 2**31 - 1))
+def test_pack_compliant_lossless_matches_ref(n, groups, rows, dense_groups, seed):
+    rng = np.random.default_rng(seed)
+    dec = SlideDecomposition(Pattern.from_family(n), TWO_FOUR)
+    w = _random_pattern_rows(rng, rows, groups, 2 * n - 2, 2 * n, dense_groups)
+    ws = np.asarray(packer.pack_slided(jnp.asarray(w), dec))
+    # (a) hardware compliance: every 4-window has <= 2 non-zeros (App B.1)
+    assert packer.is_hw_compliant(ws, dec)
+    # (b) losslessness: unslide reconstructs exactly (each nz assigned once)
+    rec = np.asarray(packer.unslide(jnp.asarray(ws), dec))
+    np.testing.assert_array_equal(rec, w)
+    # (c) the vectorized packer == the paper's literal pseudocode
+    np.testing.assert_array_equal(ws, packer.pack_slided_ref(w, dec))
+    # (d) non-zero multiset preserved
+    assert sorted(ws[ws != 0].tolist()) == sorted(w[w != 0].tolist())
+
+
+@settings(max_examples=20, deadline=None)
+@given(family, st.integers(0, 2**31 - 1))
+def test_pack_deterministic(n, seed):
+    rng = np.random.default_rng(seed)
+    dec = SlideDecomposition(Pattern.from_family(n), TWO_FOUR)
+    w = jnp.asarray(_random_pattern_rows(rng, 2, 3, 2 * n - 2, 2 * n))
+    a = np.asarray(packer.pack_slided(w, dec))
+    b = np.asarray(packer.pack_slided(w, dec))
+    np.testing.assert_array_equal(a, b)  # App B.1 "Determinism"
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 6), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_general_zl_packing(m, n_minus_m_plus, t, seed):
+    """Thm 2: greedy succeeds whenever w*M >= Z (general Z:L -> M:N)."""
+    n = m + 1  # stride-1 overlap keeps geometry valid for arbitrary t
+    l = n + (n - m) * t
+    w_count = t + 1
+    z = min(w_count * m, l)  # max capacity
+    pat, hw = Pattern(z, l), HardwarePattern(m, n)
+    dec = SlideDecomposition(pat, hw)
+    rng = np.random.default_rng(seed)
+    w = _random_pattern_rows(rng, 2, 2, z, l)
+    ws = packer.pack_slided(jnp.asarray(w), dec)
+    assert np.asarray(
+        (np.asarray(ws).reshape(-1, n) != 0).sum(-1) <= m).all()
+    np.testing.assert_array_equal(np.asarray(packer.unslide(ws, dec)), w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(family, st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_prune_to_pattern(n, groups, seed):
+    rng = np.random.default_rng(seed)
+    pat = Pattern.from_family(n)
+    w = jnp.asarray(rng.standard_normal((4, groups * pat.l)), jnp.float32)
+    p = packer.prune_to_pattern(w, pat)
+    assert packer.pattern_violations(p, pat) == 0
+    # magnitude property: kept values are the top-Z per group
+    pg = np.asarray(p).reshape(4, groups, pat.l)
+    wg = np.asarray(w).reshape(4, groups, pat.l)
+    for r in range(4):
+        for g in range(groups):
+            kept = np.abs(wg[r, g])[pg[r, g] != 0]
+            dropped = np.abs(wg[r, g])[pg[r, g] == 0]
+            if kept.size and dropped.size:
+                assert kept.min() >= dropped.max() - 1e-7
+
+
+def test_pack_batched_shapes():
+    dec = SlideDecomposition(Pattern(6, 8), TWO_FOUR)
+    w = jnp.zeros((2, 5, 16))
+    assert packer.pack_slided(w, dec).shape == (2, 5, 24)
+    with pytest.raises(ValueError):
+        packer.pack_slided(jnp.zeros((2, 12)), dec)

@@ -1,0 +1,69 @@
+"""Per-token dynamic quantization semantics (Alg. 1 passes 1-2)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(8, 256), st.integers(0, 2**31 - 1))
+def test_int8_roundtrip_error_bound(rows, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, k)) * 10, jnp.float32)
+    qx = quant.quantize_int8(x)
+    assert qx.q.dtype == jnp.int8
+    err = np.abs(np.asarray(quant.dequantize(qx)) - np.asarray(x))
+    # round-to-nearest: |err| <= scale/2 elementwise
+    bound = np.asarray(qx.scale) / 2 + 1e-7
+    assert (err <= bound).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_scale_is_per_row_absmax(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    qx = quant.quantize_int8(x)
+    np.testing.assert_allclose(
+        np.asarray(qx.scale[:, 0]),
+        np.abs(np.asarray(x)).max(-1) / 127.0, rtol=1e-6)
+    # the max element quantizes to exactly +-127
+    assert (np.abs(np.asarray(qx.q)).max(-1) == 127).all()
+
+
+def test_zero_row_safe():
+    x = jnp.zeros((2, 16), jnp.float32)
+    qx = quant.quantize_int8(x)
+    assert np.isfinite(np.asarray(qx.scale)).all()
+    assert (np.asarray(qx.q) == 0).all()
+
+
+def test_weight_quant_preserves_zeros():
+    """Zeros stay exactly zero -> quantization commutes with the pattern."""
+    w = jnp.asarray([[0.0, 1.0, -2.0, 0.0, 0.5, 0.0, 0.0, 3.0]])
+    qw = quant.quantize_weight_int8_rowwise(w)
+    assert (np.asarray(qw.q)[np.asarray(w) == 0] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_int8_matmul_dequant_close_to_fp(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((8, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 128)), jnp.float32)
+    y = quant.int8_matmul_dequant(
+        quant.quantize_int8(x), quant.quantize_weight_int8_rowwise(w))
+    y_fp = np.asarray(x) @ np.asarray(w).T
+    # w8a8 error is ~1% relative on gaussian data
+    rel = np.abs(np.asarray(y) - y_fp) / (np.abs(y_fp) + 1.0)
+    assert rel.mean() < 0.02
+
+
+def test_fp8_quantize():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 32)),
+                    jnp.float32)
+    qx = quant.quantize_fp8(x)
+    assert qx.q.dtype == jnp.float8_e4m3fn
+    err = np.abs(np.asarray(quant.dequantize(qx)) - np.asarray(x))
+    assert err.max() < 0.1 * np.abs(np.asarray(x)).max()

@@ -1,0 +1,98 @@
+"""Property tests for the sharding rules (divisibility-aware fallback)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.sharding import rules
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+class _Key:
+    def __init__(self, k):
+        self.key = k
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 3))
+def test_param_spec_always_divisible(out_dim, in_dim, lead):
+    """Whatever the shape, every sharded dim divides its axis product."""
+    mesh = _mesh((4, 2))
+    shape = (3,) * lead + (out_dim, in_dim)
+    leaf = jax.ShapeDtypeStruct(shape, jnp.float32)
+    spec = rules.param_spec([_Key("w")], leaf, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = int(np.prod([sizes[a] for a in axes]))
+        assert shape[dim] % n == 0
+
+
+def test_replicated_names():
+    mesh = _mesh()
+    for name in ("g", "A_log", "dt_bias", "D", "s_w"):
+        leaf = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        assert rules.param_spec([_Key(name)], leaf, mesh) == P()
+
+
+def test_expert_stack_ep_when_divisible():
+    mesh = _mesh((4, 2))  # model=2
+    leaf = jax.ShapeDtypeStruct((3, 4, 64, 64), jnp.float32)  # E=4 % 2 == 0
+    spec = rules.param_spec([_Key("w_gate"), _Key("w")], leaf, mesh)
+    assert spec[1] == "model"  # EP on the expert dim
+    # E=5 cannot shard -> falls back to out/in sharding
+    leaf5 = jax.ShapeDtypeStruct((3, 5, 64, 64), jnp.float32)
+    spec5 = rules.param_spec([_Key("w_gate"), _Key("w")], leaf5, mesh)
+    assert spec5[1] is None and spec5[2] == "model"
+
+
+def test_w_down_contraction_pairing():
+    """Non-EP w_down pairs contraction with 'model' (EXPERIMENTS Phase-1 #4)."""
+    mesh = _mesh((4, 2))
+    leaf = jax.ShapeDtypeStruct((3, 5, 64, 128), jnp.float32)
+    spec = rules.param_spec([_Key("ffn"), _Key("w_down"), _Key("w")],
+                            leaf, mesh)
+    assert spec[3] == "model" and spec[2] == "data"
+
+
+def test_cache_spec_sequence_over_model():
+    mesh = _mesh((4, 2))
+    leaf = jax.ShapeDtypeStruct((2, 8, 64, 4, 16), jnp.float32)  # [U,B,S,KVH,HD]
+    spec = rules.cache_spec([_Key("k")], leaf, mesh)
+    assert spec[2] == "model"       # S over model (decode locality)
+    assert spec[1] is not None      # B over dp
+    # batch=1: S takes dp too
+    leaf1 = jax.ShapeDtypeStruct((2, 1, 64, 4, 16), jnp.float32)
+    spec1 = rules.cache_spec([_Key("k")], leaf1, mesh)
+    assert "data" in str(spec1[2]) and "model" in str(spec1[2])
+
+
+def test_serve_tp_only_strips_data_axes():
+    mesh = _mesh((4, 2))
+    leaf = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    spec = rules._tp_only_spec([_Key("w")], leaf, mesh)
+    flat = [a for ax in spec if ax for a in
+            (ax if isinstance(ax, tuple) else (ax,))]
+    assert "data" not in flat and "pod" not in flat
+    assert "model" in flat
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([(64, 16), (100, 3), (32768, 8), (50280, 50280)]))
+def test_batch_spec_divisibility(bs):
+    b, _ = bs
+    mesh = _mesh((4, 2))
+    leaf = jax.ShapeDtypeStruct((b, 16), jnp.int32)
+    spec = rules.batch_spec(leaf, mesh)
+    if b % 4 == 0:
+        assert spec[0] is not None
+    else:
+        assert spec[0] is None

@@ -1,0 +1,92 @@
+"""Phi/Psi operator pair: Thm 1 equivalence (paper Eq. 3/4)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.patterns import Pattern, SlideDecomposition, TWO_FOUR
+from repro.core import slide, packer
+
+
+family = st.integers(3, 8)
+
+
+def _sparse_int_matrix(rng, rows, k, pat: Pattern):
+    w = rng.integers(-8, 9, size=(rows, k)).astype(np.int64)
+    g = k // pat.l
+    grp = w.reshape(rows, g, pat.l)
+    # zero the smallest |.| to meet the pattern; ties broken deterministically
+    order = np.argsort(np.abs(grp) + np.arange(pat.l) * 1e-6, axis=-1)
+    ranks = np.argsort(order, axis=-1)
+    grp[ranks < (pat.l - pat.z)] = 0
+    return grp.reshape(rows, k)
+
+
+@settings(max_examples=40, deadline=None)
+@given(family, st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_thm1_exact_integer_equivalence(n, groups, seed):
+    """w^T x == Phi(w)^T Psi(x) exactly, in integer arithmetic (Eq. 3)."""
+    rng = np.random.default_rng(seed)
+    pat = Pattern.from_family(n)
+    dec = SlideDecomposition(pat, TWO_FOUR)
+    k = groups * pat.l
+    w = _sparse_int_matrix(rng, 3, k, pat)
+    x = rng.integers(-8, 9, size=(5, k)).astype(np.int64)
+    ws = np.asarray(packer.pack_slided(jnp.asarray(w), dec)).astype(np.int64)
+    idx = slide.lift_index_map(k, pat.z, pat.l, 2, 4)
+    xl = x[:, idx]
+    np.testing.assert_array_equal(xl @ ws.T, x @ w.T)
+
+
+@settings(max_examples=30, deadline=None)
+@given(family, st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_thm1_float_paths(n, groups, seed):
+    rng = np.random.default_rng(seed)
+    pat = Pattern.from_family(n)
+    dec = SlideDecomposition(pat, TWO_FOUR)
+    k = groups * pat.l
+    w = packer.prune_to_pattern(
+        jnp.asarray(rng.standard_normal((6, k)), jnp.float32), pat)
+    x = jnp.asarray(rng.standard_normal((4, k)), jnp.float32)
+    ws = slide.phi(w, dec)
+    y_dense = slide.dense_matmul(x, w)
+    np.testing.assert_allclose(
+        np.asarray(slide.slided_matmul(x, ws, dec)), np.asarray(y_dense),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(slide.unslid_matmul(x, ws, dec)), np.asarray(y_dense),
+        rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(family, st.integers(1, 4))
+def test_lift_index_map_is_paper_eq4(n, groups):
+    """Row j of Psi(x) per group = (x_{2j}, x_{2j+1}, x_{2j+2}, x_{2j+3})."""
+    pat = Pattern.from_family(n)
+    k = groups * pat.l
+    idx = slide.lift_index_map(k, pat.z, pat.l, 2, 4)
+    assert idx.shape == (groups * (n - 1) * 4,)
+    for g in range(groups):
+        for j in range(n - 1):
+            for d in range(4):
+                out_pos = (g * (n - 1) + j) * 4 + d
+                assert idx[out_pos] == 2 * n * g + 2 * j + d  # Alg.1 line 11
+
+
+def test_lift_values():
+    """Paper Eq. 4 worked example (6:8)."""
+    dec = SlideDecomposition(Pattern(6, 8), TWO_FOUR)
+    x = jnp.arange(8.0)[None, :]
+    out = np.asarray(slide.lift(x, dec))[0]
+    np.testing.assert_array_equal(
+        out, [0, 1, 2, 3, 2, 3, 4, 5, 4, 5, 6, 7])
+
+
+def test_lift_multidim_batch():
+    dec = SlideDecomposition(Pattern(6, 8), TWO_FOUR)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 3, 16)),
+                    jnp.float32)
+    out = slide.lift(x, dec)
+    assert out.shape == (2, 3, 24)
+    np.testing.assert_array_equal(
+        np.asarray(out[1, 2]), np.asarray(slide.lift(x[1, 2][None], dec))[0])

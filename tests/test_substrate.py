@@ -1,0 +1,204 @@
+"""Substrate unit tests: optimizer, schedule, data pipeline, checkpointing."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import adamw, schedule
+from repro.data.pipeline import SyntheticLM, Prefetcher
+from repro.checkpoint import checkpointer as ckpt
+from repro.configs import registry
+
+
+# ---------------------------------------------------------------- optimizer
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (8, 64)),
+            "b": {"w": jax.random.normal(k2, (32,)),
+                  "g": jnp.ones((16,))}}
+
+
+@pytest.mark.parametrize("state_dtype", ["float32", "int8"])
+def test_adamw_reduces_quadratic(state_dtype):
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0, state_dtype=state_dtype)
+    params = _toy_params(jax.random.PRNGKey(0))
+    state = adamw.init(params, cfg)
+    target = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def loss(p):
+        return sum(jnp.sum((x - t) ** 2) for x, t in
+                   zip(jax.tree_util.tree_leaves(p),
+                       jax.tree_util.tree_leaves(target)))
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        params, state, metrics = adamw.update(params, grads, state, cfg)
+    assert float(loss(params)) < 0.05 * l0
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+def test_int8_state_roundtrip_precision():
+    cfg = adamw.AdamWConfig(state_dtype="int8", block=64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 256)) * 5
+    q, s = adamw._blockwise_quant(x, cfg.block)
+    assert q.shape == x.shape  # shape-preserving: no resharding under SPMD
+    rec = adamw._blockwise_dequant(q, s, cfg.block)
+    err = np.abs(np.asarray(rec - x))
+    bound = np.repeat(np.asarray(s), 64, axis=-1) / 2 + 1e-7
+    assert (err <= bound).all()
+
+
+def test_int8_vs_fp32_states_track():
+    """int8 optimizer makes the same optimization progress as fp32 (the
+    quantization noise perturbs trajectories element-wise, so we compare
+    loss, not parameters)."""
+    p0 = _toy_params(jax.random.PRNGKey(2))
+
+    def loss(p):
+        return sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(p))
+
+    finals = {}
+    for sd in ("float32", "int8"):
+        cfg = adamw.AdamWConfig(lr=0.01, state_dtype=sd, weight_decay=0.0)
+        params, state = p0, adamw.init(p0, cfg)
+        for _ in range(20):
+            grads = jax.grad(loss)(params)
+            params, state, _ = adamw.update(params, grads, state, cfg)
+        finals[sd] = float(loss(params))
+    assert finals["int8"] < float(loss(p0))  # it optimizes
+    assert abs(finals["int8"] - finals["float32"]) < 0.25 * finals["float32"]
+
+
+def test_grad_clip():
+    cfg = adamw.AdamWConfig(lr=0.0, grad_clip=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init(params, cfg)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw.update(params, huge, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e6  # reported pre-clip
+
+
+def test_schedule_shape():
+    assert float(schedule.warmup_cosine(0, warmup=10, total=100)) == 0.0
+    assert float(schedule.warmup_cosine(10, warmup=10, total=100)) == \
+        pytest.approx(1.0, abs=1e-3)
+    end = float(schedule.warmup_cosine(100, warmup=10, total=100, floor=0.1))
+    assert end == pytest.approx(0.1, abs=1e-3)
+
+
+def test_block_for():
+    assert adamw.block_for(6144, 256) == 256
+    assert adamw.block_for(240, 256) == 240
+    assert adamw.block_for(7, 256) == 7
+
+
+# ---------------------------------------------------------------- pipeline
+def test_pipeline_deterministic_and_sharded():
+    cfg = registry.smoke_config("phi3-medium-14b")
+    p0 = SyntheticLM(cfg, global_batch=8, seq_len=32, seed=3,
+                     host_index=0, host_count=2)
+    p1 = SyntheticLM(cfg, global_batch=8, seq_len=32, seed=3,
+                     host_index=1, host_count=2)
+    a = p0.batch_at(5)
+    b = p0.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])  # deterministic
+    assert a["tokens"].shape == (4, 32)  # per-host slice
+    assert not np.array_equal(a["tokens"], p1.batch_at(5)["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_pipeline_has_learnable_motifs():
+    cfg = registry.smoke_config("phi3-medium-14b")
+    p = SyntheticLM(cfg, global_batch=2, seq_len=64, seed=0)
+    batch = p.batch_at(0)
+    toks = batch["tokens"]
+    # zipf skew: token 0 should be much more common than the median token
+    assert (toks == 0).mean() > 0.05
+
+
+def test_prefetcher():
+    cfg = registry.smoke_config("mamba2-780m")
+    pipe = SyntheticLM(cfg, global_batch=2, seq_len=16, seed=1)
+    pf = Prefetcher(pipe, start_step=7)
+    try:
+        step, batch = pf.next()
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(batch["tokens"]),
+                                      pipe.batch_at(7)["tokens"])
+        step, _ = pf.next()
+        assert step == 8
+    finally:
+        pf.close()
+
+
+# ------------------------------------------------------------- checkpoints
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+    ckpt.save(str(tmp_path), 42, tree, extra={"loss": 1.5})
+    restored, step, extra = ckpt.restore(str(tmp_path), tree)
+    assert step == 42 and extra["loss"] == 1.5
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    tree = {"a": jnp.zeros((4,))}
+    ckpt.save(str(tmp_path), 1, tree)
+    # a stale tmp dir (simulated crash) must be ignored by latest_step
+    os.makedirs(tmp_path / "step_00000002.tmp.999", exist_ok=True)
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    saver = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.zeros((4,))}
+    for s in (1, 2, 3, 4):
+        saver.save(s, tree)
+    saver.wait()
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_structure_mismatch(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"a": jnp.zeros((4,)),
+                                     "b": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"a": jnp.zeros((5,))})
+
+
+def test_grad_accum_matches_full_batch():
+    """accum=2 microbatching == one full-batch step (same math)."""
+    import jax.numpy as jnp
+    from repro.runtime import steps
+    cfg = registry.smoke_config("minitron-4b")
+    opt_cfg = adamw.AdamWConfig(lr=1e-3)
+    import jax as _jax
+    from repro.models import model as M
+    params = M.init(cfg, _jax.default_backend() and jax.random.PRNGKey(0))
+    opt = adamw.init(params, opt_cfg)
+    pipe = SyntheticLM(cfg, 4, 32, seed=0, host_index=0, host_count=1)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+
+    p1, o1, m1 = jax.jit(
+        lambda p, o, b: steps.train_step(cfg, opt_cfg, p, o, b))(
+        params, opt, batch)
+    p2, o2, m2 = jax.jit(
+        lambda p, o, b: steps.train_step(cfg, opt_cfg, p, o, b, accum=2))(
+        params, opt, batch)
+    # microbatch losses average to the full-batch loss (both are per-token
+    # means over equal-sized halves)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-5, rtol=1e-3)

@@ -1,0 +1,107 @@
+"""Integration: tiny-LM training runs, loss decreases, resume is exact."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.optim import adamw
+from repro.runtime import train_loop
+from repro.checkpoint import checkpointer as ckpt
+
+
+def _tc(tmp_path=None, steps=12, **kw):
+    return train_loop.TrainConfig(
+        steps=steps, ckpt_dir=str(tmp_path) if tmp_path else None,
+        ckpt_every=5, log_every=100, global_batch=4, seq_len=32, **kw)
+
+
+def test_loss_decreases_dense():
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    out = train_loop.train(cfg, adamw.AdamWConfig(lr=3e-3), _tc(steps=25))
+    losses = out["losses"]
+    assert len(losses) == 25
+    assert all(np.isfinite(losses))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+
+def test_loss_decreases_moe_and_ssm():
+    for arch in ("granite-moe-3b-a800m", "mamba2-780m"):
+        cfg = registry.smoke_config(arch)
+        out = train_loop.train(cfg, adamw.AdamWConfig(lr=3e-3), _tc(steps=20))
+        losses = out["losses"]
+        assert all(np.isfinite(losses)), arch
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]), arch
+
+
+def test_checkpoint_resume_exact(tmp_path):
+    """Train 10; train 6 + resume to 10: bit-identical final loss."""
+    cfg = registry.smoke_config("minitron-4b")
+    opt = adamw.AdamWConfig(lr=1e-3)
+
+    out_full = train_loop.train(cfg, opt, _tc(tmp_path / "a", steps=10))
+
+    # interrupted run: 6 steps (checkpoint at 5), then resume to 10
+    train_loop.train(cfg, opt, _tc(tmp_path / "b", steps=6))
+    assert ckpt.latest_step(str(tmp_path / "b")) in (5, 6)
+    out_resumed = train_loop.train(cfg, opt, _tc(tmp_path / "b", steps=10))
+
+    np.testing.assert_allclose(out_full["losses"][-1],
+                               out_resumed["losses"][-1], rtol=1e-5)
+
+
+def test_int8_optimizer_state_trains(tmp_path):
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    opt = adamw.AdamWConfig(lr=3e-3, state_dtype="int8")
+    out = train_loop.train(cfg, opt, _tc(steps=15))
+    assert np.isfinite(out["losses"]).all()
+    assert np.mean(out["losses"][-3:]) < np.mean(out["losses"][:3])
+
+
+def test_straggler_monitor():
+    mon = train_loop.StragglerMonitor(z=3.0)
+    flagged = [mon.observe(0.1) for _ in range(20)]
+    assert not any(flagged)
+    assert mon.observe(5.0)  # 50x the EWMA
+    assert mon.flagged == 1
+
+
+def test_serve_generate_runs():
+    import jax.numpy as jnp
+    from repro.runtime import serve_loop
+    from repro.models import model as M
+
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    toks, stats = serve_loop.generate(params, cfg, batch, max_new_tokens=4)
+    assert toks.shape == (2, 4)
+    assert stats.tokens_generated == 8
+    assert stats.decode_tok_s > 0
+
+
+def test_serve_with_packed_sparse_params():
+    """End-to-end: pack (prune+Phi+compress) then serve — §4 pipeline."""
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.core.linear import SparsityConfig
+    from repro.runtime import serve_loop
+    from repro.models import model as M
+
+    base = registry.smoke_config("h2o-danube-3-4b")
+    cfg = dataclasses.replace(
+        base, sparsity=SparsityConfig(pattern=(6, 8), mode="compressed",
+                                      use_pallas=False))
+    params = M.init(base, jax.random.PRNGKey(0))
+    packed = serve_loop.pack_params(params, cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    toks, _ = serve_loop.generate(packed, cfg, batch, max_new_tokens=3)
+    assert toks.shape == (2, 3)
+
+    # packed-compressed must equal the pruned-dense (masked) execution
+    cfg_masked = dataclasses.replace(
+        base, sparsity=SparsityConfig(pattern=(6, 8), mode="masked"))
+    toks_masked, _ = serve_loop.generate(params, cfg_masked, batch,
+                                         max_new_tokens=3)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks_masked))

@@ -1,0 +1,46 @@
+"""Run a hillclimb variant of a dry-run cell and diff it against baseline.
+
+Usage: PYTHONPATH=src python tools/hillclimb.py <arch> <shape> <tag> [extra dryrun flags...]
+Writes benchmarks/results/hillclimb/<arch>__<shape>__<tag>.json and prints
+the before/after roofline terms.
+"""
+import json, os, subprocess, sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASE = os.path.join(REPO, "benchmarks", "results", "dryrun")
+OUT = os.path.join(REPO, "benchmarks", "results", "hillclimb")
+
+def main():
+    arch, shape, tag = sys.argv[1], sys.argv[2], sys.argv[3]
+    flags = sys.argv[4:]
+    os.makedirs(OUT, exist_ok=True)
+    out = os.path.join(OUT, f"{arch}__{shape}__{tag}.json")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--single-pod", "--json", out] + flags
+    env = dict(os.environ); env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if r.returncode:
+        print(r.stdout[-3000:]); print(r.stderr[-3000:]); sys.exit(1)
+    new = json.load(open(out))
+    basef = os.path.join(BASE, f"{arch}__{shape}__sp.json")
+    base = json.load(open(basef)) if os.path.exists(basef) else None
+    def terms(r):
+        f = r["roofline"]
+        return {k: f[k] for k in ("t_compute_s", "t_memory_s",
+                                  "t_collective_s", "dominant",
+                                  "useful_flops_ratio")}
+    if base:
+        print("baseline:", terms(base))
+    print(f"{tag:>8}:", terms(new))
+    if base:
+        b, n = base["roofline"], new["roofline"]
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s"):
+            if b[k] > 0:
+                print(f"  {k}: {b[k]:.4f} -> {n[k]:.4f}  ({n[k]/b[k]:.3f}x)")
+        bm = base.get("memory_analysis", {}).get("per_device_live_bytes")
+        nm = new.get("memory_analysis", {}).get("per_device_live_bytes")
+        if bm and nm:
+            print(f"  live GB/dev: {bm/1e9:.1f} -> {nm/1e9:.1f}")
+
+if __name__ == "__main__":
+    main()

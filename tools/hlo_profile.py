@@ -1,0 +1,94 @@
+"""Dry-run HLO profiler: top local tensors + collective attribution.
+
+Usage: PYTHONPATH=src python tools/hlo_profile.py <arch> <shape> [out.txt]
+"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, collections
+from repro.configs import registry, shapes as shp
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch import analysis
+from repro.optim import adamw
+
+DT = {'bf16':2,'f32':4,'s32':4,'s8':1,'u8':1,'pred':1,'f16':2,'u32':4,'s64':8}
+PAT = re.compile(r"= ([a-z0-9]+)\[([0-9,]+)\]")
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    import dataclasses
+    cfg = registry.get(arch)
+    extra = sys.argv[3:]
+    serve_tp = "--serve-tp-only" in extra
+    if "--moe-pad" in extra:
+        cfg = dataclasses.replace(
+            cfg, moe_expert_padding=int(extra[extra.index("--moe-pad") + 1]))
+    if "--swa-tile-skip" in extra:
+        cfg = dataclasses.replace(cfg, swa_tile_skip=True)
+    if "--group-size" in extra:
+        pass  # reserved
+    shape = shp.SHAPES[shape_name]
+    mesh = make_production_mesh()
+    lowered, compiled, aux = lower_cell(cfg, shape, mesh,
+                                        adamw.AdamWConfig(state_dtype='int8'),
+                                        serve_tp_only=serve_tp and shape.kind != "train")
+    text = compiled.as_text()
+    out_files = [a for a in sys.argv[3:] if a.endswith('.txt')]
+    if out_files:
+        open(out_files[0], 'w').write(text)
+    mem = compiled.memory_analysis()
+    print(f"temp={mem.temp_size_in_bytes/1e9:.1f}GB "
+          f"args={mem.argument_size_in_bytes/1e9:.1f}GB")
+
+    # top tensors by size with representative op_name
+    best = {}
+    for line in text.splitlines():
+        m = PAT.search(line)
+        if not m: continue
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DT: continue
+        n = 1
+        for d in dims.split(','): n *= int(d)
+        sz = n * DT[dt]
+        if sz < 3e8: continue
+        op = re.search(r'op_name="([^"]+)"', line)
+        tail = "/".join(op.group(1).split('/')[-3:])[:80] if op else '?'
+        key = f"{dt}[{dims}]"
+        if key not in best or sz > best[key][0]:
+            best[key] = (sz, tail)
+    print("--- tensors >= 0.3GB (local/per-device shapes) ---")
+    for key, (sz, tail) in sorted(best.items(), key=lambda kv: -kv[1][0])[:15]:
+        print(f"{sz/1e9:8.2f} GB  {key:34s} {tail}")
+
+    # collective attribution with trip counts
+    comps, entry = analysis._split_computations(text)
+    trips = {}
+    for line in text.splitlines():
+        m = analysis._WHILE_CALL_RE.search(line)
+        if m:
+            t = analysis._TRIP_RE.search(line)
+            trips[m.group(2)] = int(t.group(1)) if t else 1
+    agg = collections.Counter()
+    for name, body in comps.items():
+        for line in body.splitlines():
+            mm = re.search(r'(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(', line)
+            if not mm: continue
+            sm = PAT.search(line)
+            if not sm: continue
+            n = 1
+            for d in sm.group(2).split(','): n *= int(d)
+            op = re.search(r'op_name="([^"]+)"', line)
+            tail = "/".join(op.group(1).split('/')[-2:])[:70] if op else '?'
+            agg[(mm.group(1), tail)] += n * DT.get(sm.group(1),1) * trips.get(name, 1)
+    print("--- collectives (bytes x trips), top 14 ---")
+    for (kind, tail), v in agg.most_common(14):
+        print(f"{kind:18s} {v/1e9:9.2f} GB  {tail}")
+    roof = analysis.from_compiled(compiled, mesh.devices.size,
+                                  analysis.model_flops_estimate(cfg, shape),
+                                  jaxpr_cost=aux["jaxpr_cost"])
+    print("roofline:", {k: round(v,4) if isinstance(v,float) else v
+                        for k,v in roof.to_dict().items()
+                        if k in ('t_compute_s','t_memory_s','t_collective_s','dominant','useful_flops_ratio')})
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Render §Dry-run and §Roofline markdown tables from the dry-run JSONs.
+
+Usage: PYTHONPATH=src python tools/make_tables.py [results_dir]
+Prints markdown to stdout (pasted/refreshed into EXPERIMENTS.md).
+"""
+import json
+import os
+import sys
+
+
+def load(d):
+    from repro.configs import registry, shapes as shp
+    from repro.launch import analysis
+
+    recs = {}
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                r = json.load(f)
+            if r.get("status") == "ok":
+                # recompute the fraction post-hoc with the analytic
+                # useful-bytes model (records may predate the field)
+                cfg = registry.get(r["arch"])
+                shape = shp.SHAPES[r["shape"]]
+                f_ = r["roofline"]
+                roof = analysis.Roofline(
+                    flops=f_["flops"], hbm_bytes=f_["hbm_bytes"],
+                    coll_bytes=f_["coll_bytes"], coll_breakdown={},
+                    chips=f_["chips"],
+                    model_flops=analysis.model_flops_estimate(cfg, shape),
+                    model_bytes=analysis.model_bytes_estimate(cfg, shape))
+                f_["roofline_fraction"] = roof.roofline_fraction
+                f_["useful_flops_ratio"] = roof.useful_flops_ratio
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+ARCHS = ["jamba-1.5-large-398b", "h2o-danube-3-4b", "phi3-medium-14b",
+         "gemma3-12b", "minitron-4b", "mamba2-780m", "granite-moe-3b-a800m",
+         "mixtral-8x22b", "qwen2-vl-72b", "whisper-small"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    return f"{n / 1e9:.1f}"
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | status | compile_s | live GB/dev "
+          "| flops (global) | coll GB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    print(f"| {arch} | {shape} | {mesh} | MISSING | | | | |")
+                    continue
+                if r["status"] == "skipped":
+                    print(f"| {arch} | {shape} | {mesh} | skip (full attn) "
+                          "| | | | |")
+                    continue
+                mem = r.get("memory_analysis", {})
+                roof = r["roofline"]
+                print(f"| {arch} | {shape} | {mesh} | ok "
+                      f"| {r.get('compile_s', 0):.0f} "
+                      f"| {fmt_bytes(mem.get('per_device_live_bytes'))} "
+                      f"| {roof['flops']:.2e} "
+                      f"| {roof['coll_bytes'] / 1e9:.1f} |")
+
+
+def _lever(arch, shape, f):
+    """One sentence: what would move the dominant term down (per the brief).
+    Derived from the §Perf findings for each (dominant, workload) class."""
+    dom = f["dominant"]
+    moe = arch in ("granite-moe-3b-a800m", "mixtral-8x22b",
+                   "jamba-1.5-large-398b")
+    swa = arch in ("gemma3-12b", "h2o-danube-3-4b", "mixtral-8x22b")
+    if dom == "collective":
+        if shape == "train_4k":
+            s = "cut FSDP-gather/TP-AR passes: single-level remat + seq-par"
+            if moe:
+                s += " + expert padding for EP (hillclimb A: 6.9x)"
+            return s
+        if shape in ("decode_32k", "long_500k"):
+            return ("TP-only serving weight layout removes the per-step "
+                    "FSDP re-gather (hillclimb B: ~100x on t_coll)")
+        s = "seq-par residual keeps MLP S-local (hillclimb C: 0.37x)"
+        if swa:
+            s += "; SWA tile skip first (0.60x compute)"
+        return s
+    if dom == "memory":
+        if shape in ("decode_32k", "long_500k"):
+            return ("SlideSparse 6:8 int8 weights (0.47x stream) + int8 KV "
+                    "cache (0.5x) — hillclimb B")
+        return "SWA tile skip + w8a8 kernels shrink the dot-operand stream"
+    return "int8 MXU (2x bf16 peak) via the w8a8 SlideSparse path"
+
+
+def roofline_table(recs):
+    print("| arch | shape | t_compute s | t_memory s | t_collective s "
+          "| dominant | MODEL/HLO flops | roofline frac | to move the "
+          "dominant term |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, "16x16"))
+            if r is None or r["status"] != "ok":
+                continue
+            f = r["roofline"]
+            print(f"| {arch} | {shape} | {f['t_compute_s']:.4f} "
+                  f"| {f['t_memory_s']:.4f} | {f['t_collective_s']:.4f} "
+                  f"| **{f['dominant']}** | {f['useful_flops_ratio']:.2f} "
+                  f"| {f['roofline_fraction']:.3f} "
+                  f"| {_lever(arch, shape, f)} |")
+
+
+def summary(recs):
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    print(f"\ncells: {len(recs)} total, {ok} compiled ok, {skip} skipped "
+          "(documented long_500k full-attention skips)")
+    # worst cells for hillclimb selection
+    singles = [(k, r) for k, r in recs.items()
+               if r["status"] == "ok" and k[2] == "16x16"]
+    by_frac = sorted(singles, key=lambda kr: kr[1]["roofline"]
+                     ["roofline_fraction"])
+    print("\nworst roofline fractions (hillclimb candidates):")
+    for k, r in by_frac[:6]:
+        print(f"  {k[0]} x {k[1]}: frac={r['roofline']['roofline_fraction']:.3f} "
+              f"dominant={r['roofline']['dominant']}")
+    coll = sorted(singles, key=lambda kr: -(kr[1]["roofline"]["t_collective_s"]
+                                            / max(1e-12, max(
+                                                kr[1]["roofline"]["t_compute_s"],
+                                                kr[1]["roofline"]["t_memory_s"]))))
+    print("most collective-bound:")
+    for k, r in coll[:4]:
+        f = r["roofline"]
+        print(f"  {k[0]} x {k[1]}: t_coll={f['t_collective_s']:.3f}s vs "
+              f"max(other)={max(f['t_compute_s'], f['t_memory_s']):.3f}s")
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "benchmarks", "results", "dryrun")
+    recs = load(d)
+    print("## §Dry-run\n")
+    dryrun_table(recs)
+    print("\n## §Roofline (single-pod 16x16)\n")
+    roofline_table(recs)
+    summary(recs)
