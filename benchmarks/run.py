@@ -84,6 +84,51 @@ def bench_packer_throughput():
     emit("packer_throughput[1024x4096]", us, f"MB/s={mbs:.0f}")
 
 
+def bench_fused_pipeline():
+    """DESIGN.md §2.3: single-pass fused GEMM (quant+lift in the matmul
+    prologue) vs the two-kernel fused_quant_slide -> quant_matmul pipeline.
+
+    The derived column carries the HBM-bytes model per call: the two-kernel
+    path round-trips the lifted gamma*K int8 activations through HBM (one
+    write + one read) that the fused kernel eliminates entirely.  Timings
+    are interpret-mode (CPU) and exercise both kernel bodies.
+    """
+    dec = SlideDecomposition(Pattern(6, 8), TWO_FOUR)
+    gamma = float(dec.gamma)
+    rng = np.random.default_rng(0)
+    for rows, k, m in ((64, 256, 128), (256, 512, 512)):
+        w = prune_to_pattern(
+            jnp.asarray(rng.standard_normal((m, k)), jnp.float32), dec.source)
+        x = jnp.asarray(rng.standard_normal((rows, k)), jnp.float32)
+        qw = quantize_weight_int8_rowwise(w)
+        ws_q = pack_slided(qw.q, dec)
+
+        def two_kernel(a):
+            q, s = ops.fused_quant_slide(a, dec, use_pallas=True,
+                                         interpret=True)
+            return ops.quant_matmul(q, s, ws_q, qw.scale, use_pallas=True,
+                                    interpret=True)
+
+        def fused(a):
+            return ops.slided_matmul_int8(a, ws_q, qw.scale, dec,
+                                          out_dtype=jnp.float32,
+                                          use_pallas=True, interpret=True)
+
+        us_two = _time(two_kernel, x, reps=3)
+        us_fused = _time(fused, x, reps=3)
+        wbytes = m * gamma * k + m * 4               # Phi(W) int8 + s_w
+        ybytes = rows * m * 4
+        common = rows * k * 4 + wbytes + ybytes      # read X, W; write Y
+        lifted = rows * gamma * k + rows * 4         # Psi(q) int8 + scale
+        bytes_two = common + 2 * lifted              # write + re-read
+        bytes_fused = common                         # lifted stays in VMEM
+        emit(f"fused_pipeline[R={rows},K={k},M={m}]", us_fused,
+             f"hbm_bytes_fused={bytes_fused:.0f};"
+             f"hbm_bytes_two_kernel={bytes_two:.0f};"
+             f"bytes_saved_ratio={bytes_two / bytes_fused:.3f};"
+             f"us_two_kernel={us_two:.2f};gamma={gamma}")
+
+
 def bench_fused_kernel_overhead():
     """App D.2 Table 1: fused quant+slide vs quant-only — the paper's
     +29-53% store-overhead model.  Derived: bytes ratio (the model) and the
@@ -242,6 +287,7 @@ BENCHES = [
     bench_expansion_table,
     bench_general_zl,
     bench_packer_throughput,
+    bench_fused_pipeline,
     bench_fused_kernel_overhead,
     bench_kernel_speedup_model,
     bench_decode_memory_model,
@@ -251,6 +297,29 @@ BENCHES = [
 ]
 
 
+def write_json(filt: str, out_dir: str | None = None) -> str:
+    """Persist the run as BENCH_<timestamp>.json (DESIGN.md §7): the perf
+    trajectory across PRs needs machine-readable rows, not just the CSV."""
+    out_dir = out_dir or os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, time.strftime("BENCH_%Y%m%d_%H%M%S.json", time.gmtime()))
+    payload = {
+        "config": {
+            "filter": filt,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                           time.gmtime()),
+        },
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in ROWS],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
 def main() -> None:
     filt = sys.argv[1] if len(sys.argv) > 1 else ""
     print("name,us_per_call,derived")
@@ -258,6 +327,12 @@ def main() -> None:
         if filt and filt not in bench.__name__:
             continue
         bench()
+    if ROWS:
+        path = write_json(filt)
+        print(f"# wrote {path} ({len(ROWS)} rows)", file=sys.stderr)
+    else:
+        print(f"# no benchmarks matched filter {filt!r}; nothing written",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

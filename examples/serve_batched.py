@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--fuse-epilogue", action="store_true",
+                    help="fuse the MLP SiLU into the matmul epilogue "
+                         "(DESIGN.md §2.3)")
     args = ap.parse_args()
 
     base = registry.smoke_config(args.arch)
@@ -46,7 +49,8 @@ def main():
 
     z, l = args.pattern
     cfg = dataclasses.replace(base, sparsity=SparsityConfig(
-        pattern=(z, l), mode="compressed", use_pallas=False))
+        pattern=(z, l), mode="compressed", use_pallas=False,
+        fuse_epilogue=args.fuse_epilogue))
     packed = serve_loop.pack_params(params, cfg)
     print(f"=== SlideSparse {z}:{l} serving (packed + compressed) ===")
     toks_s, stats_s = serve_loop.generate(packed, cfg, batch,

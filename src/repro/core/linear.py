@@ -32,6 +32,13 @@ class SparsityConfig:
     mode: str = "dense"  # dense | masked | slided | compressed
     act_quant: str | None = None  # None | 'int8'
     use_pallas: bool | None = None  # None -> auto (TPU backend only)
+    # fuse the MLP nonlinearity (SiLU/GELU) + bias into the matmul epilogue
+    # on kernel paths that support it (DESIGN.md §2.3); layers.swiglu checks
+    # this knob to skip its separate elementwise pass
+    fuse_epilogue: bool = False
+    # one-shot tile-size autotuning per (op, shape) via kernels.autotune
+    # (DESIGN.md §2.4); tuned tiles are cached in-process and on disk
+    tune: bool = False
 
     def decomposition(self) -> SlideDecomposition | None:
         if self.pattern is None:
@@ -81,19 +88,26 @@ def prepare(params: dict[str, Any], cfg: SparsityConfig) -> dict[str, Any]:
     return out
 
 
-def apply(params: dict[str, Any], x: jax.Array, cfg: SparsityConfig) -> jax.Array:
-    """y = x @ W^T under the configured execution path. x: [..., K]."""
+def apply(params: dict[str, Any], x: jax.Array, cfg: SparsityConfig,
+          activation: str | None = None) -> jax.Array:
+    """y = act(x @ W^T) under the configured execution path. x: [..., K].
+
+    ``activation`` (None | 'silu' | 'gelu') is fused into the kernel
+    epilogue on the Pallas slided/compressed paths and applied as a
+    separate elementwise op everywhere else — identical semantics either
+    way (ref.epilogue is the shared oracle).
+    """
     from repro.kernels import ops as kops  # deferred: kernels import core
 
     dec = cfg.decomposition()
     out_dtype = x.dtype
 
     if cfg.mode == "dense" or dec is None:
-        return _plain(x, params["w"], cfg, out_dtype)
+        return _post_act(_plain(x, params["w"], cfg, out_dtype), activation)
 
     if cfg.mode == "masked":
         w = masks.ste_prune(params["w"], dec.source)
-        return _plain(x, w, cfg, out_dtype)
+        return _post_act(_plain(x, w, cfg, out_dtype), activation)
 
     params = params if _prepared(params, cfg) else prepare(params, cfg)
 
@@ -102,8 +116,10 @@ def apply(params: dict[str, Any], x: jax.Array, cfg: SparsityConfig) -> jax.Arra
         if cfg.act_quant == "int8":
             return kops.slided_matmul_int8(
                 x, ws, params["s_w"], dec, out_dtype=out_dtype,
-                use_pallas=cfg.use_pallas)
-        return slide.slided_matmul(x, ws, dec).astype(out_dtype)
+                use_pallas=cfg.use_pallas, activation=activation,
+                tune=cfg.tune)
+        return _post_act(
+            slide.slided_matmul(x, ws, dec).astype(out_dtype), activation)
 
     if cfg.mode == "compressed":
         k = params["values"].shape[-1] * dec.source.l // dec.source.z
@@ -112,9 +128,18 @@ def apply(params: dict[str, Any], x: jax.Array, cfg: SparsityConfig) -> jax.Arra
             dec.source.z, dec.source.l, dec.hw.m, dec.hw.n)
         return kops.compressed_matmul(
             x, c, s_w=params.get("s_w"), act_quant=cfg.act_quant,
-            out_dtype=out_dtype, use_pallas=cfg.use_pallas)
+            out_dtype=out_dtype, use_pallas=cfg.use_pallas,
+            activation=activation, tune=cfg.tune)
 
     raise ValueError(f"unknown mode {cfg.mode}")
+
+
+def _post_act(y: jax.Array, activation: str | None) -> jax.Array:
+    if activation is None:
+        return y
+    from repro.kernels.fused_slide_matmul import apply_activation
+
+    return apply_activation(y, activation)
 
 
 def _prepared(params: dict[str, Any], cfg: SparsityConfig) -> bool:

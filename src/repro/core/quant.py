@@ -40,7 +40,11 @@ def quantize_int8(x: jax.Array) -> Quantized:
 def quantize_fp8(x: jax.Array) -> Quantized:
     a = _absmax(x)
     scale = a / FP8_E4M3_MAX
-    q = (x.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+    # clamp before the cast: e4m3 has no inf and XLA's float32->e4m3 cast
+    # only saturates near the boundary (far-overflow becomes NaN); the
+    # scale bounds |x|/scale at qmax up to 1 ulp, but keep the cast total
+    q = jnp.clip(x.astype(jnp.float32) / scale,
+                 -FP8_E4M3_MAX, FP8_E4M3_MAX).astype(jnp.float8_e4m3fn)
     return Quantized(q, scale)
 
 

@@ -1,15 +1,23 @@
 """Pallas TPU kernels for SlideSparse's two hot spots (paper §4):
 
-* fused_quant_slide — Alg. 1: per-token quantization fused with activation
-  lifting (one HBM read, one HBM write).
+* fused_slide_matmul — the single-pass SlideSparse GEMM: Alg. 1 quant +
+  lifting in the matmul prologue; lifted activations never touch HBM.
+* fused_quant_slide — standalone Alg. 1: per-token quantization fused with
+  activation lifting (one HBM read, one HBM write).
 * slide_matmul — the sparse-GEMM analogue: compressed-weight matmul with
-  in-VMEM 2:4 decompression ("unslide fusion") feeding the dense MXU.
+  in-VMEM 2:4 decompression ("unslide fusion") feeding the dense MXU;
+  R-innermost grid decompresses each weight tile exactly once per call and
+  optionally fuses the bias + SiLU/GELU epilogue.
 * quant_matmul — dense w8a8 baseline (cuBLASLt-INT8 analogue) + the shared
   dequant epilogue.
+* autotune — shape-keyed tile-size cache (in-process + on-disk JSON).
 
 ops.py holds the jit'd public wrappers (with jnp fallbacks from ref.py).
 """
-from . import ops, ref  # noqa: F401
+from . import ops, ref, autotune  # noqa: F401
 from .fused_quant_slide import fused_quant_slide_pallas, lift_pairs  # noqa: F401
-from .slide_matmul import compressed_matmul_pallas, decompress_tile  # noqa: F401
+from .fused_slide_matmul import fused_slided_matmul_pallas  # noqa: F401
+from .slide_matmul import (  # noqa: F401
+    compressed_matmul_pallas, decompress_tile, decompress_count,
+    reset_decompress_count)
 from .quant_matmul import quant_matmul_pallas  # noqa: F401

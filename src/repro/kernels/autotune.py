@@ -1,0 +1,208 @@
+"""Shape-keyed tile-size autotuner for the SlideSparse Pallas kernels.
+
+The kernels expose tile knobs (bm, br, bk, block_rows) whose best values
+depend on the operand shapes, dtypes and backend.  This module picks them
+(DESIGN.md §2.4):
+
+* ``lookup`` — two-level cache: an in-process dict, backed by an on-disk
+  JSON file so tuned configurations survive across processes (serving
+  restarts, benchmark runs).  Set ``REPRO_AUTOTUNE_CACHE`` to relocate or
+  ``REPRO_AUTOTUNE_CACHE=''`` to disable persistence.
+* ``autotune`` — times each candidate config with the caller-supplied
+  runner (warmup + best-of-reps wall clock, like the benchmark harness)
+  and records the winner.
+* ``tiles_for`` — the ops.py entry point: cached -> cached value; ``tune``
+  requested -> search; otherwise empty config (kernel-side heuristics).
+
+Cache file format (DESIGN.md §2.4): ``{key: {"tiles": {bm, br, bk,
+block_rows}, "us": best_us, "backend": ...}}`` where ``key`` is
+``op|param=value|...`` over the shape/dtype parameters, sorted by name.
+Null tile entries mean "kernel default".
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+
+_FIELDS = ("bm", "br", "bk", "block_rows")
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Tile sizes for one kernel launch; None -> use the kernel's default."""
+
+    bm: int | None = None
+    br: int | None = None
+    bk: int | None = None
+    block_rows: int | None = None
+
+    def kernel_kwargs(self, *names: str) -> dict[str, int]:
+        """Non-None tiles restricted to the knobs a kernel accepts."""
+        return {f: getattr(self, f) for f in (names or _FIELDS)
+                if getattr(self, f) is not None}
+
+
+DEFAULT = TileConfig()
+
+_MEM: dict[str, dict[str, Any]] = {}
+_DISK_LOADED = False
+
+
+def cache_path() -> str | None:
+    path = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if path == "":
+        return None
+    return path or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+
+
+def _load_disk() -> None:
+    global _DISK_LOADED
+    if _DISK_LOADED:
+        return
+    _DISK_LOADED = True
+    path = cache_path()
+    if not path or not os.path.exists(path):
+        return
+    try:
+        with open(path) as f:
+            disk = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return
+    for key, rec in disk.items():
+        _MEM.setdefault(key, rec)
+
+
+def _save_disk() -> None:
+    path = cache_path()
+    if not path:
+        return
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(_MEM, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic: concurrent readers see old or new
+    except OSError:
+        pass  # read-only filesystems must not break the kernels
+
+
+def clear(memory_only: bool = True) -> None:
+    """Drop the in-process cache (tests); optionally the disk file too."""
+    global _DISK_LOADED
+    _MEM.clear()
+    _DISK_LOADED = memory_only  # memory_only: don't re-read stale disk state
+    if not memory_only:
+        path = cache_path()
+        if path and os.path.exists(path):
+            os.remove(path)
+
+
+def make_key(op: str, **params: Any) -> str:
+    parts = [op] + [f"{k}={params[k]}" for k in sorted(params)]
+    parts.append(f"backend={jax.default_backend()}")
+    return "|".join(parts)
+
+
+def lookup(key: str) -> TileConfig | None:
+    _load_disk()
+    rec = _MEM.get(key)
+    if rec is None:
+        return None
+    tiles = rec.get("tiles", {})
+    return TileConfig(**{f: tiles.get(f) for f in _FIELDS})
+
+
+def record(key: str, tiles: TileConfig, us: float) -> None:
+    _load_disk()
+    _MEM[key] = {"tiles": {f: getattr(tiles, f) for f in _FIELDS},
+                 "us": us, "backend": jax.default_backend()}
+    _save_disk()
+
+
+def _time(run: Callable[[TileConfig], Any], tiles: TileConfig,
+          reps: int = 3) -> float:
+    jax.block_until_ready(run(tiles))  # compile + warmup
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(tiles))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def candidates(op: str, rows: int, m: int, k: int) -> list[TileConfig]:
+    """Small per-op search spaces (kept tiny: tuning runs the real kernel).
+
+    Sized against the ROWS BUCKET, not the live row count: the winner is
+    cached per bucket, so every tile that is valid anywhere in the bucket
+    must be in the running.
+    """
+    rows = rows_bucket(rows)
+    if op == "fused_quant_slide":
+        return [TileConfig(block_rows=b) for b in (32, 64, 128, 256)
+                if b <= max(8, rows)] or [DEFAULT]
+    row_opts = [b for b in (64, 128, 256) if b <= max(64, rows)]
+    out_opts = [b for b in (128, 256) if b <= max(128, m)]
+    cands = [DEFAULT]
+    for br in row_opts:
+        for bm in out_opts:
+            cands.append(TileConfig(bm=bm, br=br))
+    return cands
+
+
+def autotune(op: str, run: Callable[[TileConfig], Any],
+             cands: Iterable[TileConfig] | None = None, *,
+             key: str | None = None, rows: int = 0, m: int = 0,
+             k: int = 0) -> TileConfig:
+    """Time every candidate with ``run`` and cache the fastest under ``key``."""
+    best_tiles, best_us = DEFAULT, float("inf")
+    for tiles in (cands if cands is not None else candidates(op, rows, m, k)):
+        try:
+            us = _time(run, tiles)
+        except Exception:
+            continue  # candidate invalid for this shape (VMEM, divisibility)
+        if us < best_us:
+            best_tiles, best_us = tiles, us
+    if key is not None and best_us != float("inf"):
+        record(key, best_tiles, best_us)
+    return best_tiles
+
+
+def rows_bucket(rows: int) -> int:
+    """Round the (dynamic, batch-dependent) row count up to a power of two so
+    serving batch jitter doesn't fragment the cache."""
+    return max(8, 1 << max(0, rows - 1).bit_length())
+
+
+def tracing(*operands: Any) -> bool:
+    """True when any operand is an abstract tracer (inside jit/scan/vmap).
+
+    Tuning must not run under trace: ``block_until_ready`` is a no-op on
+    tracers, so _time would measure Python TRACING speed and persist a
+    noise-derived winner to the cache."""
+    return any(isinstance(a, jax.core.Tracer) for a in operands)
+
+
+def tiles_for(op: str, *, rows: int, m: int, k: int, tune: bool = False,
+              run: Callable[[TileConfig], Any] | None = None,
+              operands: tuple = (), **key_params: Any) -> TileConfig:
+    """Cached tiles for (op, shape); optionally search when ``tune``.
+
+    ``operands``: the live arrays the runner closes over — tuning is
+    silently skipped when they are tracers (see ``tracing``); the cached
+    entry (from an eager tune) still applies inside jit.
+    """
+    key = make_key(op, rows=rows_bucket(rows), m=m, k=k, **key_params)
+    cached = lookup(key)
+    if cached is not None:
+        return cached
+    if tune and run is not None and not tracing(*operands):
+        return autotune(op, run, key=key, rows=rows, m=m, k=k)
+    return DEFAULT

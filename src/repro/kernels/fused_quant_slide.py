@@ -46,7 +46,9 @@ def _kernel(x_ref, q_ref, s_ref, *, n_fam: int, fp8: bool):
     r = qmax / a                                        # pass 1 (Alg.1 l.6-8)
     scale = a / qmax
     if fp8:
-        q8 = (x * r).astype(jnp.float8_e4m3fn)          # saturating cast
+        # clamp BEFORE the cast: e4m3 has no inf, and XLA's float32->e4m3
+        # cast only saturates near the boundary — far-overflow becomes NaN
+        q8 = jnp.clip(x * r, -qmax, qmax).astype(jnp.float8_e4m3fn)
     else:
         q8 = jnp.clip(jnp.round(x * r), -qmax, qmax
                       ).astype(jnp.int8)                # pass 2 (l.9-19)
@@ -54,9 +56,14 @@ def _kernel(x_ref, q_ref, s_ref, *, n_fam: int, fp8: bool):
     s_ref[...] = scale
 
 
-def _row_block(k: int, itemsize: int, vmem_budget: int = 4 * 1024 * 1024) -> int:
-    # in + lifted out + fp32 working copy per row
-    per_row = k * (itemsize + 4) + (2 * k) * 1
+def _row_block(k: int, itemsize: int, n_fam: int, out_itemsize: int = 1,
+               vmem_budget: int = 4 * 1024 * 1024) -> int:
+    # in + fp32 working copy + lifted out + fp32 scale, per row.  The lifted
+    # width is the family's true expansion gamma*K = 2(N-1)/N * K (Eq. 10),
+    # not a hardcoded 2*K, and is scaled by the output itemsize (1 byte for
+    # int8/fp8).
+    gk = (k // (2 * n_fam)) * (n_fam - 1) * 4
+    per_row = k * (itemsize + 4) + gk * out_itemsize + 4
     r = max(8, min(512, vmem_budget // max(per_row, 1)))
     return int(r) // 8 * 8
 
@@ -72,12 +79,13 @@ def fused_quant_slide_pallas(x: jax.Array, *, n_fam: int,
     rows, k = x.shape
     if k % (2 * n_fam):
         raise ValueError(f"K={k} must be a multiple of 2N={2 * n_fam}")
+    out_dtype = jnp.float8_e4m3fn if fp8 else jnp.int8
     gk = (k // (2 * n_fam)) * (n_fam - 1) * 4
-    br = block_rows or _row_block(k, x.dtype.itemsize)
+    br = block_rows or _row_block(k, x.dtype.itemsize, n_fam,
+                                  jnp.dtype(out_dtype).itemsize)
     pad = (-rows) % br
     xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
     grid = (xp.shape[0] // br,)
-    out_dtype = jnp.float8_e4m3fn if fp8 else jnp.int8
     q, s = pl.pallas_call(
         functools.partial(_kernel, n_fam=n_fam, fp8=fp8),
         grid=grid,

@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: single-pass SlideSparse GEMM (quant + lift + matmul).
+
+The paper's §4.2 memory-op argument says Activation Lifting is near-zero cost
+*only* when Psi rides on the quantization store phase.  The two-kernel
+pipeline (fused_quant_slide -> quant_matmul) still pays one HBM round-trip of
+the lifted gamma*K activations (1.5x at 6:8).  This kernel removes it: the
+per-token quantization + lifting run in the GEMM *prologue*, the lifted int8
+rows live only in VMEM scratch, and the MXU consumes them directly against
+Phi(W).  HBM traffic per call (DESIGN.md §2):
+
+    two-kernel:  read X (4K) + write Psi(q) (gamma*K) + read Psi(q) (gamma*K)
+                 + read Phi(W) + write Y
+    single-pass: read X (4K) + read Phi(W) + write Y
+
+Grid is (R/br, M/bm) with M innermost; the quant+lift prologue fires only at
+m == 0, so each activation row-block is quantized exactly once per call and
+reused from scratch for every output tile.  The dequant epilogue optionally
+fuses a bias add and SiLU/GELU so MLP gate projections need no separate
+elementwise pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.patterns import SlideDecomposition
+
+from .fused_quant_slide import lift_pairs
+
+_QMAX = 127.0
+
+ACTIVATIONS = {
+    None: lambda v: v,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
+
+
+def apply_activation(v: jax.Array, activation: str | None) -> jax.Array:
+    """Shared epilogue nonlinearity (kernels and jnp oracles use this one)."""
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unsupported epilogue activation {activation!r};"
+                         f" expected one of {sorted(ACTIVATIONS, key=str)}")
+    return ACTIVATIONS[activation](v)
+
+
+def prepare_bias(bias, m: int, pad_m: int):
+    """Shared bias-operand prep for the GEMM kernels: (has_bias, [1, m+pad]
+    fp32).  A zeros row stands in when there is no bias — the kernels
+    specialize on the static has_bias flag and skip the add."""
+    has_bias = bias is not None
+    b = (bias if has_bias else jnp.zeros((m,), jnp.float32))
+    b = b.astype(jnp.float32).reshape(1, m)
+    if pad_m:
+        b = jnp.pad(b, ((0, 0), (0, pad_m)))
+    return has_bias, b
+
+
+def clamp_rows(br: int, rows: int) -> int:
+    """Don't over-tile tiny row counts: cap br at the next power of two."""
+    return min(br, max(8, 1 << max(0, rows - 1).bit_length()))
+
+
+def _kernel(x_ref, w_ref, sw_ref, b_ref, o_ref, q_scr, sx_scr, *,
+            n_fam: int, has_bias: bool, activation: str | None):
+    # Prologue (Alg. 1 fused into the GEMM): quantize + lift the row block
+    # once per r, at the first m step; every later m step reuses the scratch.
+    @pl.when(pl.program_id(1) == 0)
+    def _quant_lift():
+        x = x_ref[...].astype(jnp.float32)
+        a = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
+        r = _QMAX / a
+        q8 = jnp.clip(jnp.round(x * r), -_QMAX, _QMAX).astype(jnp.int8)
+        q_scr[...] = lift_pairs(q8, n_fam)
+        sx_scr[...] = a / _QMAX
+
+    acc = jax.lax.dot_general(
+        q_scr[...], w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * sx_scr[...] * sw_ref[...].reshape(1, -1)
+    if has_bias:
+        out = out + b_ref[...]
+    o_ref[...] = apply_activation(out, activation).astype(o_ref.dtype)
+
+
+def default_tiles(m: int, k: int, gk: int,
+                  vmem_budget: int = 12 * 1024 * 1024) -> tuple[int, int]:
+    """(br, bm) heuristic: largest power-of-two tiles whose fp32 input,
+    int8 lifted scratch, weight tile and int32 accumulator fit the budget."""
+    bm = 256 if m >= 256 else max(8, 1 << max(0, (m - 1)).bit_length())
+    br = 256
+
+    def need(br_, bm_):
+        return br_ * k * 4 + br_ * gk + bm_ * gk + br_ * bm_ * 4 + br_ * 8
+    while need(br, bm) > vmem_budget and br > 8:
+        br //= 2
+    while need(br, bm) > vmem_budget and bm > 8:
+        bm //= 2  # huge gamma*K: the weight tile itself must shrink too
+    return br, bm
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_fam", "out_dtype", "interpret", "br", "bm", "activation"))
+def fused_slided_matmul_pallas(x, w_slided_q, s_w, bias=None, *, n_fam: int,
+                               out_dtype=jnp.float32, interpret: bool = False,
+                               br: int | None = None, bm: int | None = None,
+                               activation: str | None = None):
+    """y[R, M] = act((Psi(q(x)) @ Phi(W)^T) * s_x * s_w + bias) — one kernel.
+
+    x: [R, K] float; w_slided_q: [M, gamma*K] int8; s_w: [M, 1] fp32;
+    bias: [M] fp32 or None.  The lifted activations never leave VMEM.
+    """
+    rows, k = x.shape
+    if k % (2 * n_fam):
+        raise ValueError(f"K={k} must be a multiple of 2N={2 * n_fam}")
+    gk = (k // (2 * n_fam)) * (n_fam - 1) * 4
+    m = w_slided_q.shape[0]
+    if w_slided_q.shape[1] != gk:
+        raise ValueError(
+            f"w_slided_q has contraction {w_slided_q.shape[1]}, expected"
+            f" gamma*K = {gk} for K={k}, N={n_fam}")
+    dbr, dbm = default_tiles(m, k, gk)
+    br, bm = br or dbr, bm or dbm
+    br = clamp_rows(br, rows)
+
+    pad_r, pad_m = (-rows) % br, (-m) % bm
+    has_bias, b = prepare_bias(bias, m, pad_m)
+    if pad_r:
+        x = jnp.pad(x, ((0, pad_r), (0, 0)))
+    if pad_m:
+        w_slided_q = jnp.pad(w_slided_q, ((0, pad_m), (0, 0)))
+        s_w = jnp.pad(s_w, ((0, pad_m), (0, 0)), constant_values=1.0)
+    rp, mp = x.shape[0], w_slided_q.shape[0]
+
+    grid = (rp // br, mp // bm)
+    y = pl.pallas_call(
+        functools.partial(_kernel, n_fam=n_fam, has_bias=has_bias,
+                          activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, k), lambda r, m_: (r, 0)),
+            pl.BlockSpec((bm, gk), lambda r, m_: (m_, 0)),
+            pl.BlockSpec((bm, 1), lambda r, m_: (m_, 0)),
+            pl.BlockSpec((1, bm), lambda r, m_: (0, m_)),
+        ],
+        out_specs=pl.BlockSpec((br, bm), lambda r, m_: (r, m_)),
+        out_shape=jax.ShapeDtypeStruct((rp, mp), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((br, gk), jnp.int8),
+            pltpu.VMEM((br, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w_slided_q, s_w, b)
+    return y[:rows, :m]
+
+
+def fused_slided_matmul(x: jax.Array, w_slided_q: jax.Array, s_w: jax.Array,
+                        dec: SlideDecomposition, bias=None,
+                        out_dtype=jnp.float32, interpret: bool = False,
+                        activation: str | None = None, **tiles):
+    n = dec.source.family_n
+    if n is None or dec.hw.m != 2 or dec.hw.n != 4:
+        raise ValueError("Pallas kernel supports the (2N-2):2N -> 2:4 family")
+    return fused_slided_matmul_pallas(
+        x, w_slided_q, s_w, bias, n_fam=n, out_dtype=out_dtype,
+        interpret=interpret, activation=activation, **tiles)

@@ -4,6 +4,12 @@ Dispatch rule (DESIGN.md §6): Pallas lowers only on real TPU backends; the
 multi-pod dry-run and CPU tests use the mathematically identical jnp paths
 from ref.py.  ``use_pallas=None`` auto-selects; tests force
 ``use_pallas=True, interpret=True`` to execute kernel bodies on CPU.
+
+Tile sizes flow through repro.kernels.autotune (DESIGN.md §2.4): every
+wrapper consults the shape-keyed cache, and ``tune=True`` runs a one-shot
+search on the live operands before caching the winner.  ``bias`` /
+``activation`` select the fused epilogue (DESIGN.md §2.3) on kernels that
+support it; the jnp fallbacks apply the identical ref.epilogue semantics.
 """
 from __future__ import annotations
 
@@ -15,7 +21,9 @@ from repro.core.compressed import CompressedSlided
 from repro.core.patterns import SlideDecomposition
 
 from . import ref
+from . import autotune
 from . import fused_quant_slide as _fqs
+from . import fused_slide_matmul as _fsm
 from . import slide_matmul as _smm
 from . import quant_matmul as _qmm
 
@@ -33,24 +41,40 @@ def _flatten_rows(x: jax.Array):
 
 def fused_quant_slide(x: jax.Array, dec: SlideDecomposition,
                       use_pallas: bool | None = None,
-                      interpret: bool = False):
+                      interpret: bool = False, tune: bool = False):
     """Per-token int8 quant + lifting. x: [..., K] -> ([..., gamma*K], [..., 1])."""
     x2, lead = _flatten_rows(x)
     if _auto(use_pallas):
-        q, s = _fqs.fused_quant_slide(x2, dec, interpret=interpret)
+        tiles = autotune.tiles_for(
+            "fused_quant_slide", rows=x2.shape[0], m=0, k=x2.shape[1],
+            pattern=f"{dec.source.z}:{dec.source.l}",
+            dtype=str(x2.dtype), interpret=interpret, tune=tune, operands=(x2,),
+            run=lambda t: _fqs.fused_quant_slide(
+                x2, dec, interpret=interpret,
+                **t.kernel_kwargs("block_rows")))
+        q, s = _fqs.fused_quant_slide(x2, dec, interpret=interpret,
+                                      **tiles.kernel_kwargs("block_rows"))
     else:
         q, s = ref.fused_quant_slide(x2, dec)
     return q.reshape(lead + (q.shape[-1],)), s.reshape(lead + (1,))
 
 
 def quant_matmul(q_x, s_x, q_w, s_w, out_dtype=jnp.float32,
-                 use_pallas: bool | None = None, interpret: bool = False):
+                 use_pallas: bool | None = None, interpret: bool = False,
+                 tune: bool = False):
     """Dense w8a8 GEMM + dequant. q_x: [..., K] int8."""
     x2, lead = _flatten_rows(q_x)
     s2 = s_x.reshape(-1, 1)
     if _auto(use_pallas):
+        tiles = autotune.tiles_for(
+            "quant_matmul", rows=x2.shape[0], m=q_w.shape[0], k=x2.shape[1],
+            interpret=interpret, tune=tune, operands=(x2, q_w),
+            run=lambda t: _qmm.quant_matmul_pallas(
+                x2, q_w, s2, s_w, out_dtype=out_dtype, interpret=interpret,
+                **t.kernel_kwargs("bm", "br", "bk")))
         y = _qmm.quant_matmul_pallas(x2, q_w, s2, s_w, out_dtype=out_dtype,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     **tiles.kernel_kwargs("bm", "br", "bk"))
     else:
         y = ref.quant_matmul(x2, s2, q_w, s_w, out_dtype)
     return y.reshape(lead + (y.shape[-1],))
@@ -60,8 +84,10 @@ def compressed_matmul(x: jax.Array, c: CompressedSlided,
                       s_w: jax.Array | None = None,
                       act_quant: str | None = None,
                       out_dtype=None, use_pallas: bool | None = None,
-                      interpret: bool = False):
-    """y = x @ decompress(c)^T — the TPU-adapted SlideSparse linear.
+                      interpret: bool = False,
+                      bias: jax.Array | None = None,
+                      activation: str | None = None, tune: bool = False):
+    """y = act(x @ decompress(c)^T + bias) — the TPU-adapted SlideSparse linear.
 
     act_quant='int8' requires int8 compressed values + s_w row scales and
     performs the fused per-token quantization on x.
@@ -72,31 +98,77 @@ def compressed_matmul(x: jax.Array, c: CompressedSlided,
         assert c.values.dtype == jnp.int8 and s_w is not None
         if _auto(use_pallas):
             qx = quant.quantize_int8(x2)
+            tiles = _compressed_tiles(qx.q, c, tune, interpret, out_dtype,
+                                      s_x=qx.scale, s_w=s_w, bias=bias,
+                                      activation=activation)
             y = _smm.compressed_matmul(qx.q, c, s_x=qx.scale, s_w=s_w,
-                                       out_dtype=out_dtype, interpret=interpret)
+                                       bias=bias, out_dtype=out_dtype,
+                                       interpret=interpret,
+                                       activation=activation,
+                                       **tiles.kernel_kwargs("bm", "br", "bk"))
         else:
-            y = ref.compressed_matmul_int8(x2, c, s_w, out_dtype)
+            y = ref.compressed_matmul_int8(x2, c, s_w, out_dtype, bias=bias,
+                                           activation=activation)
     else:
+        if (jnp.issubdtype(x2.dtype, jnp.floating)
+                and not jnp.issubdtype(c.values.dtype, jnp.floating)):
+            raise TypeError(
+                f"float activations ({x2.dtype}) against {c.values.dtype}"
+                "-compressed weights: a silent cast would truncate the"
+                " activations to integers. Pass act_quant='int8' (with s_w"
+                " row scales) for the quantized path, or compress"
+                " float weights for the float path.")
         if _auto(use_pallas):
-            y = _smm.compressed_matmul(x2.astype(c.values.dtype), c,
-                                       out_dtype=out_dtype, interpret=interpret)
+            x2c = x2.astype(c.values.dtype)
+            tiles = _compressed_tiles(x2c, c, tune, interpret, out_dtype,
+                                      bias=bias, activation=activation)
+            y = _smm.compressed_matmul(x2c, c, bias=bias, out_dtype=out_dtype,
+                                       interpret=interpret,
+                                       activation=activation,
+                                       **tiles.kernel_kwargs("bm", "br", "bk"))
         else:
-            y = ref.compressed_matmul_fp(x2, c, out_dtype)
+            y = ref.compressed_matmul_fp(x2, c, out_dtype, bias=bias,
+                                         activation=activation)
     return y.reshape(lead + (y.shape[-1],))
+
+
+def _compressed_tiles(x2, c, tune, interpret, out_dtype, **call_kw):
+    return autotune.tiles_for(
+        "compressed_matmul", rows=x2.shape[0], m=c.values.shape[0], k=c.k,
+        pattern=f"{c.z}:{c.l}", dtype=str(c.values.dtype), interpret=interpret, tune=tune,
+        operands=(x2, c.values),
+        run=lambda t: _smm.compressed_matmul(
+            x2, c, out_dtype=out_dtype, interpret=interpret, **call_kw,
+            **t.kernel_kwargs("bm", "br", "bk")))
 
 
 def slided_matmul_int8(x: jax.Array, w_slided_q: jax.Array, s_w: jax.Array,
                        dec: SlideDecomposition, out_dtype=None,
                        use_pallas: bool | None = None,
-                       interpret: bool = False):
-    """Paper-faithful GPU-semantics path: fused quant+slide, then the
-    gamma*K-contraction GEMM against Phi(W) (int8)."""
+                       interpret: bool = False,
+                       bias: jax.Array | None = None,
+                       activation: str | None = None, tune: bool = False):
+    """Paper-faithful GPU-semantics path, executed as ONE kernel: per-token
+    quantization + lifting run in the GEMM prologue (fused_slide_matmul.py),
+    so the lifted gamma*K activations never touch HBM — vs. the old
+    fused_quant_slide -> quant_matmul pair which round-tripped them."""
     out_dtype = out_dtype or x.dtype
     x2, lead = _flatten_rows(x)
     if _auto(use_pallas):
-        q, s = _fqs.fused_quant_slide(x2, dec, interpret=interpret)
-        y = _qmm.quant_matmul_pallas(q, w_slided_q, s, s_w,
-                                     out_dtype=out_dtype, interpret=interpret)
+        tiles = autotune.tiles_for(
+            "fused_slided_matmul", rows=x2.shape[0], m=w_slided_q.shape[0],
+            k=x2.shape[1], pattern=f"{dec.source.z}:{dec.source.l}",
+            dtype=str(x2.dtype), interpret=interpret, tune=tune,
+            operands=(x2, w_slided_q),
+            run=lambda t: _fsm.fused_slided_matmul(
+                x2, w_slided_q, s_w, dec, bias=bias, out_dtype=out_dtype,
+                interpret=interpret, activation=activation,
+                **t.kernel_kwargs("br", "bm")))
+        y = _fsm.fused_slided_matmul(x2, w_slided_q, s_w, dec, bias=bias,
+                                     out_dtype=out_dtype, interpret=interpret,
+                                     activation=activation,
+                                     **tiles.kernel_kwargs("br", "bm"))
     else:
-        y = ref.slided_matmul_int8(x2, w_slided_q, s_w, dec, out_dtype)
+        y = ref.slided_matmul_int8(x2, w_slided_q, s_w, dec, out_dtype,
+                                   bias=bias, activation=activation)
     return y.reshape(lead + (y.shape[-1],))

@@ -1,8 +1,9 @@
 """Pallas TPU kernel: dense w8a8 GEMM with per-token dequant epilogue.
 
 The dense-quantized baseline (cuBLASLt INT8 analogue) that SlideSparse is
-compared against in the paper's tables; also the epilogue pattern shared by
-slide_matmul.py.
+compared against in the paper's tables; shares the fused bias+activation
+epilogue (DESIGN.md §2.3) so baseline-vs-sparse comparisons stay apples
+to apples.
 """
 from __future__ import annotations
 
@@ -13,8 +14,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .fused_slide_matmul import apply_activation, clamp_rows, prepare_bias
 
-def _kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, k_steps: int):
+
+def _kernel(x_ref, w_ref, sx_ref, sw_ref, b_ref, o_ref, acc_ref, *,
+            k_steps: int, has_bias: bool, activation: str | None):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -26,20 +30,26 @@ def _kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _epilogue():
         acc = acc_ref[...].astype(jnp.float32)
-        o_ref[...] = (acc * sx_ref[...] * sw_ref[...].reshape(1, -1)
-                      ).astype(o_ref.dtype)
+        out = acc * sx_ref[...] * sw_ref[...].reshape(1, -1)
+        if has_bias:
+            out = out + b_ref[...]
+        o_ref[...] = apply_activation(out, activation).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "interpret", "bm",
-                                             "br", "bk"))
-def quant_matmul_pallas(q_x, q_w, s_x, s_w, *, out_dtype=jnp.float32,
+                                             "br", "bk", "activation"))
+def quant_matmul_pallas(q_x, q_w, s_x, s_w, bias=None, *,
+                        out_dtype=jnp.float32,
                         interpret: bool = False, bm: int = 256,
-                        br: int = 256, bk: int = 512):
-    """y[R, M] = (q_x[R, K] @ q_w[M, K]^T) * s_x * s_w  (int32 accumulate)."""
+                        br: int = 256, bk: int = 512,
+                        activation: str | None = None):
+    """y[R, M] = act((q_x[R, K] @ q_w[M, K]^T) * s_x * s_w + bias)
+    (int32 accumulate)."""
     rows, k = q_x.shape
     m = q_w.shape[0]
-    br = min(br, max(8, 1 << (rows - 1).bit_length()))
+    br = clamp_rows(br, rows)
     pad_r, pad_k, pad_m = (-rows) % br, (-k) % bk, (-m) % bm
+    has_bias, b = prepare_bias(bias, m, pad_m)
     if pad_r or pad_k:
         q_x = jnp.pad(q_x, ((0, pad_r), (0, pad_k)))
     if pad_r:
@@ -52,17 +62,19 @@ def quant_matmul_pallas(q_x, q_w, s_x, s_w, *, out_dtype=jnp.float32,
     k_steps = kp // bk
     grid = (rp // br, mp // bm, k_steps)
     y = pl.pallas_call(
-        functools.partial(_kernel, k_steps=k_steps),
+        functools.partial(_kernel, k_steps=k_steps, has_bias=has_bias,
+                          activation=activation),
         grid=grid,
         in_specs=[
             pl.BlockSpec((br, bk), lambda r, m_, k_: (r, k_)),
             pl.BlockSpec((bm, bk), lambda r, m_, k_: (m_, k_)),
             pl.BlockSpec((br, 1), lambda r, m_, k_: (r, 0)),
             pl.BlockSpec((bm, 1), lambda r, m_, k_: (m_, 0)),
+            pl.BlockSpec((1, bm), lambda r, m_, k_: (0, m_)),
         ],
         out_specs=pl.BlockSpec((br, bm), lambda r, m_, k_: (r, m_)),
         out_shape=jax.ShapeDtypeStruct((rp, mp), out_dtype),
         scratch_shapes=[pltpu.VMEM((br, bm), jnp.int32)],
         interpret=interpret,
-    )(q_x, q_w, s_x, s_w)
+    )(q_x, q_w, s_x, s_w, b)
     return y[:rows, :m]

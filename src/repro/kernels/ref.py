@@ -13,6 +13,16 @@ from repro.core import quant, slide, compressed as comp
 from repro.core.patterns import SlideDecomposition
 
 
+def epilogue(y: jax.Array, bias: jax.Array | None,
+             activation: str | None) -> jax.Array:
+    """Shared bias + nonlinearity semantics for every matmul oracle (fp32)."""
+    from .fused_slide_matmul import apply_activation  # local: avoid cycle
+
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return apply_activation(y, activation)
+
+
 def fused_quant_slide(x: jax.Array, dec: SlideDecomposition,
                       fp8: bool = False):
     """Paper Alg. 1: per-row dynamic quantization + activation lifting.
@@ -38,7 +48,8 @@ def quant_matmul(q_x: jax.Array, s_x: jax.Array, q_w: jax.Array,
 
 
 def compressed_matmul_fp(x: jax.Array, c: comp.CompressedSlided,
-                         out_dtype=None) -> jax.Array:
+                         out_dtype=None, bias: jax.Array | None = None,
+                         activation: str | None = None) -> jax.Array:
     """Float path: decompress-to-original-layout weights, dense matmul.
 
     x: [rows, K]; returns [rows, out].  The TPU-adapted execution of
@@ -49,11 +60,13 @@ def compressed_matmul_fp(x: jax.Array, c: comp.CompressedSlided,
     acc = jax.lax.dot_general(
         x.astype(jnp.float32), w_rec.astype(jnp.float32),
         (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    return acc.astype(out_dtype)
+    return epilogue(acc, bias, activation).astype(out_dtype)
 
 
 def compressed_matmul_int8(x: jax.Array, c: comp.CompressedSlided,
-                           s_w: jax.Array, out_dtype=None) -> jax.Array:
+                           s_w: jax.Array, out_dtype=None,
+                           bias: jax.Array | None = None,
+                           activation: str | None = None) -> jax.Array:
     """w8a8 path: per-token int8 quant + int8 decompress-matmul + dequant.
 
     c.values must be int8 (weights quantized per-output-row before
@@ -65,11 +78,13 @@ def compressed_matmul_int8(x: jax.Array, c: comp.CompressedSlided,
     acc = jax.lax.dot_general(
         qx.q, w_rec, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
     y = acc.astype(jnp.float32) * qx.scale * s_w[:, 0][None, :]
-    return y.astype(out_dtype)
+    return epilogue(y, bias, activation).astype(out_dtype)
 
 
 def slided_matmul_int8(x: jax.Array, w_slided_q: jax.Array, s_w: jax.Array,
-                       dec: SlideDecomposition, out_dtype=None) -> jax.Array:
+                       dec: SlideDecomposition, out_dtype=None,
+                       bias: jax.Array | None = None,
+                       activation: str | None = None) -> jax.Array:
     """Paper-faithful GPU semantics end-to-end in int8:
 
     y = (Psi(q_x) @ Phi(q_W)^T) * s_x * s_w   over the gamma*K contraction.
@@ -80,4 +95,4 @@ def slided_matmul_int8(x: jax.Array, w_slided_q: jax.Array, s_w: jax.Array,
         q_lift, w_slided_q, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.int32)
     y = acc.astype(jnp.float32) * s_x * s_w[:, 0][None, :]
-    return y.astype(out_dtype)
+    return epilogue(y, bias, activation).astype(out_dtype)

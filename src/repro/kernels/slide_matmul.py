@@ -12,6 +12,15 @@ positions against delta=0..3 (select), then add the two pair-halves into the
 group's pair grid with static shifted slices — the mirror image of the
 lifting trick in fused_quant_slide.py.  The packer guarantees each source
 position receives at most one non-zero, so the adds never collide.
+
+Grid order (DESIGN.md §2.3): ``(M/bm, R/br)`` with **R innermost**.  The
+weight tile for output block m is decompressed exactly once — at r == 0,
+chunk by chunk into a persistent VMEM scratch — and every activation
+row-block then consumes the cached dense tile.  Total decompressions per
+call are ``(M/bm) * (K/bk)`` regardless of R; the previous ``(r, m, k)``
+grid re-ran the same VPU decompression once per row-block (R/br times).
+The dequant epilogue optionally fuses a bias add and SiLU/GELU so the
+transformer MLP gate/up projections need no separate elementwise pass.
 """
 from __future__ import annotations
 
@@ -24,6 +33,24 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.compressed import CompressedSlided
+
+from .fused_slide_matmul import apply_activation, clamp_rows, prepare_bias
+
+# Instrumentation (tests / benchmarks): counts runtime executions of
+# decompress_tile inside the kernel when instrument=True is passed.
+_DECOMPRESS_COUNT = [0]
+
+
+def reset_decompress_count() -> None:
+    _DECOMPRESS_COUNT[0] = 0
+
+
+def decompress_count() -> int:
+    return _DECOMPRESS_COUNT[0]
+
+
+def _bump_decompress_count() -> None:
+    _DECOMPRESS_COUNT[0] += 1
 
 
 def decompress_tile(vals: jax.Array, idx: jax.Array, n_fam: int) -> jax.Array:
@@ -38,7 +65,10 @@ def decompress_tile(vals: jax.Array, idx: jax.Array, n_fam: int) -> jax.Array:
     # select: contribution of slot t to in-window offset d (d = 0..3)
     delta = jnp.arange(4, dtype=jnp.int8).reshape(1, 1, 1, 1, 4)
     hit = (p[..., None] == delta)
-    contrib = jnp.sum(jnp.where(hit, v[..., None], 0), axis=3)  # [bm,g,w,4]
+    # dtype pinned: jnp.sum would promote int8 to int32 (packer guarantees
+    # at most one non-zero per source position, so no overflow is possible)
+    contrib = jnp.sum(jnp.where(hit, v[..., None], 0), axis=3,
+                      dtype=vals.dtype)  # [bm,g,w,4]
     # window j covers pairs (j, j+1): low half -> pair j, high half -> pair j+1
     lo, hi = contrib[..., 0:2], contrib[..., 2:4]
     zpair = jnp.zeros((bm, g, 1, 2), vals.dtype)
@@ -47,23 +77,30 @@ def decompress_tile(vals: jax.Array, idx: jax.Array, n_fam: int) -> jax.Array:
     return pairs.reshape(bm, g * 2 * n_fam)
 
 
-def _mm_kernel(x_ref, v_ref, i_ref, sx_ref, sw_ref, o_ref, acc_ref,
-               *, n_fam: int, k_steps: int, acc_dtype, quantized: bool):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+def _mm_kernel(x_ref, v_ref, i_ref, sx_ref, sw_ref, b_ref, o_ref, w_scr,
+               *, n_fam: int, k_chunks: int, bk: int, bkc: int, acc_dtype,
+               quantized: bool, has_bias: bool, activation: str | None,
+               instrument: bool):
+    # Decompress the (m, :) weight tile once — at the first r step — into the
+    # persistent VMEM scratch; all later r steps reuse it (R-innermost grid).
+    @pl.when(pl.program_id(1) == 0)
+    def _decompress():
+        for j in range(k_chunks):
+            w_scr[:, j * bk:(j + 1) * bk] = decompress_tile(
+                v_ref[:, j * bkc:(j + 1) * bkc],
+                i_ref[:, j * bkc:(j + 1) * bkc], n_fam)
+            if instrument:
+                jax.debug.callback(_bump_decompress_count)
 
-    w_dense = decompress_tile(v_ref[...], i_ref[...], n_fam)  # [BM, BK]
-    acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], w_dense, (((1,), (1,)), ((), ())),
+    acc = jax.lax.dot_general(
+        x_ref[...], w_scr[...], (((1,), (1,)), ((), ())),
         preferred_element_type=acc_dtype)
-
-    @pl.when(pl.program_id(2) == k_steps - 1)
-    def _epilogue():
-        acc = acc_ref[...].astype(jnp.float32)
-        if quantized:
-            acc = acc * sx_ref[...] * sw_ref[...].reshape(1, -1)
-        o_ref[...] = acc.astype(o_ref.dtype)
+    out = acc.astype(jnp.float32)
+    if quantized:
+        out = out * sx_ref[...] * sw_ref[...].reshape(1, -1)
+    if has_bias:
+        out = out + b_ref[...]
+    o_ref[...] = apply_activation(out, activation).astype(o_ref.dtype)
 
 
 def choose_bk(l: int, target: int = 512) -> int:
@@ -71,28 +108,65 @@ def choose_bk(l: int, target: int = 512) -> int:
     return base * max(1, round(target / base))
 
 
+def default_tiles(m: int, k: int, kc: int, x_itemsize: int,
+                  w_itemsize: int,
+                  vmem_budget: int = 12 * 1024 * 1024) -> tuple[int, int]:
+    """(bm, br) heuristic: the full-K activation block, the full-K dense
+    weight scratch, the compressed values+indices blocks and the output
+    tile must all fit the VMEM budget (the R-innermost grid holds a whole
+    (bm, K) decompressed tile resident, so K enters the footprint)."""
+    bm = 256 if m >= 256 else max(8, 1 << max(0, m - 1).bit_length())
+    br = 256
+
+    def need(bm_, br_):
+        return (br_ * k * x_itemsize          # x block
+                + bm_ * k * w_itemsize        # dense decompressed scratch
+                + bm_ * kc * (w_itemsize + 1)  # compressed values + int8 idx
+                + br_ * bm_ * 4)              # accumulator / output tile
+    while need(bm, br) > vmem_budget and br > 8:
+        br //= 2                              # x block shrinks fastest
+    while need(bm, br) > vmem_budget and bm > 8:
+        bm //= 2
+    return bm, br
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("n_fam", "quantized", "interpret", "bm", "br", "bk",
-                     "out_dtype"))
-def compressed_matmul_pallas(x, values, indices, s_x, s_w, *, n_fam: int,
-                             quantized: bool, out_dtype=jnp.float32,
-                             interpret: bool = False,
-                             bm: int = 256, br: int = 256, bk: int | None = None):
-    """y[R, M] = x[R, K] @ decompress(values, indices)[M, K]^T  (+ dequant).
+                     "out_dtype", "activation", "instrument"))
+def compressed_matmul_pallas(x, values, indices, s_x, s_w, bias=None, *,
+                             n_fam: int, quantized: bool,
+                             out_dtype=jnp.float32, interpret: bool = False,
+                             bm: int | None = None, br: int | None = None,
+                             bk: int | None = None,
+                             activation: str | None = None,
+                             instrument: bool = False):
+    """y[R, M] = act(x[R, K] @ decompress(values, indices)[M, K]^T
+                     (+ dequant) (+ bias)).
 
     quantized=True: x/values int8, int32 accumulate, epilogue * s_x * s_w.
     quantized=False: float path, fp32 accumulate (s_x/s_w ignored; pass ones).
+    bias: [M] fp32 or None; activation: None | 'silu' | 'gelu' (fused
+    epilogue, applied after dequant/bias).  ``bk`` is the dense width of one
+    decompression chunk; the full (bm, K) tile is cached in VMEM scratch.
     """
     rows, k = x.shape
     m = values.shape[0]
     l = 2 * n_fam
     density_num, density_den = 2 * n_fam - 2, 2 * n_fam
     bk = bk or choose_bk(l)
+    if bk % l:
+        raise ValueError(f"bk={bk} must be a multiple of L={l} so compressed"
+                         " chunk boundaries align with window groups")
     bkc = bk * density_num // density_den
 
-    br = min(br, max(8, 1 << (rows - 1).bit_length()))  # don't over-tile tiny R
+    dbm, dbr = default_tiles(m, k, values.shape[1], x.dtype.itemsize,
+                             values.dtype.itemsize)
+    bm, br = bm or dbm, br or dbr
+    br = clamp_rows(br, rows)
+
     pad_r, pad_k, pad_m = (-rows) % br, (-k) % bk, (-m) % bm
+    has_bias, b = prepare_bias(bias, m, pad_m)
     if pad_r or pad_k:
         x = jnp.pad(x, ((0, pad_r), (0, pad_k)))
     if pad_r:
@@ -106,34 +180,39 @@ def compressed_matmul_pallas(x, values, indices, s_x, s_w, *, n_fam: int,
         s_w = jnp.pad(s_w, ((0, pad_m), (0, 0)), constant_values=1.0)
 
     rp, kp, mp = x.shape[0], x.shape[1], values.shape[0]
-    k_steps = kp // bk
-    grid = (rp // br, mp // bm, k_steps)
+    kcp = values.shape[1]
+    k_chunks = kp // bk
+    grid = (mp // bm, rp // br)  # R innermost: decompress once per (m, k)
     acc_dtype = jnp.int32 if quantized else jnp.float32
 
     y = pl.pallas_call(
-        functools.partial(_mm_kernel, n_fam=n_fam, k_steps=k_steps,
-                          acc_dtype=acc_dtype, quantized=quantized),
+        functools.partial(_mm_kernel, n_fam=n_fam, k_chunks=k_chunks, bk=bk,
+                          bkc=bkc, acc_dtype=acc_dtype, quantized=quantized,
+                          has_bias=has_bias, activation=activation,
+                          instrument=instrument),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((br, bk), lambda r, m_, k_: (r, k_)),
-            pl.BlockSpec((bm, bkc), lambda r, m_, k_: (m_, k_)),
-            pl.BlockSpec((bm, bkc), lambda r, m_, k_: (m_, k_)),
-            pl.BlockSpec((br, 1), lambda r, m_, k_: (r, 0)),
-            pl.BlockSpec((bm, 1), lambda r, m_, k_: (m_, 0)),
+            pl.BlockSpec((br, kp), lambda m_, r: (r, 0)),
+            pl.BlockSpec((bm, kcp), lambda m_, r: (m_, 0)),
+            pl.BlockSpec((bm, kcp), lambda m_, r: (m_, 0)),
+            pl.BlockSpec((br, 1), lambda m_, r: (r, 0)),
+            pl.BlockSpec((bm, 1), lambda m_, r: (m_, 0)),
+            pl.BlockSpec((1, bm), lambda m_, r: (0, m_)),
         ],
-        out_specs=pl.BlockSpec((br, bm), lambda r, m_, k_: (r, m_)),
+        out_specs=pl.BlockSpec((br, bm), lambda m_, r: (r, m_)),
         out_shape=jax.ShapeDtypeStruct((rp, mp), out_dtype),
-        scratch_shapes=[pltpu.VMEM((br, bm), acc_dtype)],
+        scratch_shapes=[pltpu.VMEM((bm, kp), values.dtype)],
         interpret=interpret,
-    )(x, values, indices, s_x, s_w)
+    )(x, values, indices, s_x, s_w, b)
     return y[:rows, :m]
 
 
 def compressed_matmul(x: jax.Array, c: CompressedSlided,
                       s_x: jax.Array | None = None,
                       s_w: jax.Array | None = None,
+                      bias: jax.Array | None = None,
                       out_dtype=jnp.float32, interpret: bool = False,
-                      **tiles):
+                      activation: str | None = None, **tiles):
     n = c.decomposition.source.family_n
     if n is None or c.m != 2 or c.n != 4:
         raise ValueError("Pallas kernel supports the (2N-2):2N -> 2:4 family")
@@ -145,5 +224,6 @@ def compressed_matmul(x: jax.Array, c: CompressedSlided,
     if s_w is None:
         s_w = jnp.ones((mout, 1), jnp.float32)
     return compressed_matmul_pallas(
-        x, c.values, c.indices, s_x, s_w, n_fam=n, quantized=quantized,
-        out_dtype=out_dtype, interpret=interpret, **tiles)
+        x, c.values, c.indices, s_x, s_w, bias, n_fam=n, quantized=quantized,
+        out_dtype=out_dtype, interpret=interpret, activation=activation,
+        **tiles)

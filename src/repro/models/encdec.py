@@ -36,6 +36,9 @@ def _mlp_init(key, d, f, dtype):
 
 
 def _mlp(params, x, sp):
+    if sp.fuse_epilogue:  # GELU in the in-projection's kernel epilogue
+        return sl.apply(params["w_out"],
+                        sl.apply(params["w_in"], x, sp, activation="gelu"), sp)
     return sl.apply(params["w_out"],
                     jax.nn.gelu(sl.apply(params["w_in"], x, sp)), sp)
 

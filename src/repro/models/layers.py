@@ -95,6 +95,13 @@ def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
 
 
 def swiglu(params, x, cfg: SparsityConfig):
+    """Gate/up/down MLP.  With ``cfg.fuse_epilogue`` the SiLU runs inside
+    the gate projection's matmul epilogue (DESIGN.md §2.3) instead of as a
+    separate elementwise pass over the [*, d_ff] gate tensor."""
+    if cfg.fuse_epilogue:
+        g = sl.apply(params["w_gate"], x, cfg, activation="silu")
+        u = sl.apply(params["w_up"], x, cfg)
+        return sl.apply(params["w_down"], g * u, cfg)
     g = sl.apply(params["w_gate"], x, cfg)
     u = sl.apply(params["w_up"], x, cfg)
     return sl.apply(params["w_down"], jax.nn.silu(g) * u, cfg)

@@ -76,6 +76,16 @@ def _dtype(cfg: ModelConfig):
     return jnp.dtype(cfg.dtype)
 
 
+def _ffn(lp, cfg: ModelConfig, h, sp, is_moe: bool):
+    """The unit's FFN: MoE experts or dense SwiGLU.  The dense path honors
+    sp.fuse_epilogue (SiLU fused into the gate projection's Pallas epilogue,
+    DESIGN.md §2.3); the MoE expert MLP uses raw einsums and ignores the
+    knob — threading fusion through moe.apply is an open item."""
+    if is_moe:
+        return moe.apply(lp["ffn"], moe_spec(cfg), h, sp)
+    return layers.swiglu(lp["ffn"], h, sp)
+
+
 # ------------------------------------------------------------------ init
 def _unit_init(cfg: ModelConfig, key) -> dict[str, Any]:
     unit = {}
@@ -136,9 +146,7 @@ def _apply_unit(cfg: ModelConfig, unit_params, x, positions, cache=None,
             xx = xx + y
             if cfg.d_ff > 0:
                 h = layers.rmsnorm(lp["ffn_norm"], xx, cfg.norm_eps)
-                y = (moe.apply(lp["ffn"], moe_spec(cfg), h, sp) if is_moe
-                     else layers.swiglu(lp["ffn"], h, sp))
-                xx = xx + y
+                xx = xx + _ffn(lp, cfg, h, sp, is_moe)
             return xx, nc
 
         # NOTE: an additional per-layer jax.checkpoint here was measured and
@@ -291,9 +299,7 @@ def prefill(params, cfg: ModelConfig, tokens, max_len: int | None = None,
             xx = xx + y
             if cfg.d_ff > 0:
                 hh = layers.rmsnorm(lp["ffn_norm"], xx, cfg.norm_eps)
-                y = (moe.apply(lp["ffn"], moe_spec(cfg), hh, sp) if is_moe
-                     else layers.swiglu(lp["ffn"], hh, sp))
-                xx = xx + y
+                xx = xx + _ffn(lp, cfg, hh, sp, is_moe)
         return (_sp(xx, cfg),), new_cache
 
     (h,), cache = jax.lax.scan(unit_fn, (_sp(x, cfg),), params["units"])

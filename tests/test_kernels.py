@@ -79,6 +79,86 @@ def test_fused_quant_slide_fp8(pattern):
     assert rel.mean() < 0.05
 
 
+@pytest.mark.parametrize("pattern", [(4, 6), (6, 8), (8, 10)])
+@pytest.mark.parametrize("rows", [1, 24, 130])
+def test_fused_quant_slide_fp8_scale_correctness(pattern, rows):
+    """fp8 branch: the per-row scale is exactly absmax/448 (clamped), for
+    adversarial rows — huge outliers, tiny denormal-range rows, zero rows."""
+    dec = _dec(pattern)
+    k = 4 * dec.source.l
+    rng = np.random.default_rng(hash((pattern, rows)) % 2**32)
+    x = np.asarray(rng.standard_normal((rows, k)), np.float32)
+    x[0, 0] = 3e4           # outlier row
+    if rows > 2:
+        x[1, :] = 0.0       # all-zero row -> absmax clamps to 1e-8
+        x[2, :] *= 1e-9     # sub-clamp magnitudes
+    x = jnp.asarray(x)
+    q, s = fused_quant_slide_pallas(x, n_fam=dec.source.family_n,
+                                    interpret=True, fp8=True)
+    assert q.dtype == jnp.float8_e4m3fn
+    expected = np.maximum(np.abs(np.asarray(x)).max(-1, keepdims=True), 1e-8)
+    expected = expected / 448.0
+    np.testing.assert_allclose(np.asarray(s), expected, rtol=1e-6)
+
+
+def test_fused_quant_slide_fp8_saturating_cast():
+    """e4m3 has no inf: the store path must saturate at +-448 and the
+    quantized magnitudes can never exceed the fp8 max.  Note XLA's raw
+    float32->e4m3 cast only saturates NEAR the boundary — far-overflow
+    becomes NaN — which is why the kernel clamps before casting."""
+    big = jnp.asarray([1e4, 448.0, 460.0], jnp.float32)
+    cast = np.asarray(big.astype(jnp.float8_e4m3fn), np.float32)
+    assert np.isnan(cast[0])            # raw cast is NOT total...
+    np.testing.assert_array_equal(cast[1:], [448.0, 448.0])
+    clamped = jnp.clip(big, -448.0, 448.0).astype(jnp.float8_e4m3fn)
+    np.testing.assert_array_equal(     # ...the kernel's clamp+cast is
+        np.asarray(clamped, np.float32), [448.0, 448.0, 448.0])
+
+    dec = _dec((6, 8))
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((16, 4 * dec.source.l)) * 1e6,
+                    jnp.float32)
+    q, s = fused_quant_slide_pallas(x, n_fam=4, interpret=True, fp8=True)
+    qf = np.asarray(q, np.float32)
+    assert np.isfinite(qf).all()
+    assert np.abs(qf).max() <= 448.0
+    # each row's absmax element lands on the fp8 max exactly
+    assert (np.abs(qf).max(axis=-1) == 448.0).all()
+
+
+@pytest.mark.parametrize("pattern", [(4, 6), (6, 8)])
+def test_fused_quant_slide_fp8_roundtrip_vs_float_reference(pattern):
+    """Dequantized fp8 output reconstructs the LIFTED float input to within
+    e4m3 relative precision (2^-3 mantissa ~ 6% worst case)."""
+    dec = _dec(pattern)
+    k = 8 * dec.source.l
+    x = jnp.asarray(np.random.default_rng(6).standard_normal((32, k)) * 5,
+                    jnp.float32)
+    q, s = fused_quant_slide_pallas(x, n_fam=dec.source.family_n,
+                                    interpret=True, fp8=True, block_rows=8)
+    rec = np.asarray(q, np.float32) * np.asarray(s)
+    lifted = np.asarray(slide.lift(x, dec))
+    rel = np.abs(rec - lifted) / (np.abs(lifted) + 1e-6)
+    assert rel.mean() < 0.04
+    np.testing.assert_allclose(rec, lifted, rtol=0.07, atol=1e-3)
+
+
+def test_fused_quant_slide_fp8_matches_jnp_oracle():
+    """The fp8 kernel branch tracks ref.fused_quant_slide(fp8=True) through
+    the ops dispatch padding path (rows not a multiple of block_rows)."""
+    dec = _dec((6, 8))
+    k = 6 * dec.source.l
+    x = jnp.asarray(np.random.default_rng(8).standard_normal((37, k)) * 2,
+                    jnp.float32)
+    q_ref, s_ref = ref.fused_quant_slide(x, dec, fp8=True)
+    q_k, s_k = fused_quant_slide_pallas(x, n_fam=4, interpret=True, fp8=True,
+                                        block_rows=16)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(q_k, np.float32),
+                               np.asarray(q_ref, np.float32),
+                               rtol=0.07, atol=0.05)
+
+
 def test_fused_quant_slide_small_block_rows():
     dec = _dec((6, 8))
     x = jnp.asarray(np.random.default_rng(0).standard_normal((33, 48)),

@@ -2,6 +2,7 @@
 import pytest
 from fractions import Fraction
 
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly when absent
 from hypothesis import given, strategies as st
 
 from repro.core.patterns import (
