@@ -1,11 +1,18 @@
 """Batched serving with SlideSparse-packed weights (paper §4 pipeline).
 
-Compares dense vs (2N-2):2N-compressed serving on the same prompts and
-reports throughput + the analytic speedup the packed format would yield on
-the target hardware (GPU Sparse Tensor Cores: N/(N-1); TPU decode:
-weight-traffic reduction — DESIGN.md §2).
+Default mode compares dense vs (2N-2):2N-compressed serving on the same
+prompts and reports throughput + the analytic speedup the packed format
+would yield on the target hardware (GPU Sparse Tensor Cores: N/(N-1); TPU
+decode: weight-traffic reduction — DESIGN.md §2).
+
+``--engine`` switches to continuous-batching traffic (DESIGN.md §5):
+requests with different prompt lengths arrive staggered, join the running
+decode batch mid-flight, retire when done, and free their KV pages —
+all linears still routed through the packed SlideSparse pipeline.  Every
+engine stream is checked against the one-shot dense-KV reference.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py [--pattern 6 8]
+      PYTHONPATH=src python examples/serve_batched.py --engine --requests 4
 """
 import argparse
 import dataclasses
@@ -20,6 +27,56 @@ from repro.models import model as M
 from repro.runtime import serve_loop
 
 
+def engine_demo(args, base, params):
+    """Continuous-batching traffic over the packed SlideSparse pipeline:
+    staggered arrivals, mid-flight joins, retirement freeing pages.  Every
+    stream is verified against the one-shot dense-KV reference."""
+    z, l = args.pattern
+    cfg = dataclasses.replace(base, sparsity=SparsityConfig(
+        pattern=(z, l), mode="compressed", use_pallas=False,
+        fuse_epilogue=args.fuse_epilogue))
+    packed = serve_loop.pack_params(params, cfg)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, base.vocab_size,
+                            size=int(rng.integers(args.prompt_len // 2,
+                                                  args.prompt_len + 1))
+                            ).tolist()
+               for _ in range(args.requests)]
+
+    print(f"=== SlideSparse {z}:{l} continuous-batching engine "
+          f"({args.requests} staggered requests) ===")
+    ecfg = serve_loop.EngineConfig(
+        max_batch=min(args.batch, args.requests), page_size=8,
+        num_pages=max(16, args.requests *
+                      (args.prompt_len + args.new_tokens) // 8 + 8),
+        max_seq_len=args.prompt_len + args.new_tokens,
+        prefill_chunk=max(8, args.prompt_len // 2))
+    eng = serve_loop.ServeEngine(packed, cfg, ecfg)
+    for i, p in enumerate(prompts):
+        eng.submit(p, args.new_tokens, rid=i, arrival=2 * i)
+    out = eng.run()
+    s = eng.stats
+    print(f"engine: {s.steps} steps, decode {s.decode_tok_s:.1f} tok/s, "
+          f"batch occupancy {s.mean_occupancy:.2f}, "
+          f"evictions {s.evictions}")
+
+    mismatch = 0
+    for i, p in enumerate(prompts):
+        toks, _ = serve_loop.generate(
+            packed, cfg, {"tokens": np.asarray([p], np.int32)},
+            args.new_tokens)
+        ref = np.asarray(toks)[0].tolist()
+        ok = ref == out[i].tokens
+        mismatch += not ok
+        print(f"  r{i}: prompt_len={len(p)} tokens={out[i].tokens[:6]}... "
+              f"parity_with_dense_ref={'OK' if ok else 'MISMATCH'}")
+    if mismatch:
+        raise SystemExit(f"{mismatch} stream(s) diverged from the dense "
+                         "reference")
+    print("all engine streams match the one-shot dense-KV reference")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-3-4b")
@@ -30,6 +87,11 @@ def main():
     ap.add_argument("--fuse-epilogue", action="store_true",
                     help="fuse the MLP SiLU into the matmul epilogue "
                          "(DESIGN.md §2.3)")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching paged-KV engine demo "
+                         "(staggered join/leave traffic, DESIGN.md §5)")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="engine mode: number of staggered requests")
     args = ap.parse_args()
 
     base = registry.smoke_config(args.arch)
@@ -37,6 +99,9 @@ def main():
                                head_dim=32, d_ff=512, vocab_size=4096,
                                num_layers=len(base.unit_pattern) * 2)
     params = M.init(base, jax.random.PRNGKey(0))
+
+    if args.engine:
+        return engine_demo(args, base, params)
     batch = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         base.vocab_size)}

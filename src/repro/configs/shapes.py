@@ -2,7 +2,7 @@
 
 LM transformer shapes are seq_len x global_batch.  decode_*/long_* lower
 ``serve_step`` (one new token against a KV cache of seq_len), NOT
-``train_step``.  long_500k runs only for sub-quadratic archs (DESIGN.md §5).
+``train_step``.  long_500k runs only for sub-quadratic archs (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -71,5 +71,5 @@ def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
     """Whether this (arch x shape) cell runs; reason string if skipped."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, ("pure full-attention stack: long_500k needs "
-                       "sub-quadratic attention (skip noted in DESIGN.md §5)")
+                       "sub-quadratic attention (skip noted in DESIGN.md §8)")
     return True, ""

@@ -61,8 +61,10 @@ def prepare_bias(bias, m: int, pad_m: int):
 
 
 def clamp_rows(br: int, rows: int) -> int:
-    """Don't over-tile tiny row counts: cap br at the next power of two."""
-    return min(br, max(8, 1 << max(0, rows - 1).bit_length()))
+    """Don't over-tile tiny row counts: cap br at the next power of two.
+    Shares autotune.rows_bucket so the cache keys and the clamp agree."""
+    from . import autotune
+    return min(br, autotune.rows_bucket(rows))
 
 
 def _kernel(x_ref, w_ref, sw_ref, b_ref, o_ref, q_scr, sx_scr, *,

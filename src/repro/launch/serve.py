@@ -24,6 +24,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--engine", action="store_true",
+                    help="serve through the continuous-batching paged-KV "
+                         "engine (staggered arrivals) instead of the "
+                         "one-shot prefill+decode loop")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=256)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     args = ap.parse_args(argv)
 
     cfg = registry.smoke_config(args.arch) if args.smoke \
@@ -43,6 +50,25 @@ def main(argv=None):
         batch["audio_embeds"] = jax.random.normal(
             jax.random.PRNGKey(2),
             (args.batch, cfg.max_source_positions, cfg.d_model))
+
+    if args.engine:
+        ecfg = serve_loop.EngineConfig(
+            max_batch=args.batch, page_size=args.page_size,
+            num_pages=args.num_pages,
+            max_seq_len=args.prompt_len + args.new_tokens,
+            prefill_chunk=args.prefill_chunk)
+        eng = serve_loop.ServeEngine(params, cfg, ecfg)
+        for i in range(args.batch):
+            eng.submit(batch["tokens"][i].tolist(), args.new_tokens,
+                       rid=i, arrival=i)  # staggered joins
+        out = eng.run()
+        s = eng.stats
+        print(f"[launch.serve] engine: {len(out)} requests; decode "
+              f"{s.decode_tok_s:.1f} tok/s; occupancy "
+              f"{s.mean_occupancy:.2f}; evictions {s.evictions}; "
+              f"sample: {out[0].tokens[:8]}")
+        return
+
     toks, stats = serve_loop.generate(params, cfg, batch, args.new_tokens)
     print(f"[launch.serve] prefill {stats.prefill_s:.2f}s; decode "
           f"{stats.decode_tok_s:.1f} tok/s; sample: {toks[0][:8].tolist()}")

@@ -273,6 +273,123 @@ def _dequant_kv(q, scale, dtype):
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
+# ------------------------------------------------------------- paged KV
+def make_paged_pool(spec: AttnSpec, num_pages: int, page_size: int,
+                    dtype=jnp.bfloat16):
+    """Physical page pool [num_pages, page_size, KVH, hd] shared by every
+    sequence (DESIGN.md §5).  dtype=int8 -> KIVI-style quantized pages with
+    per-(token, kv-head) fp32 scales, same layout as make_cache."""
+    shape = (num_pages, page_size, spec.num_kv_heads, spec.head_dim)
+    pool = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if dtype == jnp.int8:
+        sshape = (num_pages, page_size, spec.num_kv_heads, 1)
+        pool["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        pool["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    return pool
+
+
+def _pool_scatter(pool, page_ids, slot_ids, k_new, v_new):
+    """Write per-token K/V rows into pages.  page_ids/slot_ids: [T] (a
+    page_id == num_pages is out of bounds -> the write is dropped, which is
+    how pad tokens and inactive decode slots are masked).  k_new/v_new:
+    [T, KVH, hd] full-precision."""
+    quantized = pool["k"].dtype == jnp.int8
+    if quantized:
+        k_new, ks = _quant_kv(k_new)
+        v_new, vs = _quant_kv(v_new)
+    out = dict(pool)
+    out["k"] = pool["k"].at[page_ids, slot_ids].set(
+        k_new.astype(pool["k"].dtype), mode="drop")
+    out["v"] = pool["v"].at[page_ids, slot_ids].set(
+        v_new.astype(pool["v"].dtype), mode="drop")
+    if quantized:
+        out["k_scale"] = pool["k_scale"].at[page_ids, slot_ids].set(
+            ks, mode="drop")
+        out["v_scale"] = pool["v_scale"].at[page_ids, slot_ids].set(
+            vs, mode="drop")
+    return out
+
+
+def _pool_gather(pool, page_table, dtype):
+    """page_table [B, maxp] -> contiguous logical K/V [B, maxp*P, KVH, hd].
+
+    Entries past a sequence's allocation point at physical page 0 — always a
+    valid gather — and every read from them lands at a logical position
+    >= kv_len, where the causal / kv_len masks zero it out.
+    """
+    b, maxp = page_table.shape
+
+    def g(leaf):
+        out = leaf[page_table]                      # [B, maxp, P, ...]
+        return out.reshape((b, maxp * leaf.shape[1]) + leaf.shape[2:])
+
+    k, v = g(pool["k"]), g(pool["v"])
+    if pool["k"].dtype == jnp.int8:
+        k = _dequant_kv(k, g(pool["k_scale"]), dtype)
+        v = _dequant_kv(v, g(pool["v_scale"]), dtype)
+    return k.astype(dtype), v.astype(dtype)
+
+
+def paged_prefill_chunk(params, spec: AttnSpec, x, positions,
+                        sp_cfg: SparsityConfig, pool, page_table,
+                        start, real_len, page_size: int):
+    """Prefill chunk with history: x [1, C, D] are prompt tokens
+    [start, start+C) (the last C - real_len rows are right-padding).  Writes
+    the chunk's K/V into the sequence's pages, then attends causally over
+    everything written so far.  Returns (out [1, C, D], new_pool)."""
+    b, c, _ = x.shape
+    num_pages = pool["k"].shape[0]
+    q = _split_heads(sl.apply(params["wq"], x, sp_cfg), spec.num_heads,
+                     spec.head_dim)
+    q = _rope(spec, q, positions)
+    k_new = _split_heads(sl.apply(params["wk"], x, sp_cfg),
+                         spec.num_kv_heads, spec.head_dim)
+    v_new = _split_heads(sl.apply(params["wv"], x, sp_cfg),
+                         spec.num_kv_heads, spec.head_dim)
+    k_new = _rope(spec, k_new, positions)
+
+    i = jnp.arange(c, dtype=jnp.int32)
+    abs_pos = start + i
+    page_ids = page_table[0, abs_pos // page_size]
+    page_ids = jnp.where(i < real_len, page_ids, num_pages)  # drop pads
+    pool = _pool_scatter(pool, page_ids, abs_pos % page_size,
+                         k_new[0], v_new[0])
+
+    kd, vd = _pool_gather(pool, page_table, x.dtype)
+    out = _chunked_sdpa(spec, q, kd, vd, q_offset=start)
+    out = out.reshape(b, c, spec.q_dim)
+    return sl.apply(params["wo"], out, sp_cfg), pool
+
+
+def paged_decode_step(params, spec: AttnSpec, x, sp_cfg: SparsityConfig,
+                      pool, page_table, kv_len, active, page_size: int):
+    """One-token decode over the paged pool.  x: [B, 1, D]; kv_len: [B]
+    pre-step lengths; active: [B] bool (inactive slots' writes are dropped
+    and their outputs are garbage the engine ignores).
+    Returns (out [B, 1, D], new_pool)."""
+    b = x.shape[0]
+    num_pages = pool["k"].shape[0]
+    positions = kv_len[:, None]
+    q = _split_heads(sl.apply(params["wq"], x, sp_cfg), spec.num_heads,
+                     spec.head_dim)
+    q = _rope(spec, q, positions)
+    k_new = _split_heads(sl.apply(params["wk"], x, sp_cfg),
+                         spec.num_kv_heads, spec.head_dim)
+    v_new = _split_heads(sl.apply(params["wv"], x, sp_cfg),
+                         spec.num_kv_heads, spec.head_dim)
+    k_new = _rope(spec, k_new, positions)
+
+    page_ids = page_table[jnp.arange(b), kv_len // page_size]
+    page_ids = jnp.where(active, page_ids, num_pages)
+    pool = _pool_scatter(pool, page_ids, kv_len % page_size,
+                         k_new[:, 0], v_new[:, 0])
+
+    kd, vd = _pool_gather(pool, page_table, x.dtype)
+    out = _decode_sdpa(spec, q, kd, vd, kv_len + 1)
+    out = out.reshape(b, 1, spec.q_dim)
+    return sl.apply(params["wo"], out, sp_cfg), pool
+
+
 def build_prefill_cache(params, spec: AttnSpec, x, positions,
                         sp_cfg: SparsityConfig, max_len: int,
                         dtype=jnp.bfloat16):

@@ -53,6 +53,29 @@ def serve_step(params, cfg: ModelConfig, token, cache, kv_len):
     return transformer.serve_step(params, cfg, token, cache, kv_len)
 
 
+def make_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     max_batch: int):
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError(
+            "paged serving engine covers decoder-only stacks; encoder-"
+            "decoder serving uses the dense one-shot path (serve_loop."
+            "generate)")
+    return transformer.make_paged_cache(cfg, num_pages, page_size, max_batch)
+
+
+def paged_prefill_chunk(params, cfg: ModelConfig, tokens, cache, page_table,
+                        start, real_len, slot, reset, page_size: int):
+    return transformer.paged_prefill_chunk(
+        params, cfg, tokens, cache, page_table, start, real_len, slot,
+        reset, page_size)
+
+
+def paged_decode_step(params, cfg: ModelConfig, token, cache, page_table,
+                      kv_len, active, page_size: int):
+    return transformer.paged_decode_step(
+        params, cfg, token, cache, page_table, kv_len, active, page_size)
+
+
 def make_cache(cfg: ModelConfig, batch: int, max_len: int):
     if cfg.is_encoder_decoder:
         return {"self": encdec.make_cache(cfg, batch, max_len),

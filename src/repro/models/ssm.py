@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import linear as sl
 from repro.core.linear import SparsityConfig
+from . import layers
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,18 +38,33 @@ class SSMSpec:
 
 def init(key, spec: SSMSpec, dtype=jnp.float32):
     ks = jax.random.split(key, 7)
+    h = spec.num_heads
+    # Mamba-2 reference inits (arXiv:2405.21060 App): per-head log-spaced A
+    # in [1, 16] and dt in [1e-3, 0.1] — identical heads (the old zeros /
+    # -2.0 constants) leave every head with the same timescale and the
+    # smoke-train loss plateaus; see EXPERIMENTS notes in CHANGES.md PR 2.
+    a0 = jnp.exp(jnp.linspace(jnp.log(1.0), jnp.log(16.0), h))
+    dt0 = jnp.exp(jnp.linspace(jnp.log(1e-3), jnp.log(0.1), h))
     p = {
         "wx": sl.init(ks[0], spec.d_model, spec.d_inner, dtype),
         "wz": sl.init(ks[1], spec.d_model, spec.d_inner, dtype),
         "wB": sl.init(ks[2], spec.d_model, spec.d_state, dtype),
         "wC": sl.init(ks[3], spec.d_model, spec.d_state, dtype),
         "wdt": sl.init(ks[4], spec.d_model, spec.num_heads, dtype),
-        "wo": sl.init(ks[5], spec.d_inner, spec.d_model, dtype),
+        # zero-init the residual-branch output projection: the block is an
+        # identity at init, so the SSD scan's sequence-accumulated variance
+        # (unlike softmax attention it is a *sum*, not a convex average)
+        # cannot drown the residual stream early in training
+        "wo": {"w": jnp.zeros((spec.d_model, spec.d_inner), dtype)},
         "conv_w": (jax.random.normal(ks[6], (spec.d_conv, spec.d_inner),
                                      jnp.float32) * 0.1).astype(dtype),
-        "A_log": jnp.zeros((spec.num_heads,), jnp.float32),
-        "dt_bias": jnp.full((spec.num_heads,), -2.0, jnp.float32),
+        "A_log": jnp.log(a0),
+        "dt_bias": jnp.log(jnp.expm1(dt0)),  # softplus^-1(dt0)
         "D": jnp.ones((spec.num_heads,), jnp.float32),
+        # gated RMSNorm before wo (Mamba-2 norm_before_gate): bounds the
+        # magnitude of the sequence-accumulated SSD output.  Nested under
+        # 'norm' so the leaf name 'g' hits the replicated sharding rule.
+        "norm": {"g": jnp.ones((spec.d_inner,), jnp.float32)},
     }
     return p
 
@@ -62,24 +78,35 @@ def _segsum(x):
     return jnp.where(mask, d, -jnp.inf)
 
 
-def _causal_conv(x, w, state=None):
+def _causal_conv(x, w, state=None, valid_len=None):
     """Depthwise causal conv. x: [B, S, C]; w: [K, C].
-    state: [B, K-1, C] trailing context (decode) or None (prefill)."""
+    state: [B, K-1, C] trailing context (decode / chunked prefill) or None.
+    valid_len: [B] count of real (non-pad) tokens — the carried state is the
+    window ending at the last *real* token, not the last pad."""
     k = w.shape[0]
     if state is None:
         xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
     else:
         xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
     out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
-    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    if k <= 1:
+        new_state = None
+    elif valid_len is None:
+        new_state = xp[:, -(k - 1):, :]
+    else:
+        # trailing k-1 entries ending at xp index (k-1) + valid_len - 1
+        new_state = jax.vmap(
+            lambda row, vl: jax.lax.dynamic_slice_in_dim(row, vl, k - 1, 0)
+        )(xp, valid_len)
     return jax.nn.silu(out), new_state
 
 
-def _ssd_chunked(x, a, b_mat, c_mat, chunk):
+def _ssd_chunked(x, a, b_mat, c_mat, chunk, h0=None):
     """Chunked SSD scan (Mamba-2 'ssd_minimal_discrete').
 
     x: [B, S, H, P] (already * dt); a: [B, S, H] log-decay (dt * A);
     b_mat/c_mat: [B, S, N] (single group, broadcast over heads).
+    h0: optional [B, H, P, N] initial state (chunked-prefill continuation).
     Returns y [B, S, H, P] and final state [B, H, P, N].
     """
     bsz, s, h, p = x.shape
@@ -112,8 +139,10 @@ def _ssd_chunked(x, a, b_mat, c_mat, chunk):
 
     sts = states.transpose(1, 0, 2, 3, 4)             # [C,B,H,P,N]
     decs = chunk_decay[:, :, 1:].transpose(2, 0, 1)   # [C,B,H]
-    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
-    h_final, h_prevs = jax.lax.scan(step, h0, (sts.astype(jnp.float32), decs))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(step, h0.astype(jnp.float32),
+                                    (sts.astype(jnp.float32), decs))
     prev_states = h_prevs.transpose(1, 0, 2, 3, 4)    # [B,C,H,P,N]
 
     state_decay_out = jnp.exp(a_cum)                  # [B,H,C,Q]
@@ -123,8 +152,19 @@ def _ssd_chunked(x, a, b_mat, c_mat, chunk):
     return y[:, :s], h_final
 
 
-def apply(params, spec: SSMSpec, x, sp_cfg: SparsityConfig, cache=None):
-    """x: [B, S, D]. cache (decode): {'conv': [B,K-1,dI], 'ssd': [B,H,P,N]}.
+def apply(params, spec: SSMSpec, x, sp_cfg: SparsityConfig, cache=None,
+          chunked: bool = False, valid_len=None):
+    """x: [B, S, D]. cache: {'conv': [B,K-1,dI], 'ssd': [B,H,P,N]}.
+
+    Three modes:
+      cache None                -> prefill from zero state (training/prefill)
+      cache + chunked=True      -> chunked-prefill continuation: run the SSD
+                                   scan from the cached state over S tokens
+                                   (paged serving engine).  ``valid_len``
+                                   [B] masks right-padding: pad tokens get
+                                   dt == 0, so they neither move the state
+                                   nor enter the carried conv window.
+      cache + chunked=False     -> O(1) single-token decode (S == 1)
     Returns (out, new_cache | None)."""
     bsz, s, _ = x.shape
     h, p, n = spec.num_heads, spec.head_dim, spec.d_state
@@ -134,17 +174,22 @@ def apply(params, spec: SSMSpec, x, sp_cfg: SparsityConfig, cache=None):
     dt = jax.nn.softplus(
         sl.apply(params["wdt"], x, sp_cfg).astype(jnp.float32)
         + params["dt_bias"])                                  # [B,S,H]
+    if valid_len is not None:
+        valid = jnp.arange(s, dtype=jnp.int32)[None, :] < valid_len[:, None]
+        dt = dt * valid[..., None]
     a = -jnp.exp(params["A_log"])                             # [H]
 
     conv_state = cache["conv"] if cache is not None else None
-    xi, new_conv = _causal_conv(xi, params["conv_w"], conv_state)
+    xi, new_conv = _causal_conv(xi, params["conv_w"], conv_state,
+                                valid_len=valid_len)
     b_mat = sl.apply(params["wB"], x, sp_cfg).astype(jnp.float32)
     c_mat = sl.apply(params["wC"], x, sp_cfg).astype(jnp.float32)
 
     xh = xi.reshape(bsz, s, h, p).astype(jnp.float32)
-    if cache is None:
+    if cache is None or chunked:
+        h0 = None if cache is None else cache["ssd"]
         y, h_final = _ssd_chunked(xh * dt[..., None], dt * a, b_mat, c_mat,
-                                  min(spec.chunk, s))
+                                  min(spec.chunk, s), h0=h0)
         # prefill cache: final SSD state + trailing conv window
         new_cache = {"conv": new_conv, "ssd": h_final}
     else:
@@ -159,7 +204,9 @@ def apply(params, spec: SSMSpec, x, sp_cfg: SparsityConfig, cache=None):
         new_cache = {"conv": new_conv, "ssd": h_new}
     y = y + xh * params["D"][:, None]
     y = y.reshape(bsz, s, spec.d_inner).astype(x.dtype)
-    out = sl.apply(params["wo"], y * jax.nn.silu(z), sp_cfg)
+    # gated RMSNorm (Mamba-2 norm_before_gate) bounds the SSD magnitude
+    g = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = sl.apply(params["wo"], g, sp_cfg)
     return out, new_cache
 
 

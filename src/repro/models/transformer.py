@@ -309,6 +309,129 @@ def prefill(params, cfg: ModelConfig, tokens, max_len: int | None = None,
     return logits, cache, kv_len
 
 
+# ------------------------------------------------------- paged inference
+def make_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     max_batch: int):
+    """Stacked [U, ...] paged cache: attention layers hold a physical page
+    pool [num_pages, page_size, KVH, hd] (one logical page id addresses the
+    same slot in every layer, vLLM-style); SSM layers hold O(1) per-slot
+    recurrent state [max_batch, ...]."""
+    kv_dtype = jnp.dtype(cfg.kv_cache_dtype)
+
+    def one_unit(_):
+        c = {}
+        for i, kind in enumerate(cfg.unit_pattern):
+            if kind == "ssm":
+                c[f"layer_{i}"] = ssm.make_cache(ssm_spec(cfg), max_batch)
+            else:
+                c[f"layer_{i}"] = attention.make_paged_pool(
+                    attn_spec(cfg, kind), num_pages, page_size, kv_dtype)
+        return c
+
+    return jax.vmap(one_unit)(jnp.arange(cfg.num_units))
+
+
+def paged_prefill_chunk(params, cfg: ModelConfig, tokens, cache, page_table,
+                        start, real_len, slot, reset, page_size: int):
+    """One prompt chunk of one sequence through the paged cache.
+
+    tokens: [1, C] (rows >= real_len are right-padding); page_table:
+    [1, max_pages]; start/real_len/slot: i32 scalars; reset: bool scalar —
+    True on a sequence's first chunk, zeroing the slot's stale SSM state.
+    Returns (logits [1, V] at the last real token, new_cache).
+    """
+    b, c = tokens.shape
+    x = layers.embed(params["embed"], tokens).astype(_dtype(cfg))
+    positions = start + jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32)[None],
+                                         (b, c))
+    sp = cfg.sparsity
+    vlen = jnp.full((b,), real_len, jnp.int32)
+
+    def unit_fn(carry, xs):
+        unit_params, unit_cache = xs
+        xx = carry
+        new_cache = {}
+        for i, (kind, is_moe) in enumerate(
+                zip(cfg.unit_pattern, cfg.moe_pattern)):
+            lp = unit_params[f"layer_{i}"]
+            lc = unit_cache[f"layer_{i}"]
+            hh = layers.rmsnorm(lp["pre_norm"], xx, cfg.norm_eps)
+            if kind == "ssm":
+                st = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, 0), lc)
+                st = jax.tree_util.tree_map(
+                    lambda a: jnp.where(reset, jnp.zeros_like(a), a), st)
+                y, new_st = ssm.apply(lp["mixer"], ssm_spec(cfg), hh, sp,
+                                      cache=st, chunked=True, valid_len=vlen)
+                nc = jax.tree_util.tree_map(
+                    lambda full, upd: jax.lax.dynamic_update_slice_in_dim(
+                        full, upd.astype(full.dtype), slot, 0), lc, new_st)
+            else:
+                y, nc = attention.paged_prefill_chunk(
+                    lp["mixer"], attn_spec(cfg, kind), hh, positions, sp,
+                    lc, page_table, start, real_len, page_size)
+            xx = xx + y
+            if cfg.d_ff > 0:
+                hh = layers.rmsnorm(lp["ffn_norm"], xx, cfg.norm_eps)
+                xx = xx + _ffn(lp, cfg, hh, sp, is_moe)
+            new_cache[f"layer_{i}"] = nc
+        return xx, new_cache
+
+    x, new_cache = jax.lax.scan(unit_fn, x, (params["units"], cache))
+    h = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = jnp.clip(real_len - 1, 0, c - 1)
+    h_last = jax.lax.dynamic_slice_in_dim(h, last, 1, axis=1)
+    logits = logits_fn(params, cfg, h_last)[:, 0]
+    return logits, new_cache
+
+
+def paged_decode_step(params, cfg: ModelConfig, token, cache, page_table,
+                      kv_len, active, page_size: int):
+    """One decode token for every slot at once.  token: [B] i32; kv_len:
+    [B] context lengths already written; active: [B] bool (inactive slots
+    compute garbage the engine ignores; their pool writes are dropped).
+    Returns (logits [B, V], new_cache)."""
+    b = token.shape[0]
+    x = layers.embed(params["embed"], token[:, None]).astype(_dtype(cfg))
+    positions = kv_len[:, None]
+    sp = cfg.sparsity
+
+    def unit_fn(carry, xs):
+        unit_params, unit_cache = xs
+        xx = carry
+        new_cache = {}
+        for i, (kind, is_moe) in enumerate(
+                zip(cfg.unit_pattern, cfg.moe_pattern)):
+            lp = unit_params[f"layer_{i}"]
+            lc = unit_cache[f"layer_{i}"]
+            hh = layers.rmsnorm(lp["pre_norm"], xx, cfg.norm_eps)
+            if kind == "ssm":
+                y, nc = ssm.apply(lp["mixer"], ssm_spec(cfg), hh, sp,
+                                  cache=lc)
+                # inactive slots (incl. mid-chunked-prefill ones) must keep
+                # their state: the garbage decode input would otherwise
+                # clobber the SSD/conv state between two prefill chunks
+                nc = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(
+                        active.reshape((b,) + (1,) * (new.ndim - 1)),
+                        new, old.astype(new.dtype)), nc, lc)
+            else:
+                y, nc = attention.paged_decode_step(
+                    lp["mixer"], attn_spec(cfg, kind), hh, sp, lc,
+                    page_table, kv_len, active, page_size)
+            xx = xx + y
+            if cfg.d_ff > 0:
+                hh = layers.rmsnorm(lp["ffn_norm"], xx, cfg.norm_eps)
+                xx = xx + _ffn(lp, cfg, hh, sp, is_moe)
+            new_cache[f"layer_{i}"] = nc
+        return xx, new_cache
+
+    x, new_cache = jax.lax.scan(unit_fn, x, (params["units"], cache))
+    h = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, cfg, h)[:, 0]
+    return logits, new_cache
+
+
 def serve_step(params, cfg: ModelConfig, token, cache, kv_len):
     """One-token decode. token: [B] int32; cache: stacked unit cache;
     kv_len: [B] current lengths. Returns (logits [B, V], cache, kv_len+1)."""

@@ -1,0 +1,134 @@
+"""Block-paged KV cache accounting (vLLM-style, DESIGN.md §5).
+
+Device storage is a per-layer *pool* of fixed-size pages
+(``[num_pages, page_size, KVH, hd]``, built by
+``transformer.make_paged_cache``); this module owns the host-side
+bookkeeping: a free-list allocator over physical pages and per-sequence
+page tables mapping logical token blocks to physical pages.  The engine
+mirrors the tables to device as a dense ``[max_batch, max_pages]`` int32
+array each step — gather/scatter indices, never copied KV bytes.
+
+All methods are O(pages touched) pure-Python; the only invariant-bearing
+state is ``_free`` + ``_tables``, and ``check()`` asserts the global
+accounting balance (used by the scheduler property tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    """Raised when an allocation cannot be satisfied; the scheduler reacts
+    by deferring admission or evicting a victim (recompute-preemption)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    page_size: int = 8          # tokens per page
+    num_pages: int = 64         # physical pages in the pool (per layer)
+    max_batch: int = 4          # decode slots (concurrent sequences)
+    max_seq_len: int = 256      # hard cap on prompt + generated tokens
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return -(-self.max_seq_len // self.page_size)
+
+    def pages_for(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)
+
+
+class PagePool:
+    """LIFO free-list over physical page ids (LIFO keeps hot pages reused)."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))
+        self._allocated: set[int] = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise OutOfPages(f"need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if p not in self._allocated:
+                raise ValueError(f"double free of page {p}")
+            self._allocated.remove(p)
+            self._free.append(p)
+
+
+class KVCacheManager:
+    """Per-slot page tables over one shared pool.
+
+    A *slot* is a decode batch index (0..max_batch).  ``ensure(slot, n)``
+    grows the slot's table until it covers ``n`` tokens; ``free_slot``
+    returns every page.  Unused table entries point at physical page 0 —
+    always a valid gather index; reads from them are masked by ``kv_len``
+    (decode) or the causal mask (prefill), never trusted.
+    """
+
+    def __init__(self, cfg: PagedKVConfig):
+        self.cfg = cfg
+        self.pool = PagePool(cfg.num_pages)
+        self._tables: dict[int, list[int]] = {}
+
+    # ------------------------------------------------------------ queries
+    def slot_pages(self, slot: int) -> list[int]:
+        return list(self._tables.get(slot, ()))
+
+    def capacity(self, slot: int) -> int:
+        """Tokens the slot can hold without another allocation."""
+        return len(self._tables.get(slot, ())) * self.cfg.page_size
+
+    def can_allocate(self, num_tokens: int) -> bool:
+        return self.cfg.pages_for(num_tokens) <= self.pool.num_free
+
+    @property
+    def used_pages(self) -> int:
+        return self.pool.num_pages - self.pool.num_free
+
+    # ---------------------------------------------------------- mutation
+    def ensure(self, slot: int, num_tokens: int) -> None:
+        """Grow slot's table to cover ``num_tokens`` (raises OutOfPages)."""
+        if num_tokens > self.cfg.max_seq_len:
+            raise ValueError(f"sequence of {num_tokens} tokens exceeds "
+                             f"max_seq_len={self.cfg.max_seq_len}")
+        table = self._tables.setdefault(slot, [])
+        need = self.cfg.pages_for(num_tokens) - len(table)
+        if need > 0:
+            table.extend(self.pool.alloc(need))
+
+    def free_slot(self, slot: int) -> None:
+        pages = self._tables.pop(slot, [])
+        if pages:
+            self.pool.free(pages)
+
+    # ----------------------------------------------------- device mirror
+    def page_table_array(self) -> np.ndarray:
+        """Dense [max_batch, max_pages_per_seq] int32 mirror (unused -> 0)."""
+        out = np.zeros((self.cfg.max_batch, self.cfg.max_pages_per_seq),
+                       np.int32)
+        for slot, pages in self._tables.items():
+            out[slot, :len(pages)] = pages
+        return out
+
+    # --------------------------------------------------------- invariant
+    def check(self) -> None:
+        """Accounting balance: every page is free xor owned by one slot."""
+        owned: list[int] = [p for t in self._tables.values() for p in t]
+        assert len(owned) == len(set(owned)), "page owned by two slots"
+        assert set(owned) == self.pool._allocated, "alloc set drift"
+        assert len(owned) + self.pool.num_free == self.pool.num_pages, \
+            "page leak: used + free != total"
+        for slot, t in self._tables.items():
+            assert 0 <= slot < self.cfg.max_batch
+            assert len(t) <= self.cfg.max_pages_per_seq

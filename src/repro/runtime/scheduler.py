@@ -1,0 +1,244 @@
+"""Continuous-batching scheduler: iteration-level admission over paged KV.
+
+One ``Scheduler`` instance drives one model replica.  Each engine step asks
+for a :class:`Decision`:
+
+* ``PrefillChunk(seq, start, length)`` — run ``length`` prompt tokens of one
+  sequence through the model, writing KV into its pages.  Prompts are
+  chunked to ``prefill_chunk`` tokens (the per-step token budget), so long
+  prompts never stall running decodes for more than one step.
+* ``DecodeBatch(seqs)`` — one token for every running sequence at once.
+
+Policy (deterministic, FCFS):
+  1. admit waiting requests (arrival <= clock) while a slot and first-chunk
+     pages are available;
+  2. alternate prefill and decode when both have work (fair interleave);
+  3. a sequence that cannot get a page triggers *recompute preemption*: the
+     youngest running sequence is evicted — pages freed, prompt + generated
+     tokens re-queued as a new prompt.  Greedy decoding makes recompute
+     lossless: the re-prefilled sequence continues the same token stream.
+
+The scheduler never touches device state; it owns request lifecycle and the
+:class:`KVCacheManager` accounting, which is what the property tests drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+from .kv_cache import KVCacheManager, OutOfPages, PagedKVConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    arrival: int = 0            # engine step clock at which it may be admitted
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Sequence:
+    """A request resident in a decode slot."""
+    req: Request
+    slot: int
+    prefill_pos: int = 0        # prompt tokens whose KV is already written
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    evictions: int = 0
+
+    @property
+    def rid(self) -> int:
+        return self.req.rid
+
+    @property
+    def prompt(self) -> list[int]:
+        # admission-time prompt; after a recompute-preemption the re-queued
+        # Request's prompt already carries the previously generated tokens
+        return self.req.prompt
+
+    @property
+    def kv_len(self) -> int:
+        return len(self.req.prompt) + len(self.out_tokens)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_pos < len(self.req.prompt)
+
+    @property
+    def done(self) -> bool:
+        if len(self.out_tokens) >= self.req.max_new_tokens:
+            return True
+        return (self.req.eos_id is not None and self.out_tokens
+                and self.out_tokens[-1] == self.req.eos_id)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillChunk:
+    seq: Sequence
+    start: int
+    length: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeBatch:
+    seqs: tuple[Sequence, ...]
+
+
+Decision = PrefillChunk | DecodeBatch
+
+
+@dataclasses.dataclass
+class SchedStats:
+    admitted: int = 0
+    retired: int = 0
+    evicted: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    decode_steps: int = 0
+    occupancy_sum: float = 0.0  # sum over decode steps of running/max_batch
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / max(self.decode_steps, 1)
+
+
+class Scheduler:
+    def __init__(self, kv: KVCacheManager, prefill_chunk: int = 16):
+        self.kv = kv
+        self.cfg: PagedKVConfig = kv.cfg
+        self.prefill_chunk = prefill_chunk
+        self.waiting: deque[Request] = deque()
+        self.running: list[Sequence] = []   # admission order (oldest first)
+        self.clock = 0
+        self.stats = SchedStats()
+        self.trace: list[str] = []          # decision log (determinism tests)
+        self._last_was_prefill = False
+        self._requeued_outputs: dict[int, list[int]] = {}
+        self.evict_counts: dict[int, int] = {}
+
+    # ----------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.cfg.max_seq_len:
+            raise ValueError(f"request {req.rid}: prompt+max_new exceeds "
+                             f"max_seq_len={self.cfg.max_seq_len}")
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def _free_slots(self) -> list[int]:
+        used = {s.slot for s in self.running}
+        return [i for i in range(self.cfg.max_batch) if i not in used]
+
+    # ---------------------------------------------------------- policy
+    def _admit(self) -> None:
+        while self.waiting and self.waiting[0].arrival <= self.clock:
+            slots = self._free_slots()
+            req = self.waiting[0]
+            first = min(self.prefill_chunk, len(req.prompt))
+            if not slots or not self.kv.can_allocate(first):
+                return
+            self.waiting.popleft()
+            seq = Sequence(req, slots[0])
+            self.kv.ensure(seq.slot, first)
+            self.running.append(seq)
+            self.stats.admitted += 1
+            self.trace.append(f"admit r{req.rid}@s{seq.slot}")
+
+    def _evict_youngest(self, protect: Sequence) -> bool:
+        """Recompute-preempt the youngest running seq other than `protect`."""
+        victims = [s for s in self.running if s is not protect]
+        if not victims:
+            return False
+        victim = victims[-1]  # youngest admission
+        self.running.remove(victim)
+        self.kv.free_slot(victim.slot)
+        # re-queue at the FRONT: preempted work has priority over new work
+        # recompute preemption: generated-so-far tokens become prompt; the
+        # re-admitted sequence re-prefills them and continues the stream
+        victim.req = dataclasses.replace(
+            victim.req, prompt=victim.req.prompt + victim.out_tokens,
+            arrival=self.clock,
+            max_new_tokens=victim.req.max_new_tokens - len(victim.out_tokens))
+        self._requeued_outputs.setdefault(victim.rid, []).extend(
+            victim.out_tokens)
+        self.evict_counts[victim.rid] = self.evict_counts.get(
+            victim.rid, 0) + 1
+        self.waiting.appendleft(victim.req)
+        self.stats.evicted += 1
+        self.trace.append(f"evict r{victim.rid}")
+        return True
+
+    def _ensure_or_evict(self, seq: Sequence, num_tokens: int) -> bool:
+        while True:
+            try:
+                self.kv.ensure(seq.slot, num_tokens)
+                return True
+            except OutOfPages:
+                if not self._evict_youngest(protect=seq):
+                    raise RuntimeError(
+                        "paged-KV deadlock: a lone sequence cannot get a "
+                        "page — num_pages is below max_seq_len/page_size")
+
+    def next_decision(self) -> Decision | None:
+        """One iteration of the policy; advances the clock."""
+        self.clock += 1
+        self._admit()
+        prefilling = [s for s in self.running if s.prefilling]
+        decoding = [s for s in self.running if not s.prefilling and not s.done]
+
+        want_prefill = bool(prefilling)
+        if want_prefill and decoding and self._last_was_prefill:
+            # fair interleave: alternate prefill/decode when both have work,
+            # so joins reach the decode batch without starving running seqs
+            want_prefill = False
+        if want_prefill:
+            seq = prefilling[0]  # oldest admitted
+            start = seq.prefill_pos
+            length = min(self.prefill_chunk, len(seq.prompt) - start)
+            self._ensure_or_evict(seq, start + length)
+            self.stats.prefill_tokens += length
+            self._last_was_prefill = True
+            self.trace.append(f"prefill r{seq.rid}[{start}:{start + length}]")
+            return PrefillChunk(seq, start, length)
+        if decoding:
+            for seq in decoding:
+                if seq in self.running:  # an earlier ensure may have evicted it
+                    self._ensure_or_evict(seq, seq.kv_len)
+            decoding = [s for s in self.running
+                        if not s.prefilling and not s.done]
+            if not decoding:  # everyone got evicted while making room
+                self._last_was_prefill = False
+                return None
+            self.stats.decode_tokens += len(decoding)
+            self.stats.decode_steps += 1
+            self.stats.occupancy_sum += len(decoding) / self.cfg.max_batch
+            self._last_was_prefill = False
+            self.trace.append(
+                "decode " + ",".join(f"r{s.rid}" for s in decoding))
+            return DecodeBatch(tuple(decoding))
+        self._last_was_prefill = False
+        return None  # only future arrivals remain — engine ticks the clock
+
+    # --------------------------------------------------------- feedback
+    def completed_prefill(self, chunk: PrefillChunk) -> None:
+        chunk.seq.prefill_pos = chunk.start + chunk.length
+
+    def append_token(self, seq: Sequence, token: int) -> None:
+        seq.out_tokens.append(token)
+
+    def retire_finished(self) -> list[Sequence]:
+        done = [s for s in self.running if s.done]
+        for seq in done:
+            self.running.remove(seq)
+            self.kv.free_slot(seq.slot)
+            self.stats.retired += 1
+            self.trace.append(f"retire r{seq.rid}")
+        return done
+
+    def full_output(self, seq: Sequence) -> list[int]:
+        """Generated tokens incl. any emitted before an eviction."""
+        prior = getattr(self, "_requeued_outputs", {}).get(seq.rid, [])
+        return prior + seq.out_tokens

@@ -1,8 +1,14 @@
-"""Batched serving loop: prefill + decode with SlideSparse-packed weights.
+"""Serving: one-shot prefill+decode reference AND the continuous-batching
+paged-KV engine (DESIGN.md §5).
 
 Mirrors the paper's three phases (§4): the offline packer output is applied
 at load time via ``pack_params`` (prune -> quantize -> Phi -> compress),
 then per-request execution runs the fused-kernel linears.
+
+``generate`` is the dense-cache one-shot path (also the parity oracle for
+the engine tests).  :class:`ServeEngine` is the step-driven serving engine:
+requests join mid-flight, prefill chunks interleave with decode steps,
+finished sequences retire and free their KV pages.
 """
 from __future__ import annotations
 
@@ -12,10 +18,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import linear as sl
 from repro.models import model as M
+from repro.runtime.kv_cache import KVCacheManager, PagedKVConfig
+from repro.runtime.scheduler import (DecodeBatch, PrefillChunk, Request,
+                                     Scheduler)
 
 
 @dataclasses.dataclass
@@ -79,3 +89,161 @@ def generate(params, cfg: ModelConfig, batch, max_new_tokens: int,
     t_decode = time.time() - t1
     return jnp.stack(outs, 1), ServeStats(t_prefill, t_decode,
                                           int(b * max_new_tokens))
+
+
+# ----------------------------------------------------------------- engine
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Sizing knobs for the paged serving engine."""
+    max_batch: int = 4        # decode slots
+    page_size: int = 8        # tokens per KV page
+    num_pages: int = 64       # physical pages per attention layer
+    max_seq_len: int = 128    # prompt + generated cap per sequence
+    prefill_chunk: int = 16   # prompt tokens per engine step (token budget)
+
+    def kv_config(self) -> PagedKVConfig:
+        return PagedKVConfig(page_size=self.page_size,
+                             num_pages=self.num_pages,
+                             max_batch=self.max_batch,
+                             max_seq_len=self.max_seq_len)
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt: list[int]
+    tokens: list[int]
+    evictions: int = 0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    wall_s: float = 0.0
+    decode_tokens: int = 0
+    decode_steps: int = 0
+    prefill_tokens: int = 0
+    evictions: int = 0
+    mean_occupancy: float = 0.0
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.decode_tokens / max(self.wall_s, 1e-9)
+
+
+class ServeEngine:
+    """Continuous-batching engine over the fused SlideSparse pipeline.
+
+    All linears (q/k/v/o, FFN, lm_head) still route through
+    ``linear.apply`` — dense, masked, or the PR-1 fused slided/compressed
+    kernels, per ``cfg.sparsity`` — so the engine is the serving scenario
+    wrapped around the same GEMM path the paper benchmarks.
+
+    Two jitted step functions with fixed shapes (no shape-polymorphic
+    retraces): a [1, prefill_chunk] prompt-chunk step and a [max_batch]
+    decode step.  Scheduling and page accounting stay on host.
+    """
+
+    def __init__(self, params, cfg: ModelConfig,
+                 ecfg: EngineConfig | None = None):
+        self.ecfg = ecfg or EngineConfig()
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError("paged engine is decoder-only")
+        self.params, self.cfg = params, cfg
+        self.kv = KVCacheManager(self.ecfg.kv_config())
+        self.sched = Scheduler(self.kv, self.ecfg.prefill_chunk)
+        self.cache = M.make_paged_cache(cfg, self.ecfg.num_pages,
+                                        self.ecfg.page_size,
+                                        self.ecfg.max_batch)
+        ps = self.ecfg.page_size
+        self._prefill_fn = jax.jit(
+            lambda p, tok, c, pt, start, rlen, slot, reset:
+            M.paged_prefill_chunk(p, cfg, tok, c, pt, start, rlen, slot,
+                                  reset, ps))
+        self._decode_fn = jax.jit(
+            lambda p, tok, c, pt, kvl, act:
+            M.paged_decode_step(p, cfg, tok, c, pt, kvl, act, ps))
+        self.completions: dict[int, Completion] = {}
+        self._prompts: dict[int, list[int]] = {}
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------------ intake
+    def submit(self, prompt: list[int], max_new_tokens: int,
+               rid: int | None = None, arrival: int = 0,
+               eos_id: int | None = None) -> int:
+        rid = rid if rid is not None else len(self._prompts)
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if not prompt:
+            raise ValueError("prompt must be non-empty")
+        self._prompts[rid] = list(prompt)
+        self.sched.submit(Request(rid=rid, prompt=list(prompt),
+                                  max_new_tokens=max_new_tokens,
+                                  arrival=arrival, eos_id=eos_id))
+        return rid
+
+    # -------------------------------------------------------------- step
+    def _sample(self, logits_row: np.ndarray) -> int:
+        return int(np.argmax(logits_row))  # greedy (parity with generate)
+
+    def _finish_retired(self) -> list[Completion]:
+        out = []
+        for seq in self.sched.retire_finished():
+            comp = Completion(seq.rid, self._prompts[seq.rid],
+                              self.sched.full_output(seq),
+                              self.sched.evict_counts.get(seq.rid, 0))
+            self.completions[seq.rid] = comp
+            out.append(comp)
+        return out
+
+    def step(self) -> list[Completion]:
+        """Execute one scheduler decision; returns newly finished requests."""
+        self.stats.steps += 1
+        decision = self.sched.next_decision()
+        if decision is None:
+            return []  # only future arrivals remain; clock has advanced
+
+        if isinstance(decision, PrefillChunk):
+            seq, start, length = (decision.seq, decision.start,
+                                  decision.length)
+            chunk = seq.prompt[start:start + length]
+            chunk = chunk + [0] * (self.ecfg.prefill_chunk - length)
+            pt = self.kv.page_table_array()[seq.slot:seq.slot + 1]
+            logits, self.cache = self._prefill_fn(
+                self.params, np.asarray([chunk], np.int32), self.cache,
+                pt, np.int32(start), np.int32(length), np.int32(seq.slot),
+                np.bool_(start == 0))
+            self.sched.completed_prefill(decision)
+            if not seq.prefilling:  # prompt done -> first generated token
+                self.sched.append_token(seq, self._sample(
+                    np.asarray(logits[0])))
+        else:
+            assert isinstance(decision, DecodeBatch)
+            bmax = self.ecfg.max_batch
+            token = np.zeros((bmax,), np.int32)
+            kvl = np.zeros((bmax,), np.int32)
+            active = np.zeros((bmax,), bool)
+            for seq in decision.seqs:
+                token[seq.slot] = seq.out_tokens[-1]
+                kvl[seq.slot] = seq.kv_len - 1  # context already written
+                active[seq.slot] = True
+            logits, self.cache = self._decode_fn(
+                self.params, token, self.cache,
+                self.kv.page_table_array(), kvl, active)
+            logits = np.asarray(logits)
+            for seq in decision.seqs:
+                self.sched.append_token(seq, self._sample(logits[seq.slot]))
+        return self._finish_retired()
+
+    def run(self) -> dict[int, Completion]:
+        """Drive until every submitted request completes."""
+        t0 = time.time()
+        while self.sched.has_work:
+            self.step()
+        jax.block_until_ready(self.cache)
+        s, ss = self.stats, self.sched.stats
+        s.wall_s = time.time() - t0
+        s.decode_tokens, s.decode_steps = ss.decode_tokens, ss.decode_steps
+        s.prefill_tokens, s.evictions = ss.prefill_tokens, ss.evicted
+        s.mean_occupancy = ss.mean_occupancy
+        return dict(self.completions)

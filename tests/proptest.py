@@ -1,0 +1,122 @@
+"""Hypothesis-free property-test harness.
+
+The repo's property tests are written against the ``hypothesis`` API
+(``given`` / ``settings`` / ``strategies``).  The CI container does not
+ship hypothesis, and ``pytest.importorskip`` was silently skipping six
+whole modules.  This shim keeps the exact same test source running
+everywhere:
+
+* when ``hypothesis`` is installed, its real ``given``/``settings``/
+  ``strategies`` are re-exported unchanged (shrinking and all);
+* otherwise a deterministic, seeded random sweep stands in: each test
+  draws ``max_examples`` cases from a per-test RNG seeded by
+  ``crc32(test qualname) ^ PROPTEST_SEED``, and a failing case re-raises
+  with the falsifying arguments in the message (no shrinking — the seed
+  plus printed arguments make the case reproducible).
+
+Only the strategy surface the test-suite uses is implemented
+(``integers``, ``booleans``, ``sampled_from``, ``floats``, ``lists``,
+``just``); extend as tests grow.
+
+Env knobs: ``PROPTEST_SEED`` (default 0), ``PROPTEST_MAX_EXAMPLES``
+(default 50, used when a test carries no ``@settings``).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import os
+    import zlib
+
+    import numpy as np
+
+    DEFAULT_MAX_EXAMPLES = int(os.environ.get("PROPTEST_MAX_EXAMPLES", "50"))
+    GLOBAL_SEED = int(os.environ.get("PROPTEST_SEED", "0"))
+
+    class Strategy:
+        """A draw function + description (mirrors hypothesis strategies)."""
+
+        def __init__(self, draw, desc: str):
+            self._draw = draw
+            self.desc = desc
+
+        def draw(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return self.desc
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> Strategy:
+            return Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                f"integers({min_value}, {max_value})")
+
+        @staticmethod
+        def booleans() -> Strategy:
+            return Strategy(lambda rng: bool(rng.integers(0, 2)),
+                            "booleans()")
+
+        @staticmethod
+        def sampled_from(elements) -> Strategy:
+            elems = list(elements)
+            return Strategy(lambda rng: elems[int(rng.integers(len(elems)))],
+                            f"sampled_from({elems!r})")
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> Strategy:
+            return Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                f"floats({min_value}, {max_value})")
+
+        @staticmethod
+        def lists(inner: Strategy, min_size: int = 0,
+                  max_size: int = 10) -> Strategy:
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [inner.draw(rng) for _ in range(n)]
+            return Strategy(draw, f"lists({inner!r})")
+
+        @staticmethod
+        def just(value) -> Strategy:
+            return Strategy(lambda rng: value, f"just({value!r})")
+
+    def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_ignored):
+        """Records max_examples on the (possibly given-wrapped) function."""
+        def deco(fn):
+            fn._proptest_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats: Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_proptest_max_examples",
+                            DEFAULT_MAX_EXAMPLES)
+                seed0 = zlib.crc32(fn.__qualname__.encode()) ^ GLOBAL_SEED
+                for i in range(n):
+                    rng = np.random.default_rng(
+                        np.random.SeedSequence([seed0, i]))
+                    vals = [s.draw(rng) for s in strats]
+                    try:
+                        fn(*args, *vals, **kwargs)
+                    except Exception as e:
+                        argstr = ", ".join(repr(v) for v in vals)
+                        raise AssertionError(
+                            f"falsifying example (case {i}/{n}, base seed "
+                            f"{seed0}): {fn.__name__}({argstr})") from e
+            # pytest must not mistake the drawn parameters for fixtures:
+            # hide the original signature (hypothesis does the same)
+            runner.__signature__ = inspect.Signature()
+            del runner.__wrapped__
+            return runner
+        return deco

@@ -1,9 +1,8 @@
 """Compressed 2:4 representation: round-trips + storage accounting (§4.3)."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
-pytest.importorskip("hypothesis")  # property tests need it; skip cleanly when absent
-from hypothesis import given, settings, strategies as st
+# runs under real hypothesis when installed, else the seeded fallback sweep
+from proptest import given, settings, strategies as st
 
 from repro.core.patterns import Pattern, SlideDecomposition, TWO_FOUR
 from repro.core import packer, compressed as comp

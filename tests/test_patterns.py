@@ -2,8 +2,8 @@
 import pytest
 from fractions import Fraction
 
-pytest.importorskip("hypothesis")  # property tests need it; skip cleanly when absent
-from hypothesis import given, strategies as st
+# runs under real hypothesis when installed, else the seeded fallback sweep
+from proptest import given, strategies as st
 
 from repro.core.patterns import (
     Pattern, HardwarePattern, SlideDecomposition, TWO_FOUR, ONE_FOUR,

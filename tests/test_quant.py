@@ -1,9 +1,8 @@
 """Per-token dynamic quantization semantics (Alg. 1 passes 1-2)."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
-pytest.importorskip("hypothesis")  # property tests need it; skip cleanly when absent
-from hypothesis import given, settings, strategies as st
+# runs under real hypothesis when installed, else the seeded fallback sweep
+from proptest import given, settings, strategies as st
 
 from repro.core import quant
 

@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-pytest.importorskip("hypothesis")  # property tests need it; skip cleanly when absent
-from hypothesis import given, settings, strategies as st
+# runs under real hypothesis when installed, else the seeded fallback sweep
+from proptest import given, settings, strategies as st
 
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.sharding import rules
