@@ -293,21 +293,33 @@ def bench_serve():
                             size=int(rng.integers(8, 17))).tolist()
                for _ in range(4)]
 
+    # tp degrees: always 1; plus a sharded row when the process has >= 2
+    # devices (run under XLA_FLAGS=--xla_force_host_platform_device_count=N
+    # to get it on CPU) — say so when skipped, or a TP regression hides
+    tps = [1] + ([2] if len(jax.devices()) >= 2 else [])
+    if len(tps) == 1:
+        print("# bench_serve: 1 device visible — tp=2 rows skipped "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=4)")
     for max_batch in (1, 4):
-        eng = serve_loop.ServeEngine(params, cfg, serve_loop.EngineConfig(
-            max_batch=max_batch, page_size=8, num_pages=32, max_seq_len=32,
-            prefill_chunk=8))
-        for i, p in enumerate(prompts):
-            eng.submit(p, new_tokens, rid=i, arrival=i)
-        eng.run()
-        s = eng.stats
-        emit(f"serve_engine[b{max_batch}x{len(prompts)}req]",
-             s.wall_s / max(s.steps, 1) * 1e6,
-             f"decode_tok_s={s.decode_tok_s:.1f};"
-             f"occupancy={s.mean_occupancy:.3f};"
-             f"decode_tokens={s.decode_tokens};"
-             f"prefill_tokens={s.prefill_tokens};"
-             f"evictions={s.evictions}")
+        for ntp in tps:
+            ecfg = serve_loop.EngineConfig(
+                max_batch=max_batch, page_size=8, num_pages=32,
+                max_seq_len=32, prefill_chunk=8, tp=ntp)
+            eng = serve_loop.ServeEngine(params, cfg, ecfg)
+            for i, p in enumerate(prompts):
+                eng.submit(p, new_tokens, rid=i, arrival=i)
+            eng.run()
+            s = eng.stats
+            emit(f"serve_engine[b{max_batch}x{len(prompts)}req,tp{ntp}]",
+                 s.wall_s / max(s.steps, 1) * 1e6,
+                 f"tp={s.tp};"
+                 f"decode_tok_s={s.decode_tok_s:.1f};"
+                 f"decode_tok_s_per_dev={s.decode_tok_s_per_device:.1f};"
+                 f"occupancy={s.mean_occupancy:.3f};"
+                 f"decode_tokens={s.decode_tokens};"
+                 f"prefill_tokens={s.prefill_tokens};"
+                 f"evictions={s.evictions};"
+                 f"kv_tokens_per_shard={ecfg.kv_config().per_shard_page_tokens}")
 
     # one-shot dense reference on the same traffic (batched, same prompts
     # padded to a rectangle is not apples-to-apples; serve one by one)

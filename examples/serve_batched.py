@@ -45,19 +45,21 @@ def engine_demo(args, base, params):
                for _ in range(args.requests)]
 
     print(f"=== SlideSparse {z}:{l} continuous-batching engine "
-          f"({args.requests} staggered requests) ===")
+          f"({args.requests} staggered requests, tp={args.tp}) ===")
     ecfg = serve_loop.EngineConfig(
         max_batch=min(args.batch, args.requests), page_size=8,
         num_pages=max(16, args.requests *
                       (args.prompt_len + args.new_tokens) // 8 + 8),
         max_seq_len=args.prompt_len + args.new_tokens,
-        prefill_chunk=max(8, args.prompt_len // 2))
+        prefill_chunk=max(8, args.prompt_len // 2), tp=args.tp)
     eng = serve_loop.ServeEngine(packed, cfg, ecfg)
     for i, p in enumerate(prompts):
         eng.submit(p, args.new_tokens, rid=i, arrival=2 * i)
     out = eng.run()
     s = eng.stats
-    print(f"engine: {s.steps} steps, decode {s.decode_tok_s:.1f} tok/s, "
+    print(f"engine(tp={s.tp}): {s.steps} steps, decode "
+          f"{s.decode_tok_s:.1f} tok/s "
+          f"({s.decode_tok_s_per_device:.1f}/device), "
           f"batch occupancy {s.mean_occupancy:.2f}, "
           f"evictions {s.evictions}")
 
@@ -92,6 +94,10 @@ def main():
                          "(staggered join/leave traffic, DESIGN.md §5)")
     ap.add_argument("--requests", type=int, default=4,
                     help="engine mode: number of staggered requests")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="engine mode: tensor-parallel degree (DESIGN.md "
+                         "§9); on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
     args = ap.parse_args()
 
     base = registry.smoke_config(args.arch)

@@ -114,6 +114,54 @@ def decompress_original(c: CompressedSlided) -> jax.Array:
     return grp.reshape(lead + (g * c.l,))
 
 
+def split_out(c: CompressedSlided, shards: int) -> list[CompressedSlided]:
+    """Column-parallel sharding: slice the output dim into ``shards`` equal
+    contiguous blocks (tensor-parallel serving, DESIGN.md §9).
+
+    Each shard is a self-contained :class:`CompressedSlided` over the full
+    contraction length ``k``; ``decompress_*`` of shard ``i`` equals rows
+    ``[i*out/shards, (i+1)*out/shards)`` of the unsharded decompression.
+    Requires ``out % shards == 0``.
+    """
+    out = c.values.shape[-2] if c.values.ndim > 1 else 1
+    if c.values.ndim < 2 or out % shards:
+        raise ValueError(f"cannot split out dim of shape "
+                         f"{c.values.shape} into {shards} shards")
+    step = out // shards
+    return [CompressedSlided(
+        c.values[..., i * step:(i + 1) * step, :],
+        c.indices[..., i * step:(i + 1) * step, :],
+        c.k, c.z, c.l, c.m, c.n) for i in range(shards)]
+
+
+def split_k(c: CompressedSlided, shards: int) -> list[CompressedSlided]:
+    """Row-parallel sharding: slice the *contraction* dim into ``shards``
+    contiguous blocks of whole L-groups (tensor-parallel serving,
+    DESIGN.md §9).
+
+    The compressed layout is group-major — ``[G, w, M]`` flattened with
+    the K/L groups outermost — so a contiguous slice of the packed dim is
+    exactly a contiguous slice of K: no packed block ever straddles a
+    shard.  Shard ``i`` satisfies ``decompress_original(shard_i) ==
+    decompress_original(c)[..., i*k/shards:(i+1)*k/shards]`` and carries
+    ``k/shards`` as its local contraction length (the kernels recover K
+    from shapes, so local shards drop straight into ``linear.apply``).
+    Requires ``(k/shards) % L == 0``.
+    """
+    if c.k % shards or (c.k // shards) % c.l:
+        raise ValueError(
+            f"cannot split k={c.k} into {shards} shards of whole L={c.l} "
+            f"groups (pattern group would straddle a shard boundary)")
+    dec = c.decomposition
+    per_group = dec.num_windows * c.m        # packed slots per L-group
+    g_step = (c.k // shards) // c.l          # groups per shard
+    step = g_step * per_group
+    return [CompressedSlided(
+        c.values[..., i * step:(i + 1) * step],
+        c.indices[..., i * step:(i + 1) * step],
+        c.k // shards, c.z, c.l, c.m, c.n) for i in range(shards)]
+
+
 def pack_meta(indices: jax.Array) -> jax.Array:
     """Bit-pack int8 2-bit indices into int32 words (16 per word)."""
     flat = indices.reshape(indices.shape[:-1] + (-1,))

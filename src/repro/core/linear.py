@@ -89,47 +89,71 @@ def prepare(params: dict[str, Any], cfg: SparsityConfig) -> dict[str, Any]:
 
 
 def apply(params: dict[str, Any], x: jax.Array, cfg: SparsityConfig,
-          activation: str | None = None) -> jax.Array:
+          activation: str | None = None, reduce_out: bool = False
+          ) -> jax.Array:
     """y = act(x @ W^T) under the configured execution path. x: [..., K].
 
     ``activation`` (None | 'silu' | 'gelu') is fused into the kernel
     epilogue on the Pallas slided/compressed paths and applied as a
     separate elementwise op everywhere else — identical semantics either
     way (ref.epilogue is the shared oracle).
+
+    ``reduce_out`` marks the projection as *row-parallel* under
+    tensor-parallel serving (DESIGN.md §9): after the fused dequant
+    epilogue the per-shard partial output is psum'd over the TP axis.
+    ``activation`` is rejected in that case (a nonlinearity on partial
+    sums would not commute with the psum).  Outside an active TP trace
+    context ``reduce_out`` is the identity, so training and
+    single-device serving are unaffected.
     """
     from repro.kernels import ops as kops  # deferred: kernels import core
+    from repro.sharding import tp
 
     dec = cfg.decomposition()
     out_dtype = x.dtype
 
+    if reduce_out and activation is not None and tp.size() > 1:
+        # act(partial_a) + act(partial_b) != act(partial_a + partial_b):
+        # a nonlinearity cannot ride the fused epilogue of a row-parallel
+        # projection — fuse it into the preceding column-parallel layer
+        raise ValueError(
+            f"activation={activation!r} cannot be fused into a "
+            "row-parallel (reduce_out) projection under tensor "
+            "parallelism: the epilogue would run on per-shard partial "
+            "sums before the psum")
+
+    def done(y):
+        return tp.reduce(y) if reduce_out else y
+
     if cfg.mode == "dense" or dec is None:
-        return _post_act(_plain(x, params["w"], cfg, out_dtype), activation)
+        return done(_post_act(_plain(x, params["w"], cfg, out_dtype),
+                              activation))
 
     if cfg.mode == "masked":
         w = masks.ste_prune(params["w"], dec.source)
-        return _post_act(_plain(x, w, cfg, out_dtype), activation)
+        return done(_post_act(_plain(x, w, cfg, out_dtype), activation))
 
     params = params if _prepared(params, cfg) else prepare(params, cfg)
 
     if cfg.mode == "slided":
         ws = params["w_slided"]
         if cfg.act_quant == "int8":
-            return kops.slided_matmul_int8(
+            return done(kops.slided_matmul_int8(
                 x, ws, params["s_w"], dec, out_dtype=out_dtype,
                 use_pallas=cfg.use_pallas, activation=activation,
-                tune=cfg.tune)
-        return _post_act(
-            slide.slided_matmul(x, ws, dec).astype(out_dtype), activation)
+                tune=cfg.tune))
+        return done(_post_act(
+            slide.slided_matmul(x, ws, dec).astype(out_dtype), activation))
 
     if cfg.mode == "compressed":
         k = params["values"].shape[-1] * dec.source.l // dec.source.z
         c = comp.CompressedSlided(
             params["values"], params["indices"], k,
             dec.source.z, dec.source.l, dec.hw.m, dec.hw.n)
-        return kops.compressed_matmul(
+        return done(kops.compressed_matmul(
             x, c, s_w=params.get("s_w"), act_quant=cfg.act_quant,
             out_dtype=out_dtype, use_pallas=cfg.use_pallas,
-            activation=activation, tune=cfg.tune)
+            activation=activation, tune=cfg.tune))
 
     raise ValueError(f"unknown mode {cfg.mode}")
 

@@ -51,6 +51,7 @@ class TileConfig:
 DEFAULT = TileConfig()
 
 _MEM: dict[str, dict[str, Any]] = {}
+_DIRTY: set[str] = set()  # keys recorded by THIS process (merge-on-write set)
 _DISK_LOADED = False
 
 
@@ -80,15 +81,47 @@ def _load_disk() -> None:
 
 
 def _save_disk() -> None:
+    """Atomic merge-on-write persistence.
+
+    Two concurrent tuning processes (parallel bench runs) must neither
+    tear the JSON nor clobber each other's keys: re-read the file, merge
+    our in-process entries over it, dump to a temp file in the same
+    directory and ``os.replace`` — readers always see a complete old or
+    new file, and a concurrent writer's disjoint keys survive.
+    """
     path = cache_path()
     if not path:
         return
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(_MEM, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)  # atomic: concurrent readers see old or new
+        # the read-merge-replace must be mutually exclusive or two writers
+        # both read the old file and the second replace drops the first
+        # writer's keys (lost update); flock a sidecar so the data file
+        # itself can still be atomically os.replace'd under the lock
+        with open(path + ".lock", "w") as lock:
+            try:
+                import fcntl
+                fcntl.flock(lock, fcntl.LOCK_EX)
+            except (ImportError, OSError):
+                # non-POSIX or flock-less filesystem (NFS without lockd):
+                # keep the atomic replace, lose only the merge guard —
+                # persistence must not regress to nothing here
+                pass
+            merged: dict[str, Any] = {}
+            try:
+                with open(path) as f:
+                    merged = json.load(f)
+            except (OSError, json.JSONDecodeError, ValueError):
+                merged = {}  # absent or torn by a pre-fix writer
+            # merge ONLY keys this process tuned: _MEM also holds entries
+            # loaded from disk at startup, and writing those back would
+            # revert a concurrent writer's newer tuning for the same key
+            merged.update({k: _MEM[k] for k in _DIRTY if k in _MEM})
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                       suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(merged, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)  # readers never see a torn file
     except OSError:
         pass  # read-only filesystems must not break the kernels
 
@@ -97,6 +130,7 @@ def clear(memory_only: bool = True) -> None:
     """Drop the in-process cache (tests); optionally the disk file too."""
     global _DISK_LOADED
     _MEM.clear()
+    _DIRTY.clear()
     _DISK_LOADED = memory_only  # memory_only: don't re-read stale disk state
     if not memory_only:
         path = cache_path()
@@ -105,8 +139,21 @@ def clear(memory_only: bool = True) -> None:
 
 
 def make_key(op: str, **params: Any) -> str:
+    """Cache key over shape/dtype params + backend + TP shard count.
+
+    The ``shards=`` component keeps single-device and tensor-parallel
+    tunings apart: under TP the kernel sees *local* operand shards whose
+    best tiles need not match a same-shaped single-device call (different
+    VMEM pressure from the collective epilogue), and the rows bucket of a
+    sharded call must never overwrite the unsharded winner.
+    """
+    from repro.sharding import tp  # deferred: kernels must import cleanly
+
     parts = [op] + [f"{k}={params[k]}" for k in sorted(params)]
     parts.append(f"backend={jax.default_backend()}")
+    shards = tp.size()
+    if shards > 1:
+        parts.append(f"shards={shards}")
     return "|".join(parts)
 
 
@@ -120,9 +167,11 @@ def lookup(key: str) -> TileConfig | None:
 
 
 def record(key: str, tiles: TileConfig, us: float) -> None:
+    """Cache ``tiles`` as the winner for ``key`` (in-process + disk)."""
     _load_disk()
     _MEM[key] = {"tiles": {f: getattr(tiles, f) for f in _FIELDS},
                  "us": us, "backend": jax.default_backend()}
+    _DIRTY.add(key)
     _save_disk()
 
 

@@ -42,7 +42,12 @@ def _flatten_rows(x: jax.Array):
 def fused_quant_slide(x: jax.Array, dec: SlideDecomposition,
                       use_pallas: bool | None = None,
                       interpret: bool = False, tune: bool = False):
-    """Per-token int8 quant + lifting. x: [..., K] -> ([..., gamma*K], [..., 1])."""
+    """Per-token int8 quantization + SlideSparse lifting Psi (paper Alg. 1).
+
+    x: [..., K] float -> (q [..., gamma*K] int8, scale [..., 1] fp32)
+    where gamma = wN/L is the (2N-2):2N family's lift expansion — each
+    K/L source group becomes w windows of N slots.
+    """
     x2, lead = _flatten_rows(x)
     if _auto(use_pallas):
         tiles = autotune.tiles_for(
@@ -62,7 +67,12 @@ def fused_quant_slide(x: jax.Array, dec: SlideDecomposition,
 def quant_matmul(q_x, s_x, q_w, s_w, out_dtype=jnp.float32,
                  use_pallas: bool | None = None, interpret: bool = False,
                  tune: bool = False):
-    """Dense w8a8 GEMM + dequant. q_x: [..., K] int8."""
+    """Dense w8a8 GEMM + dequant epilogue (the quantized baseline).
+
+    q_x: [..., K] int8 per-token-quantized activations; s_x: [..., 1]
+    fp32 scales; q_w: [M, K] int8 row-quantized weights; s_w: [M, 1]
+    fp32 row scales.  Returns [..., M] in ``out_dtype``.
+    """
     x2, lead = _flatten_rows(q_x)
     s2 = s_x.reshape(-1, 1)
     if _auto(use_pallas):

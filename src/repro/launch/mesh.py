@@ -20,3 +20,8 @@ def make_host_mesh():
     """Whatever devices exist, as a 1-D 'data' mesh (tests/examples)."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))
+
+
+# The tensor-parallel *serving* mesh is deliberately not here: it lives
+# with the rest of the TP serving machinery in sharding/tp.py
+# (tp.make_serve_mesh, DESIGN.md §9) so runtime/ never imports launch/.

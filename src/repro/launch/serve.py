@@ -28,10 +28,17 @@ def main(argv=None):
                     help="serve through the continuous-batching paged-KV "
                          "engine (staggered arrivals) instead of the "
                          "one-shot prefill+decode loop")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree for --engine (DESIGN.md "
+                         "§9); needs >= N devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=256)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     args = ap.parse_args(argv)
+    if args.tp > 1 and not args.engine:
+        raise SystemExit("--tp requires --engine (the one-shot loop is "
+                         "single-device; DESIGN.md §9)")
 
     cfg = registry.smoke_config(args.arch) if args.smoke \
         else registry.get(args.arch)
@@ -56,15 +63,16 @@ def main(argv=None):
             max_batch=args.batch, page_size=args.page_size,
             num_pages=args.num_pages,
             max_seq_len=args.prompt_len + args.new_tokens,
-            prefill_chunk=args.prefill_chunk)
+            prefill_chunk=args.prefill_chunk, tp=args.tp)
         eng = serve_loop.ServeEngine(params, cfg, ecfg)
         for i in range(args.batch):
             eng.submit(batch["tokens"][i].tolist(), args.new_tokens,
                        rid=i, arrival=i)  # staggered joins
         out = eng.run()
         s = eng.stats
-        print(f"[launch.serve] engine: {len(out)} requests; decode "
-              f"{s.decode_tok_s:.1f} tok/s; occupancy "
+        print(f"[launch.serve] engine(tp={s.tp}): {len(out)} requests; "
+              f"decode {s.decode_tok_s:.1f} tok/s "
+              f"({s.decode_tok_s_per_device:.1f}/device); occupancy "
               f"{s.mean_occupancy:.2f}; evictions {s.evictions}; "
               f"sample: {out[0].tokens[:8]}")
         return

@@ -245,7 +245,7 @@ def apply(params, spec: AttnSpec, x, positions, sp_cfg: SparsityConfig,
         out = _decode_sdpa(spec, q, kd, vd, kv_len + 1)
 
     out = out.reshape(b, s, spec.q_dim)
-    return sl.apply(params["wo"], out, sp_cfg), new_cache
+    return sl.apply(params["wo"], out, sp_cfg, reduce_out=True), new_cache
 
 
 def make_cache(spec: AttnSpec, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -278,7 +278,10 @@ def make_paged_pool(spec: AttnSpec, num_pages: int, page_size: int,
                     dtype=jnp.bfloat16):
     """Physical page pool [num_pages, page_size, KVH, hd] shared by every
     sequence (DESIGN.md §5).  dtype=int8 -> KIVI-style quantized pages with
-    per-(token, kv-head) fp32 scales, same layout as make_cache."""
+    per-(token, kv-head) fp32 scales, same layout as make_cache.  Under
+    tensor-parallel serving the KVH dim is sharded over the mesh
+    (DESIGN.md §9): build the pool at the global shape; shard_map hands
+    each device its heads' slice."""
     shape = (num_pages, page_size, spec.num_kv_heads, spec.head_dim)
     pool = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
     if dtype == jnp.int8:
@@ -358,7 +361,7 @@ def paged_prefill_chunk(params, spec: AttnSpec, x, positions,
     kd, vd = _pool_gather(pool, page_table, x.dtype)
     out = _chunked_sdpa(spec, q, kd, vd, q_offset=start)
     out = out.reshape(b, c, spec.q_dim)
-    return sl.apply(params["wo"], out, sp_cfg), pool
+    return sl.apply(params["wo"], out, sp_cfg, reduce_out=True), pool
 
 
 def paged_decode_step(params, spec: AttnSpec, x, sp_cfg: SparsityConfig,
@@ -387,7 +390,7 @@ def paged_decode_step(params, spec: AttnSpec, x, sp_cfg: SparsityConfig,
     kd, vd = _pool_gather(pool, page_table, x.dtype)
     out = _decode_sdpa(spec, q, kd, vd, kv_len + 1)
     out = out.reshape(b, 1, spec.q_dim)
-    return sl.apply(params["wo"], out, sp_cfg), pool
+    return sl.apply(params["wo"], out, sp_cfg, reduce_out=True), pool
 
 
 def build_prefill_cache(params, spec: AttnSpec, x, positions,

@@ -97,14 +97,20 @@ def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
 def swiglu(params, x, cfg: SparsityConfig):
     """Gate/up/down MLP.  With ``cfg.fuse_epilogue`` the SiLU runs inside
     the gate projection's matmul epilogue (DESIGN.md §2.3) instead of as a
-    separate elementwise pass over the [*, d_ff] gate tensor."""
+    separate elementwise pass over the [*, d_ff] gate tensor.
+
+    Under tensor-parallel serving (DESIGN.md §9) gate/up are
+    column-parallel (SiLU and the Hadamard product act on local d_ff
+    columns) and down is row-parallel — ``reduce_out`` psums its output
+    after the fused epilogue; a no-op outside a TP trace."""
     if cfg.fuse_epilogue:
         g = sl.apply(params["w_gate"], x, cfg, activation="silu")
         u = sl.apply(params["w_up"], x, cfg)
-        return sl.apply(params["w_down"], g * u, cfg)
+        return sl.apply(params["w_down"], g * u, cfg, reduce_out=True)
     g = sl.apply(params["w_gate"], x, cfg)
     u = sl.apply(params["w_up"], x, cfg)
-    return sl.apply(params["w_down"], jax.nn.silu(g) * u, cfg)
+    return sl.apply(params["w_down"], jax.nn.silu(g) * u, cfg,
+                    reduce_out=True)
 
 
 # ------------------------------------------------------------- embedding

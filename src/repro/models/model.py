@@ -65,6 +65,13 @@ def make_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
 
 def paged_prefill_chunk(params, cfg: ModelConfig, tokens, cache, page_table,
                         start, real_len, slot, reset, page_size: int):
+    """One prompt chunk through the paged cache (decoder-only stacks).
+
+    Under tensor-parallel serving the engine calls this inside
+    shard_map with a `sharding.tp` context active (DESIGN.md §9):
+    params/cache arrive as local shards and the layer stacks derive
+    their local head counts from the active context via the spec
+    builders in `transformer` — the dispatch here is shard-agnostic."""
     return transformer.paged_prefill_chunk(
         params, cfg, tokens, cache, page_table, start, real_len, slot,
         reset, page_size)
@@ -72,6 +79,8 @@ def paged_prefill_chunk(params, cfg: ModelConfig, tokens, cache, page_table,
 
 def paged_decode_step(params, cfg: ModelConfig, token, cache, page_table,
                       kv_len, active, page_size: int):
+    """One decode token for every slot (see paged_prefill_chunk for the
+    tensor-parallel calling convention)."""
     return transformer.paged_decode_step(
         params, cfg, token, cache, page_table, kv_len, active, page_size)
 

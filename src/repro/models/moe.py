@@ -24,6 +24,7 @@ from repro.core import linear as sl
 from repro.core import packer, masks
 from repro.core.linear import SparsityConfig
 from repro.sharding import ctx as shard_ctx
+from repro.sharding import tp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,6 +163,12 @@ def apply(params, spec: MoESpec, x, sp_cfg: SparsityConfig):
     y = jax.vmap(lambda yz, idx, u: yz.at[idx].add(u, mode="drop"))(
         jnp.zeros((g, tg, d), dt), tgt, upd)
     y = shard_ctx.constrain(y, "dp", None, None)
+    # TP serving (DESIGN.md §9): the expert hidden F is sharded, so the
+    # w_down einsum above produced partial sums; routing/gates/combine are
+    # shard-identical (computed from the replicated x), so the single psum
+    # rides on the combined [G,Tg,D] output rather than the larger
+    # [G,Ep,C,D] capacity buffers.  No-op outside a TP trace.
+    y = tp.reduce(y)
     return y.reshape(b, s, d)
 
 

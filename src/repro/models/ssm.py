@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import linear as sl
 from repro.core.linear import SparsityConfig
+from repro.sharding import tp
 from . import layers
 
 
@@ -26,10 +27,15 @@ class SSMSpec:
     expand: int = 2
     head_dim: int = 64
     chunk: int = 256
+    # tensor-parallel serving (DESIGN.md §9): heads are sharded over the TP
+    # axis, so inside shard_map the spec describes the LOCAL shard —
+    # d_inner and num_heads shrink by `shards`; B/C (single group, d_state)
+    # stay replicated; transformer.ssm_spec fills this from the active ctx
+    shards: int = 1
 
     @property
     def d_inner(self):
-        return self.expand * self.d_model
+        return self.expand * self.d_model // self.shards
 
     @property
     def num_heads(self):
@@ -204,9 +210,12 @@ def apply(params, spec: SSMSpec, x, sp_cfg: SparsityConfig, cache=None,
         new_cache = {"conv": new_conv, "ssd": h_new}
     y = y + xh * params["D"][:, None]
     y = y.reshape(bsz, s, spec.d_inner).astype(x.dtype)
-    # gated RMSNorm (Mamba-2 norm_before_gate) bounds the SSD magnitude
-    g = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
-    out = sl.apply(params["wo"], g, sp_cfg)
+    # gated RMSNorm (Mamba-2 norm_before_gate) bounds the SSD magnitude.
+    # d_inner is the TP-sharded axis, so the mean-of-squares reduces
+    # globally (tp.rmsnorm psums it; plain RMSNorm when unsharded), and the
+    # row-parallel out projection psums after its fused epilogue.
+    g = tp.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = sl.apply(params["wo"], g, sp_cfg, reduce_out=True)
     return out, new_cache
 
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core import linear as sl
 from repro.configs.base import ModelConfig
 from repro.sharding import ctx as shard_ctx
+from repro.sharding import tp
 from . import layers, attention, moe, ssm
 
 
@@ -45,10 +46,15 @@ def _remat_split(u: int) -> tuple[int, int]:
 
 # ----------------------------------------------------------------- specs
 def attn_spec(cfg: ModelConfig, kind: str) -> attention.AttnSpec:
+    """Attention spec; inside a tensor-parallel trace (sharding.tp ctx,
+    DESIGN.md §9) the spec describes the LOCAL shard: heads and KV heads
+    shrink by the TP degree (head-parallel attention + head-parallel paged
+    KV pool), head_dim and the GQA ratio are preserved."""
+    shards = tp.size()
     return attention.AttnSpec(
         d_model=cfg.d_model,
-        num_heads=cfg.num_heads,
-        num_kv_heads=cfg.num_kv_heads,
+        num_heads=cfg.num_heads // shards,
+        num_kv_heads=cfg.num_kv_heads // shards,
         head_dim=cfg.resolved_head_dim,
         rope_theta=cfg.rope_theta,
         causal=True,
@@ -59,9 +65,12 @@ def attn_spec(cfg: ModelConfig, kind: str) -> attention.AttnSpec:
 
 
 def ssm_spec(cfg: ModelConfig) -> ssm.SSMSpec:
+    """SSM spec; under tensor parallelism the SSD heads shard over the TP
+    axis (spec.shards), shrinking d_inner/num_heads to the local shard."""
     return ssm.SSMSpec(d_model=cfg.d_model, d_state=cfg.ssm_state,
                        d_conv=cfg.ssm_conv, expand=cfg.ssm_expand,
-                       head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+                       head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+                       shards=tp.size())
 
 
 def moe_spec(cfg: ModelConfig) -> moe.MoESpec:

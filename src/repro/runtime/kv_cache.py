@@ -26,16 +26,40 @@ class OutOfPages(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class PagedKVConfig:
+    """Sizing of the paged KV pool (tokens are int32 ids; pools are
+    [num_pages, page_size, KVH, hd] per attention layer).
+
+    ``tp`` is the tensor-parallel degree of the serving mesh (DESIGN.md
+    §9).  Pages are *head-sharded*, not id-partitioned: every shard holds
+    the identical ``num_pages`` page structure addressed by the one shared
+    host page table, and each page carries only KVH/tp heads' bytes — so
+    the allocator/accounting below is exactly shard-replicated and
+    ``per_shard_page_tokens`` is the per-shard budget the scheduler's
+    invariants govern.
+    """
     page_size: int = 8          # tokens per page
     num_pages: int = 64         # physical pages in the pool (per layer)
     max_batch: int = 4          # decode slots (concurrent sequences)
     max_seq_len: int = 256      # hard cap on prompt + generated tokens
+    tp: int = 1                 # tensor-parallel shards holding the pool
+
+    def __post_init__(self):
+        if self.tp < 1:
+            raise ValueError(f"tp={self.tp}: shard count must be >= 1")
 
     @property
     def max_pages_per_seq(self) -> int:
+        """ceil(max_seq_len / page_size): page-table width per slot."""
         return -(-self.max_seq_len // self.page_size)
 
+    @property
+    def per_shard_page_tokens(self) -> int:
+        """Token capacity of one shard's pool — identical on every shard
+        (the page *structure* replicates; only head bytes shard)."""
+        return self.num_pages * self.page_size
+
     def pages_for(self, num_tokens: int) -> int:
+        """Pages needed to hold ``num_tokens`` tokens (ceil division)."""
         return -(-num_tokens // self.page_size)
 
 
@@ -52,6 +76,7 @@ class PagePool:
         return len(self._free)
 
     def alloc(self, n: int) -> list[int]:
+        """Pop ``n`` page ids off the free list (raises OutOfPages)."""
         if n > len(self._free):
             raise OutOfPages(f"need {n} pages, {len(self._free)} free")
         pages = [self._free.pop() for _ in range(n)]
@@ -59,6 +84,7 @@ class PagePool:
         return pages
 
     def free(self, pages: list[int]) -> None:
+        """Return pages to the free list (raises ValueError on double free)."""
         for p in pages:
             if p not in self._allocated:
                 raise ValueError(f"double free of page {p}")
@@ -123,7 +149,15 @@ class KVCacheManager:
 
     # --------------------------------------------------------- invariant
     def check(self) -> None:
-        """Accounting balance: every page is free xor owned by one slot."""
+        """Accounting balance: every page is free xor owned by one slot.
+
+        Under tensor parallelism pages are head-sharded behind one shared
+        table — every shard holds a structurally identical pool — so
+        these assertions ARE the per-shard invariants: one check covers
+        all ``cfg.tp`` shards (there is no additional per-shard state to
+        balance; the per-shard *budget* is ``cfg.per_shard_page_tokens``
+        and equals the single-device one by construction).
+        """
         owned: list[int] = [p for t in self._tables.values() for p in t]
         assert len(owned) == len(set(owned)), "page owned by two slots"
         assert set(owned) == self.pool._allocated, "alloc set drift"

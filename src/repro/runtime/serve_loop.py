@@ -1,5 +1,5 @@
 """Serving: one-shot prefill+decode reference AND the continuous-batching
-paged-KV engine (DESIGN.md §5).
+paged-KV engine (DESIGN.md §5), optionally tensor-parallel (§9).
 
 Mirrors the paper's three phases (§4): the offline packer output is applied
 at load time via ``pack_params`` (prune -> quantize -> Phi -> compress),
@@ -8,7 +8,13 @@ then per-request execution runs the fused-kernel linears.
 ``generate`` is the dense-cache one-shot path (also the parity oracle for
 the engine tests).  :class:`ServeEngine` is the step-driven serving engine:
 requests join mid-flight, prefill chunks interleave with decode steps,
-finished sequences retire and free their KV pages.
+finished sequences retire and free their KV pages.  With
+``EngineConfig.tp > 1`` both jitted steps run under ``shard_map`` over a
+1-D ``('tp',)`` device mesh: weights are column-/row-parallel, the paged
+KV pool is head-parallel, and greedy decode stays argmax-identical to the
+single-device engine (``tests/test_tp_serve.py``) — except with
+``act_quant='int8'``, where row-parallel layers quantize per-(token,
+shard) and results are close but not parity-exact (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -19,6 +25,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import linear as sl
@@ -26,10 +34,12 @@ from repro.models import model as M
 from repro.runtime.kv_cache import KVCacheManager, PagedKVConfig
 from repro.runtime.scheduler import (DecodeBatch, PrefillChunk, Request,
                                      Scheduler)
+from repro.sharding import tp as tpmod
 
 
 @dataclasses.dataclass
 class ServeStats:
+    """Wall-clock accounting of one ``generate`` call (one-shot path)."""
     prefill_s: float
     decode_s: float
     tokens_generated: int
@@ -94,22 +104,33 @@ def generate(params, cfg: ModelConfig, batch, max_new_tokens: int,
 # ----------------------------------------------------------------- engine
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Sizing knobs for the paged serving engine."""
+    """Sizing knobs for the paged serving engine.
+
+    ``tp`` is the tensor-parallel degree (DESIGN.md §9): the engine runs
+    its two jitted steps under shard_map over a 1-D ``('tp',)`` mesh of
+    the first ``tp`` devices.  Page counts are per *shard-replicated*
+    table: every shard holds the same ``num_pages`` page structure, each
+    page carrying only its KVH/tp heads' bytes.
+    """
     max_batch: int = 4        # decode slots
     page_size: int = 8        # tokens per KV page
     num_pages: int = 64       # physical pages per attention layer
     max_seq_len: int = 128    # prompt + generated cap per sequence
     prefill_chunk: int = 16   # prompt tokens per engine step (token budget)
+    tp: int = 1               # tensor-parallel degree (devices in the mesh)
 
     def kv_config(self) -> PagedKVConfig:
         return PagedKVConfig(page_size=self.page_size,
                              num_pages=self.num_pages,
                              max_batch=self.max_batch,
-                             max_seq_len=self.max_seq_len)
+                             max_seq_len=self.max_seq_len,
+                             tp=self.tp)
 
 
 @dataclasses.dataclass
 class Completion:
+    """A finished request: generated token ids (greedy stream, including
+    tokens emitted before any recompute-preemption) + eviction count."""
     rid: int
     prompt: list[int]
     tokens: list[int]
@@ -118,6 +139,9 @@ class Completion:
 
 @dataclasses.dataclass
 class EngineStats:
+    """Engine-level counters accumulated over a ``run``: step/token
+    accounting, eviction count, mean decode-batch occupancy, and the
+    tensor-parallel degree the run executed at."""
     steps: int = 0
     wall_s: float = 0.0
     decode_tokens: int = 0
@@ -125,10 +149,17 @@ class EngineStats:
     prefill_tokens: int = 0
     evictions: int = 0
     mean_occupancy: float = 0.0
+    tp: int = 1               # tensor-parallel degree of the run
 
     @property
     def decode_tok_s(self) -> float:
         return self.decode_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def decode_tok_s_per_device(self) -> float:
+        """Aggregate decode throughput normalized by the TP mesh size —
+        the per-chip number the paper's multi-GPU tables report."""
+        return self.decode_tok_s / max(self.tp, 1)
 
 
 class ServeEngine:
@@ -142,6 +173,22 @@ class ServeEngine:
     Two jitted step functions with fixed shapes (no shape-polymorphic
     retraces): a [1, prefill_chunk] prompt-chunk step and a [max_batch]
     decode step.  Scheduling and page accounting stay on host.
+
+    With ``ecfg.tp > 1`` (DESIGN.md §9) both steps run under shard_map on
+    a 1-D ``('tp',)`` mesh: attention/FFN/lm_head weights are Megatron
+    column-/row-parallel (packed compressed blocks slice along whole
+    L-groups), SSD heads shard, and the paged KV pool is head-parallel —
+    each shard scatters/gathers only its KVH/tp heads through the shared
+    host page table.  Row-parallel projections psum AFTER their fused
+    dequant epilogue (``linear.apply(reduce_out=True)``; nonlinearities
+    fuse into the column-parallel layers, never into a row-parallel one);
+    lm_head is column-parallel over vocab, so per-shard logits concatenate
+    and greedy argmax needs no further collective.  Scheduling, page
+    accounting, and sampling are unchanged — TP is invisible above the
+    two step functions.  Argmax-parity with the single-device engine
+    holds for dense / compressed / int8-KV stacks; ``act_quant='int8'``
+    quantizes row-parallel activations per-(token, shard), which is
+    standard quantized-TP semantics but not parity-exact (DESIGN.md §9).
     """
 
     def __init__(self, params, cfg: ModelConfig,
@@ -156,16 +203,43 @@ class ServeEngine:
                                         self.ecfg.page_size,
                                         self.ecfg.max_batch)
         ps = self.ecfg.page_size
-        self._prefill_fn = jax.jit(
-            lambda p, tok, c, pt, start, rlen, slot, reset:
-            M.paged_prefill_chunk(p, cfg, tok, c, pt, start, rlen, slot,
-                                  reset, ps))
-        self._decode_fn = jax.jit(
-            lambda p, tok, c, pt, kvl, act:
-            M.paged_decode_step(p, cfg, tok, c, pt, kvl, act, ps))
+        ntp = self.ecfg.tp
+
+        def prefill_step(p, tok, c, pt, start, rlen, slot, reset):
+            with tpmod.activate(ntp):
+                return M.paged_prefill_chunk(p, cfg, tok, c, pt, start,
+                                             rlen, slot, reset, ps)
+
+        def decode_step(p, tok, c, pt, kvl, act):
+            with tpmod.activate(ntp):
+                return M.paged_decode_step(p, cfg, tok, c, pt, kvl, act, ps)
+
+        if ntp > 1:
+            tpmod.validate(cfg, ntp)
+            self.mesh = tpmod.make_serve_mesh(ntp)
+            pspecs = tpmod.serve_param_specs(params, ntp)
+            cspecs = tpmod.serve_cache_specs(self.cache)
+            # each device holds ONLY its weight/KV shard from here on
+            self.params = jax.device_put(
+                params, tpmod.named_shardings(pspecs, self.mesh))
+            self.cache = jax.device_put(
+                self.cache, tpmod.named_shardings(cspecs, self.mesh))
+            rep = P()
+            logits_spec = P(None, "tp")  # lm_head column-parallel on vocab
+            self._prefill_fn = jax.jit(shard_map(
+                prefill_step, mesh=self.mesh,
+                in_specs=(pspecs, rep, cspecs, rep, rep, rep, rep, rep),
+                out_specs=(logits_spec, cspecs), check_rep=False))
+            self._decode_fn = jax.jit(shard_map(
+                decode_step, mesh=self.mesh,
+                in_specs=(pspecs, rep, cspecs, rep, rep, rep),
+                out_specs=(logits_spec, cspecs), check_rep=False))
+        else:
+            self._prefill_fn = jax.jit(prefill_step)
+            self._decode_fn = jax.jit(decode_step)
         self.completions: dict[int, Completion] = {}
         self._prompts: dict[int, list[int]] = {}
-        self.stats = EngineStats()
+        self.stats = EngineStats(tp=ntp)
 
     # ------------------------------------------------------------ intake
     def submit(self, prompt: list[int], max_new_tokens: int,

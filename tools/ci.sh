@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + benchmark smoke + serve-engine smoke (DESIGN.md §7).
+# CI gate: tier-1 tests + benchmark smoke + serve-engine smokes (DESIGN.md §7).
 #
 # 1. The full pytest suite — includes the interpret-mode Pallas kernel
 #    sweeps (fused single-pass GEMM, decompress-once compressed matmul,
@@ -11,6 +11,11 @@
 #    decode, and retire through the continuous-batching paged-KV engine;
 #    every stream is checked against the one-shot dense-KV reference
 #    (DESIGN.md §5).
+# 4. A tensor-parallel smoke (DESIGN.md §9): the same engine demo under
+#    --tp 2 on 4 forced host devices — sharded weights, head-parallel
+#    pages — still parity-checked against the dense reference.
+# 5. API-docs drift check: docs/api.md must match what
+#    tools/gen_api_docs.py generates from the live docstrings.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -19,6 +24,12 @@ timeout 120 python -m benchmarks.run fused_pipeline
 
 timeout 300 python examples/serve_batched.py --engine --requests 3 \
     --batch 2 --prompt-len 16 --new-tokens 6
+
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+timeout 300 python examples/serve_batched.py --engine --tp 2 --requests 3 \
+    --batch 2 --prompt-len 16 --new-tokens 6
+
+python tools/gen_api_docs.py --check
 
 python -m pytest -q
 
