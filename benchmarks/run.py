@@ -25,11 +25,14 @@ from repro.core import (Pattern, SlideDecomposition, TWO_FOUR, family_table,
 from repro.core import slide
 from repro.kernels import ops, ref
 
-ROWS: list[tuple[str, float, str]] = []
+ROWS: list[tuple[str, float, str, str]] = []
 
 
-def emit(name: str, us: float, derived: str):
-    ROWS.append((name, us, derived))
+def emit(name: str, us: float, derived: str, precision: str = "fp32"):
+    """``precision`` names the recipe (DESIGN.md §10) a row executed at
+    ('fp32' for float-math rows) — recorded in the BENCH_*.json rows so
+    the perf trajectory can be sliced per precision."""
+    ROWS.append((name, us, derived, precision))
     print(f"{name},{us:.2f},{derived}")
 
 
@@ -85,14 +88,19 @@ def bench_packer_throughput():
 
 
 def bench_fused_pipeline():
-    """DESIGN.md §2.3: single-pass fused GEMM (quant+lift in the matmul
-    prologue) vs the two-kernel fused_quant_slide -> quant_matmul pipeline.
+    """DESIGN.md §2.3/§10: single-pass fused GEMM (quant+lift in the matmul
+    prologue) vs the two-kernel fused_quant_slide -> quant_matmul pipeline,
+    swept over the precision recipes (int8 / fp8 / w4).
 
     The derived column carries the HBM-bytes model per call: the two-kernel
-    path round-trips the lifted gamma*K int8 activations through HBM (one
-    write + one read) that the fused kernel eliminates entirely.  Timings
-    are interpret-mode (CPU) and exercise both kernel bodies.
+    path round-trips the lifted gamma*K activations through HBM (one
+    write + one read) that the fused kernel eliminates entirely, and the
+    'w4' recipe additionally halves the weight bytes (nibble-packed int4).
+    Timings are interpret-mode (CPU) and exercise both kernel bodies.
     """
+    from repro.core.precision import RECIPES
+    from repro.core.packer import pack_nibbles
+
     dec = SlideDecomposition(Pattern(6, 8), TWO_FOUR)
     gamma = float(dec.gamma)
     rng = np.random.default_rng(0)
@@ -100,33 +108,46 @@ def bench_fused_pipeline():
         w = prune_to_pattern(
             jnp.asarray(rng.standard_normal((m, k)), jnp.float32), dec.source)
         x = jnp.asarray(rng.standard_normal((rows, k)), jnp.float32)
-        qw = quantize_weight_int8_rowwise(w)
-        ws_q = pack_slided(qw.q, dec)
+        for name in ("int8", "fp8", "w4"):
+            rec = RECIPES[name]
+            qw = rec.quantize_weight(w)
+            ws_q = pack_slided(qw.q, dec)
+            if rec.packed_weights:
+                ws_q = pack_nibbles(ws_q)
 
-        def two_kernel(a):
-            q, s = ops.fused_quant_slide(a, dec, use_pallas=True,
-                                         interpret=True)
-            return ops.quant_matmul(q, s, ws_q, qw.scale, use_pallas=True,
-                                    interpret=True)
+            def fused(a):
+                return ops.slided_matmul_quant(a, ws_q, qw.scale, dec, rec,
+                                               out_dtype=jnp.float32,
+                                               use_pallas=True,
+                                               interpret=True)
 
-        def fused(a):
-            return ops.slided_matmul_int8(a, ws_q, qw.scale, dec,
-                                          out_dtype=jnp.float32,
-                                          use_pallas=True, interpret=True)
+            us_fused = _time(fused, x, reps=3)
+            # two-kernel baseline: the packed-nibble operand has no
+            # standalone dense-GEMM form, so 'w4' is fused-only
+            us_two = None
+            if not rec.packed_weights:
+                def two_kernel(a):
+                    q, s = ops.fused_quant_slide(a, dec, use_pallas=True,
+                                                 interpret=True, recipe=rec)
+                    return ops.quant_matmul(q, s, ws_q, qw.scale,
+                                            use_pallas=True, interpret=True)
 
-        us_two = _time(two_kernel, x, reps=3)
-        us_fused = _time(fused, x, reps=3)
-        wbytes = m * gamma * k + m * 4               # Phi(W) int8 + s_w
-        ybytes = rows * m * 4
-        common = rows * k * 4 + wbytes + ybytes      # read X, W; write Y
-        lifted = rows * gamma * k + rows * 4         # Psi(q) int8 + scale
-        bytes_two = common + 2 * lifted              # write + re-read
-        bytes_fused = common                         # lifted stays in VMEM
-        emit(f"fused_pipeline[R={rows},K={k},M={m}]", us_fused,
-             f"hbm_bytes_fused={bytes_fused:.0f};"
-             f"hbm_bytes_two_kernel={bytes_two:.0f};"
-             f"bytes_saved_ratio={bytes_two / bytes_fused:.3f};"
-             f"us_two_kernel={us_two:.2f};gamma={gamma}")
+                us_two = _time(two_kernel, x, reps=3)
+            wb = 0.5 if rec.packed_weights else 1.0  # bytes per weight elt
+            wbytes = m * gamma * k * wb + m * 4      # Phi(W) + s_w
+            ybytes = rows * m * 4
+            common = rows * k * 4 + wbytes + ybytes  # read X, W; write Y
+            lifted = rows * gamma * k + rows * 4     # Psi(q) 1B/elt + scale
+            bytes_two = common + 2 * lifted          # write + re-read
+            bytes_fused = common                     # lifted stays in VMEM
+            derived = (f"hbm_bytes_fused={bytes_fused:.0f};"
+                       f"hbm_bytes_two_kernel={bytes_two:.0f};"
+                       f"bytes_saved_ratio={bytes_two / bytes_fused:.3f};"
+                       f"weight_bytes={wbytes:.0f};gamma={gamma}")
+            if us_two is not None:
+                derived += f";us_two_kernel={us_two:.2f}"
+            emit(f"fused_pipeline[R={rows},K={k},M={m},{name}]", us_fused,
+                 derived, precision=name)
 
 
 def bench_fused_kernel_overhead():
@@ -313,13 +334,16 @@ def bench_serve():
             emit(f"serve_engine[b{max_batch}x{len(prompts)}req,tp{ntp}]",
                  s.wall_s / max(s.steps, 1) * 1e6,
                  f"tp={s.tp};"
+                 f"precision={s.precision};"
                  f"decode_tok_s={s.decode_tok_s:.1f};"
                  f"decode_tok_s_per_dev={s.decode_tok_s_per_device:.1f};"
                  f"occupancy={s.mean_occupancy:.3f};"
                  f"decode_tokens={s.decode_tokens};"
                  f"prefill_tokens={s.prefill_tokens};"
                  f"evictions={s.evictions};"
-                 f"kv_tokens_per_shard={ecfg.kv_config().per_shard_page_tokens}")
+                 f"kv_tokens_per_shard="
+                 f"{ecfg.kv_config().per_shard_page_tokens}",
+                 precision=s.precision)
 
     # one-shot dense reference on the same traffic (batched, same prompts
     # padded to a rectangle is not apples-to-apples; serve one by one)
@@ -375,8 +399,9 @@ def write_json(filt: str, out_dir: str | None = None) -> str:
             "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
                                            time.gmtime()),
         },
-        "rows": [{"name": n, "us_per_call": us, "derived": d}
-                 for n, us, d in ROWS],
+        "rows": [{"name": n, "us_per_call": us, "derived": d,
+                  "precision": p}
+                 for n, us, d, p in ROWS],
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)

@@ -6,13 +6,24 @@ not available offline, so this proxy trains a small LM from scratch under
 each (masked-STE) regime on the synthetic pipeline and reports final loss
 — the qualitative ordering dense <= 6:8 << 2:4 is the reproducible claim.
 
+``--precision`` adds the recipe axis (DESIGN.md §10): after fp32 training,
+each regime's final loss is ALSO evaluated under the recipe-quantized
+forward (per-token int8/fp8 activations, int8/int4 rowwise weights) — the
+serving-precision proxy for the paper's INT8/FP8/FP4 columns.  Training
+itself always runs fp32 (round-to-nearest has a zero gradient).
+
 Run:  PYTHONPATH=src python examples/sparsity_sweep.py [--steps 150]
+      PYTHONPATH=src python examples/sparsity_sweep.py --precision w4
 """
 import argparse
 import dataclasses
 
+import jax
+
 from repro.configs import registry
 from repro.core.linear import SparsityConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
 from repro.optim import adamw
 from repro.runtime import train_loop
 
@@ -22,11 +33,19 @@ def main():
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--precision", default=None,
+                    choices=["none", "int8", "fp8", "w4", "fp8w4"],
+                    help="additionally evaluate each trained regime under "
+                         "this precision recipe's quantized forward "
+                         "(DESIGN.md §10)")
     args = ap.parse_args()
 
     base = registry.smoke_config("h2o-danube-3-4b")
-    base = dataclasses.replace(base, d_model=128, num_heads=8, num_kv_heads=4,
-                               head_dim=16, d_ff=256, vocab_size=2048,
+    # every projection width (d_model, d_ff, q/kv dims) is a multiple of
+    # lcm(12, 8, 6, 4) = 24 so ALL sweep patterns' L-groups divide evenly
+    # (d_model=128 broke the 10:12 and 4:6 regimes: 128 % 12 == 8)
+    base = dataclasses.replace(base, d_model=96, num_heads=8, num_kv_heads=4,
+                               head_dim=12, d_ff=192, vocab_size=2048,
                                num_layers=4, logits_chunk=64)
     regimes = {
         "dense": None,
@@ -36,6 +55,7 @@ def main():
         "2:4": (2, 4),
     }
     results = {}
+    quant_results = {}
     for name, pat in regimes.items():
         sp = (SparsityConfig(pattern=pat, mode="masked") if pat
               else SparsityConfig())
@@ -47,15 +67,36 @@ def main():
                                    seq_len=args.seq))
         k = max(1, args.steps // 10)
         results[name] = sum(out["losses"][-k:]) / k
-        print(f"[sweep] {name:>6}: final loss {results[name]:.4f}")
+        line = f"[sweep] {name:>6}: final loss {results[name]:.4f}"
+        if args.precision and args.precision != "none":
+            # held-out eval batch under the recipe-quantized forward: the
+            # masked mode + recipe is the dense same-precision reference
+            # the compressed serving pipeline is parity-checked against
+            qcfg = dataclasses.replace(
+                cfg, sparsity=dataclasses.replace(sp, act_quant=None,
+                                                  recipe=args.precision))
+            batch = SyntheticLM(qcfg, args.batch, args.seq,
+                                seed=1234).batch_at(0)
+            qloss = float(jax.jit(
+                lambda p, b: M.loss_fn(p, qcfg, b))(out["params"], batch))
+            quant_results[name] = qloss
+            line += f"  |  {args.precision} eval loss {qloss:.4f}"
+        print(line)
 
-    print("\npattern  density  final-loss  (lower = better)")
+    cols = "pattern  density  final-loss"
+    if quant_results:
+        cols += f"  {args.precision}-eval-loss"
+    print("\n" + cols + "  (lower = better)")
     for name, loss in results.items():
         dens = "1.000" if name == "dense" else \
             f"{int(name.split(':')[0]) / int(name.split(':')[1]):.3f}"
-        print(f"{name:>7}  {dens:>7}  {loss:.4f}")
+        row = f"{name:>7}  {dens:>7}  {loss:.4f}"
+        if name in quant_results:
+            row += f"  {quant_results[name]:.4f}"
+        print(row)
     print("\nExpected ordering (paper Fig. 2): mild patterns track dense; "
-          "2:4 degrades most.")
+          "2:4 degrades most.  Quantized-eval columns should track the "
+          "fp32 losses closely (the paper's precision-robustness claim).")
 
 
 if __name__ == "__main__":

@@ -65,7 +65,11 @@ class ModelConfig:
     kv_cache_dtype: str = "bfloat16"  # 'int8' halves decode cache traffic
     logits_chunk: int = 512         # sequence-chunked LM head + loss
 
-    # SlideSparse integration (the paper's single flag, §4.3)
+    # SlideSparse integration (the paper's single flag, §4.3).  The config
+    # also carries the precision recipe (SparsityConfig.recipe, DESIGN.md
+    # §10): activation quantizer (int8 / fp8-e4m3) x weight storage (int8
+    # rowwise / nibble-packed int4 'w4') — one registry entry per
+    # precision, threaded from the kernel prologues to the serving engine
     sparsity: SparsityConfig = SparsityConfig()
 
     # --------------------------------------------------------- derived

@@ -9,7 +9,7 @@ from .slide import (  # noqa: F401
 )
 from .packer import (  # noqa: F401
     pack_slided, pack_slided_ref, unslide, is_hw_compliant, prune_to_pattern,
-    pattern_violations,
+    pattern_violations, pack_nibbles, unpack_nibbles,
 )
 from .compressed import (  # noqa: F401
     CompressedSlided, compress, decompress_slided, decompress_original,
@@ -17,8 +17,10 @@ from .compressed import (  # noqa: F401
 )
 from .quant import (  # noqa: F401
     Quantized, quantize_int8, quantize_fp8, dequantize,
-    quantize_weight_int8_rowwise, int8_matmul_dequant,
+    quantize_weight_int8_rowwise, quantize_weight_int4_rowwise,
+    int8_matmul_dequant, matmul_dequant,
 )
 from .masks import magnitude_mask, ste_prune  # noqa: F401
+from .precision import PrecisionRecipe, RECIPES  # noqa: F401
 from .linear import SparsityConfig, DENSE  # noqa: F401
-from . import linear  # noqa: F401
+from . import linear, precision  # noqa: F401

@@ -10,6 +10,13 @@ For the (2N-2):2N family the compressed value count is exactly the source
 non-zero budget (``dec.compressed_len(K) == density*K``): the slide expansion
 incurs **no storage overhead** (§4.3).  ``pack_meta``/``unpack_meta`` bit-pack
 the 2-bit indices 16-per-int32 for HBM-bandwidth accounting and kernel use.
+
+Under the 'w4' precision recipe (``repro.core.precision``) the int4 values
+are additionally nibble-packed two per byte (``packed=True``): the packed
+byte stream is still group-major, and every window group holds an even slot
+count (w*M = 2(N-1)), so byte slices stay congruent with slot slices —
+``split_k``/``split_out`` shard packed operands exactly like unpacked ones.
+``indices`` are never nibble-packed (one int8 per slot either way).
 """
 from __future__ import annotations
 
@@ -28,16 +35,18 @@ from . import packer
 class CompressedSlided:
     """Pytree carrying the compressed operand + static decomposition info."""
 
-    values: jax.Array   # [out, G*w*M] flattened compressed values
+    values: jax.Array   # [out, G*w*M] values ([out, G*w*M/2] bytes if packed)
     indices: jax.Array  # [out, G*w*M] int8 in-window positions
     k: int              # original contraction length
     z: int
     l: int
     m: int
     n: int
+    packed: bool = False  # True: values nibble-packed (int4 'w4' recipe)
 
     def tree_flatten(self):
-        return (self.values, self.indices), (self.k, self.z, self.l, self.m, self.n)
+        return ((self.values, self.indices),
+                (self.k, self.z, self.l, self.m, self.n, self.packed))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -58,9 +67,26 @@ class CompressedSlided:
         # 2-bit indices, 16 per int32 word
         return (int(np.prod(self.indices.shape)) + 15) // 16 * 4
 
+    @property
+    def slots(self) -> int:
+        """Per-row compressed slot count (== indices width, pack-agnostic)."""
+        return self.indices.shape[-1]
 
-def compress(w_slided: jax.Array, dec: SlideDecomposition) -> CompressedSlided:
-    """Pack a slided (hardware-compliant) tensor into values + metadata."""
+    def values_unpacked(self) -> jax.Array:
+        """Per-slot int8 values regardless of nibble packing."""
+        if not self.packed:
+            return self.values
+        return packer.unpack_nibbles(self.values, self.slots)
+
+
+def compress(w_slided: jax.Array, dec: SlideDecomposition,
+             pack_values: bool = False) -> CompressedSlided:
+    """Pack a slided (hardware-compliant) tensor into values + metadata.
+
+    ``pack_values=True`` (the 'w4' recipe) additionally nibble-packs the
+    int8-ranged values two per byte; window structure is computed on the
+    per-slot values first, so packing is pure relayout.
+    """
     wv = packer.slided_window_view(w_slided, dec)  # [..., G, w, n]
     n, m = dec.hw.n, dec.hw.m
     nz = wv != 0
@@ -72,10 +98,14 @@ def compress(w_slided: jax.Array, dec: SlideDecomposition) -> CompressedSlided:
     lead = wv.shape[:-3]
     g, nw = wv.shape[-3], wv.shape[-2]
     k = g * dec.source.l
+    vals = vals.reshape(lead + (g * nw * m,))
+    if pack_values:
+        vals = packer.pack_nibbles(vals)
     return CompressedSlided(
-        values=vals.reshape(lead + (g * nw * m,)),
+        values=vals,
         indices=idx.reshape(lead + (g * nw * m,)),
         k=k, z=dec.source.z, l=dec.source.l, m=dec.hw.m, n=dec.hw.n,
+        packed=pack_values,
     )
 
 
@@ -83,8 +113,8 @@ def _window_view(c: CompressedSlided):
     dec = c.decomposition
     g = c.k // c.l
     nw, m = dec.num_windows, c.m
-    lead = c.values.shape[:-1]
-    return (c.values.reshape(lead + (g, nw, m)),
+    lead = c.indices.shape[:-1]
+    return (c.values_unpacked().reshape(lead + (g, nw, m)),
             c.indices.reshape(lead + (g, nw, m)), dec, g, nw)
 
 
@@ -131,7 +161,7 @@ def split_out(c: CompressedSlided, shards: int) -> list[CompressedSlided]:
     return [CompressedSlided(
         c.values[..., i * step:(i + 1) * step, :],
         c.indices[..., i * step:(i + 1) * step, :],
-        c.k, c.z, c.l, c.m, c.n) for i in range(shards)]
+        c.k, c.z, c.l, c.m, c.n, c.packed) for i in range(shards)]
 
 
 def split_k(c: CompressedSlided, shards: int) -> list[CompressedSlided]:
@@ -153,13 +183,17 @@ def split_k(c: CompressedSlided, shards: int) -> list[CompressedSlided]:
             f"cannot split k={c.k} into {shards} shards of whole L={c.l} "
             f"groups (pattern group would straddle a shard boundary)")
     dec = c.decomposition
-    per_group = dec.num_windows * c.m        # packed slots per L-group
+    per_group = dec.num_windows * c.m        # compressed slots per L-group
     g_step = (c.k // shards) // c.l          # groups per shard
     step = g_step * per_group
+    # nibble-packed values: per_group is even (2(N-1)), so every shard
+    # boundary is byte-aligned and the byte step is exactly half the slot
+    # step — packed shards slice congruently with the unpacked layout
+    vstep = step // 2 if c.packed else step
     return [CompressedSlided(
-        c.values[..., i * step:(i + 1) * step],
+        c.values[..., i * vstep:(i + 1) * vstep],
         c.indices[..., i * step:(i + 1) * step],
-        c.k // shards, c.z, c.l, c.m, c.n) for i in range(shards)]
+        c.k // shards, c.z, c.l, c.m, c.n, c.packed) for i in range(shards)]
 
 
 def pack_meta(indices: jax.Array) -> jax.Array:

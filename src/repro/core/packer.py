@@ -120,6 +120,37 @@ def is_hw_compliant(ws: np.ndarray | jax.Array, dec: SlideDecomposition) -> bool
     return bool(((win != 0).sum(axis=-1) <= m).all())
 
 
+def pack_nibbles(v: jax.Array) -> jax.Array:
+    """Bit-pack int8 values in [-8, 7] two per byte (the 'w4' weight store).
+
+    Layout: element ``2i`` -> low nibble, ``2i+1`` -> high nibble of byte
+    ``i`` — a contiguous slice of bytes is a contiguous slice of values, so
+    tensor-parallel K-shards of packed operands slice congruently with the
+    unpacked layout (``compressed.split_k``).  Last dim must be even (every
+    (2N-2):2N window group holds an even slot count: w*M = (N-1)*2).
+    """
+    if v.shape[-1] % 2:
+        raise ValueError(f"cannot nibble-pack odd trailing dim {v.shape}")
+    pairs = v.astype(jnp.int8).reshape(v.shape[:-1] + (v.shape[-1] // 2, 2))
+    lo = pairs[..., 0] & jnp.int8(0x0F)
+    hi = pairs[..., 1] << jnp.int8(4)   # int8 wrap keeps the sign nibble
+    return lo | hi
+
+
+def unpack_nibbles(p: jax.Array, count: int | None = None) -> jax.Array:
+    """Inverse of :func:`pack_nibbles`: bytes -> int8 values in [-8, 7].
+
+    Arithmetic shifts sign-extend each nibble (``(b << 4) >> 4`` for the
+    low half) — pure VPU relayout work; this is what the Pallas kernel
+    prologues run on 'w4' weight tiles right before slide-window
+    decompression.  ``count`` trims a padded tail.
+    """
+    lo = (p << jnp.int8(4)) >> jnp.int8(4)
+    hi = p >> jnp.int8(4)
+    out = jnp.stack([lo, hi], axis=-1).reshape(p.shape[:-1] + (-1,))
+    return out if count is None else out[..., :count]
+
+
 def magnitude_keep_mask(w: jax.Array, pattern: Pattern) -> jax.Array:
     """Boolean top-Z-by-|w| keep mask per L-group.
 

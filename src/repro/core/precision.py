@@ -1,0 +1,167 @@
+"""PrecisionRecipe — the dtype axis of the SlideSparse pipeline (§3.3/§4.2).
+
+The paper's argument is precision-agnostic: activation lifting rides on
+*whatever* per-token quantization pass inference already pays (INT8, FP8,
+FP4, ...).  This module makes precision a first-class, registry-driven axis
+instead of a stringly-typed ``act_quant`` flag, so a new precision is one
+:data:`RECIPES` entry rather than another if-chain through the stack.
+
+A recipe names three things:
+
+* ``act``    — per-token dynamic activation quantization: ``None`` (float
+  passthrough), ``'int8'`` (symmetric absmax/127, round-to-nearest) or
+  ``'fp8'`` (e4m3, absmax/448, clamp-BEFORE-cast — e4m3 has no inf and
+  XLA's raw cast NaNs on far overflow; see ``quant.quantize_fp8``).
+* ``weight`` — serving-side weight storage: ``None`` (float), ``'int8'``
+  (per-output-row symmetric) or ``'w4'`` (per-output-row symmetric int4,
+  qmax 7, values bit-packed two nibbles per byte — ``packer.pack_nibbles``
+  — and unpacked in the kernel prologue alongside the slide windows).
+* ``out``    — output dtype name, or ``None`` to follow the input dtype.
+
+The accumulator follows from the operands: int8 activations against integer
+weights accumulate in int32 (bit-exact, MXU-native); any fp8 operand
+accumulates in fp32 (both operands are cast losslessly to fp32 for the dot,
+so kernel and jnp oracle stay bit-identical).
+
+Built-in recipes (the registry rows future precisions extend):
+
+====== ====== ======== =========== =====================================
+name   act    weight   accumulate  notes
+====== ====== ======== =========== =====================================
+none   —      —        fp32        float path (dense FLOPs, float store)
+int8   int8   int8     int32       the w8a8 baseline (paper INT8 columns)
+fp8    fp8    int8     fp32        e4m3 acts, int8 rowwise weights
+w4     int8   w4       int32       int8 acts, packed-nibble int4 weights
+fp8w4  fp8    w4       fp32        e4m3 acts, packed-nibble int4 weights
+====== ====== ======== =========== =====================================
+
+Back-compat: :func:`resolve` is the ONLY place the legacy
+``act_quant='int8'`` string is interpreted — everything downstream of
+``SparsityConfig`` speaks :class:`PrecisionRecipe`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+
+_ACTS = (None, "int8", "fp8")
+_WEIGHTS = (None, "int8", "w4")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionRecipe:
+    """One point on the (activation x weight-storage x out-dtype) grid.
+
+    Frozen/hashable: safe inside ``SparsityConfig`` as a jit constant.
+    """
+
+    name: str = "none"          # registry id; also used in autotune keys
+    act: str | None = None      # None | 'int8' | 'fp8' (e4m3)
+    weight: str | None = None   # None | 'int8' | 'w4' (packed nibbles)
+    out: str | None = None      # dtype name; None -> follow the input
+
+    def __post_init__(self):
+        if self.act not in _ACTS:
+            raise ValueError(f"unknown activation precision {self.act!r};"
+                             f" expected one of {_ACTS}")
+        if self.weight not in _WEIGHTS:
+            raise ValueError(f"unknown weight storage {self.weight!r};"
+                             f" expected one of {_WEIGHTS}")
+        if (self.act is None) != (self.weight is None):
+            # float acts against integer weights would silently truncate;
+            # quantized acts against float weights has no kernel layout
+            raise ValueError(
+                f"recipe {self.name!r}: act={self.act!r} and "
+                f"weight={self.weight!r} must be both quantized or both "
+                "float (see kernels.ops.compressed_matmul)")
+
+    # ------------------------------------------------------------ queries
+    @property
+    def quantized(self) -> bool:
+        """True when the GEMM runs on quantized operands + dequant epilogue."""
+        return self.act is not None
+
+    @property
+    def packed_weights(self) -> bool:
+        """True when weight values are nibble-packed (two int4 per byte)."""
+        return self.weight == "w4"
+
+    @property
+    def act_dtype(self):
+        return {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn}[self.act]
+
+    @property
+    def acc_dtype(self):
+        """int32 for all-integer operands, else fp32 (fp8 dots are cast)."""
+        return jnp.int32 if self.act == "int8" else jnp.float32
+
+    def out_dtype(self, x_dtype):
+        return jnp.dtype(self.out) if self.out is not None else x_dtype
+
+    # ------------------------------------------------------- quantization
+    def quantize_act(self, x: jax.Array,
+                     absmax: jax.Array | None = None) -> quant.Quantized:
+        """Per-token dynamic quantization per the recipe's ``act`` axis.
+
+        ``absmax`` optionally overrides the per-row absmax (tensor-parallel
+        row-parallel projections pass the pmax-global value so sharded
+        quantization matches the unsharded semantics — DESIGN.md §9/§10).
+        """
+        if self.act == "int8":
+            return quant.quantize_int8(x, absmax=absmax)
+        if self.act == "fp8":
+            return quant.quantize_fp8(x, absmax=absmax)
+        raise ValueError(f"recipe {self.name!r} has no activation quantizer")
+
+    def quantize_weight(self, w: jax.Array) -> quant.Quantized:
+        """Per-output-row weight quantization per the ``weight`` axis.
+
+        Returns UNPACKED int8 values even for 'w4' (range [-7, 7]); nibble
+        packing happens after Phi/compression so window structure is
+        computed on per-slot values (``packer.pack_nibbles``).
+        """
+        if self.weight == "int8":
+            return quant.quantize_weight_int8_rowwise(w)
+        if self.weight == "w4":
+            return quant.quantize_weight_int4_rowwise(w)
+        raise ValueError(f"recipe {self.name!r} has no weight quantizer")
+
+
+RECIPES: dict[str, PrecisionRecipe] = {
+    "none": PrecisionRecipe("none"),
+    "int8": PrecisionRecipe("int8", act="int8", weight="int8"),
+    "fp8": PrecisionRecipe("fp8", act="fp8", weight="int8"),
+    "w4": PrecisionRecipe("w4", act="int8", weight="w4"),
+    "fp8w4": PrecisionRecipe("fp8w4", act="fp8", weight="w4"),
+}
+
+NONE = RECIPES["none"]
+
+
+def resolve(recipe, act_quant: str | None = None) -> PrecisionRecipe:
+    """Normalize ``recipe`` (PrecisionRecipe | name | None) to a recipe.
+
+    This is the back-compat shim: when ``recipe`` is None the legacy
+    ``act_quant`` string (None | 'int8') maps onto the equivalent registry
+    entry.  No other module interprets ``act_quant``.
+    """
+    if isinstance(recipe, PrecisionRecipe):
+        return recipe
+    if isinstance(recipe, str):
+        if recipe not in RECIPES:
+            raise ValueError(f"unknown precision recipe {recipe!r}; known:"
+                             f" {sorted(RECIPES)}")
+        return RECIPES[recipe]
+    if recipe is not None:
+        raise TypeError(f"recipe must be a PrecisionRecipe, a registry name"
+                        f" or None, got {type(recipe).__name__}")
+    if act_quant is None:
+        return NONE
+    if act_quant != "int8":
+        raise ValueError(f"unknown act_quant {act_quant!r} (legacy axis:"
+                         " None | 'int8'); use recipe=... for anything else")
+    return RECIPES["int8"]

@@ -146,6 +146,12 @@ def make_key(op: str, **params: Any) -> str:
     best tiles need not match a same-shaped single-device call (different
     VMEM pressure from the collective epilogue), and the rows bucket of a
     sharded call must never overwrite the unsharded winner.
+
+    The ops.py callers likewise pass ``adt=``/``wdt=`` (activation /
+    weight precision of the recipe, DESIGN.md §10) through ``params``: an
+    int8-tuned tile winner must never be silently reused for fp8 or
+    nibble-packed w4 operands, whose VMEM footprints and accumulator
+    dtypes differ at identical logical shapes.
     """
     from repro.sharding import tp  # deferred: kernels must import cleanly
 

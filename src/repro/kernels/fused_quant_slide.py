@@ -39,19 +39,27 @@ def lift_pairs(q: jax.Array, n_fam: int) -> jax.Array:
     return lifted.reshape(r, g * (n_fam - 1) * 4)
 
 
-def _kernel(x_ref, q_ref, s_ref, *, n_fam: int, fp8: bool):
-    x = x_ref[...].astype(jnp.float32)
+def quantize_rows(x: jax.Array, fp8: bool):
+    """The in-kernel per-row quantizer, shared by this kernel's store phase
+    and the fused GEMM prologue (fused_slide_matmul.py).  Bit-identical to
+    ``quant.quantize_int8`` (reciprocal form, Alg. 1 l.7) / ``quantize_fp8``
+    (divide-by-scale + clamp-BEFORE-e4m3-cast: e4m3 has no inf and XLA's
+    float32->e4m3 cast only saturates near the boundary — far-overflow
+    becomes NaN).  x must be fp32; returns (q, scale [R, 1] fp32)."""
     a = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
-    qmax = _FP8_MAX if fp8 else _QMAX
-    r = qmax / a                                        # pass 1 (Alg.1 l.6-8)
-    scale = a / qmax
     if fp8:
-        # clamp BEFORE the cast: e4m3 has no inf, and XLA's float32->e4m3
-        # cast only saturates near the boundary — far-overflow becomes NaN
-        q8 = jnp.clip(x * r, -qmax, qmax).astype(jnp.float8_e4m3fn)
+        scale = a / _FP8_MAX
+        q8 = jnp.clip(x / scale, -_FP8_MAX, _FP8_MAX
+                      ).astype(jnp.float8_e4m3fn)
     else:
-        q8 = jnp.clip(jnp.round(x * r), -qmax, qmax
+        scale = a / _QMAX
+        q8 = jnp.clip(jnp.round(x * (_QMAX / a)), -_QMAX, _QMAX
                       ).astype(jnp.int8)                # pass 2 (l.9-19)
+    return q8, scale
+
+
+def _kernel(x_ref, q_ref, s_ref, *, n_fam: int, fp8: bool):
+    q8, scale = quantize_rows(x_ref[...].astype(jnp.float32), fp8)
     q_ref[...] = lift_pairs(q8, n_fam)                  # Psi on the store path
     s_ref[...] = scale
 
@@ -107,9 +115,20 @@ def fused_quant_slide_pallas(x: jax.Array, *, n_fam: int,
 
 def fused_quant_slide(x: jax.Array, dec: SlideDecomposition,
                       interpret: bool = False, block_rows: int | None = None,
-                      fp8: bool = False):
+                      fp8: bool = False, recipe=None):
+    """``recipe`` (a PrecisionRecipe or registry name) selects the
+    activation quantizer; the legacy ``fp8`` bool is kept as a shorthand
+    for the e4m3 branch."""
     n = dec.source.family_n
     if n is None or dec.hw.m != 2 or dec.hw.n != 4:
         raise ValueError("Pallas kernel supports the (2N-2):2N -> 2:4 family")
+    if recipe is not None:
+        from repro.core import precision  # deferred: core imports first
+
+        rec = precision.resolve(recipe)
+        if not rec.quantized:
+            raise ValueError(f"recipe {rec.name!r} has no activation "
+                             "quantizer to fuse the lift into")
+        fp8 = rec.act == "fp8"
     return fused_quant_slide_pallas(
         x, n_fam=n, interpret=interpret, block_rows=block_rows, fp8=fp8)

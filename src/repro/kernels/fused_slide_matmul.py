@@ -4,9 +4,11 @@ The paper's §4.2 memory-op argument says Activation Lifting is near-zero cost
 *only* when Psi rides on the quantization store phase.  The two-kernel
 pipeline (fused_quant_slide -> quant_matmul) still pays one HBM round-trip of
 the lifted gamma*K activations (1.5x at 6:8).  This kernel removes it: the
-per-token quantization + lifting run in the GEMM *prologue*, the lifted int8
-rows live only in VMEM scratch, and the MXU consumes them directly against
-Phi(W).  HBM traffic per call (DESIGN.md §2):
+per-token quantization + lifting run in the GEMM *prologue*, the lifted
+int8/e4m3 rows live only in VMEM scratch, and the MXU consumes them directly
+against Phi(W).  The precision axis is recipe-driven (DESIGN.md §10): the
+prologue quantizer is int8 or fp8-e4m3 and 'w4' weights arrive nibble-packed
+and are sign-extended in-kernel.  HBM traffic per call (DESIGN.md §2):
 
     two-kernel:  read X (4K) + write Psi(q) (gamma*K) + read Psi(q) (gamma*K)
                  + read Phi(W) + write Y
@@ -28,8 +30,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.patterns import SlideDecomposition
+from repro.core.packer import unpack_nibbles
 
-from .fused_quant_slide import lift_pairs
+from .fused_quant_slide import lift_pairs, quantize_rows
 
 _QMAX = 127.0
 
@@ -68,21 +71,30 @@ def clamp_rows(br: int, rows: int) -> int:
 
 
 def _kernel(x_ref, w_ref, sw_ref, b_ref, o_ref, q_scr, sx_scr, *,
-            n_fam: int, has_bias: bool, activation: str | None):
+            n_fam: int, has_bias: bool, activation: str | None,
+            fp8: bool, w4: bool):
     # Prologue (Alg. 1 fused into the GEMM): quantize + lift the row block
     # once per r, at the first m step; every later m step reuses the scratch.
+    # The quantizer is recipe-selected (int8 round-to-nearest or e4m3
+    # clamp-before-cast) and bit-identical to the quant.py oracles.
     @pl.when(pl.program_id(1) == 0)
     def _quant_lift():
-        x = x_ref[...].astype(jnp.float32)
-        a = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
-        r = _QMAX / a
-        q8 = jnp.clip(jnp.round(x * r), -_QMAX, _QMAX).astype(jnp.int8)
+        q8, scale = quantize_rows(x_ref[...].astype(jnp.float32), fp8)
         q_scr[...] = lift_pairs(q8, n_fam)
-        sx_scr[...] = a / _QMAX
+        sx_scr[...] = scale
 
+    q, w = q_scr[...], w_ref[...]
+    if w4:
+        # 'w4' storage: two int4 nibbles per byte, sign-extended to int8 in
+        # the prologue — half the weight HBM bytes of the int8 recipe
+        w = unpack_nibbles(w)
+    if fp8:
+        # any e4m3 operand: lossless fp32 casts, fp32 accumulate — kernel
+        # and jnp oracle run the identical dot
+        q, w = q.astype(jnp.float32), w.astype(jnp.float32)
     acc = jax.lax.dot_general(
-        q_scr[...], w_ref[...], (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.int32)
+        q, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32 if fp8 else jnp.int32)
     out = acc.astype(jnp.float32) * sx_scr[...] * sw_ref[...].reshape(1, -1)
     if has_bias:
         out = out + b_ref[...]
@@ -106,25 +118,33 @@ def default_tiles(m: int, k: int, gk: int,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "n_fam", "out_dtype", "interpret", "br", "bm", "activation"))
+    "n_fam", "out_dtype", "interpret", "br", "bm", "activation", "act",
+    "w4"))
 def fused_slided_matmul_pallas(x, w_slided_q, s_w, bias=None, *, n_fam: int,
                                out_dtype=jnp.float32, interpret: bool = False,
                                br: int | None = None, bm: int | None = None,
-                               activation: str | None = None):
+                               activation: str | None = None,
+                               act: str = "int8", w4: bool = False):
     """y[R, M] = act((Psi(q(x)) @ Phi(W)^T) * s_x * s_w + bias) — one kernel.
 
-    x: [R, K] float; w_slided_q: [M, gamma*K] int8; s_w: [M, 1] fp32;
-    bias: [M] fp32 or None.  The lifted activations never leave VMEM.
+    x: [R, K] float; w_slided_q: [M, gamma*K] int8, or [M, gamma*K/2]
+    nibble-packed bytes when ``w4``; s_w: [M, 1] fp32; bias: [M] fp32 or
+    None.  ``act`` ('int8' | 'fp8') picks the prologue quantizer; the
+    lifted activations never leave VMEM in either precision.
     """
+    if act not in ("int8", "fp8"):
+        raise ValueError(f"unsupported activation precision {act!r}")
+    fp8 = act == "fp8"
     rows, k = x.shape
     if k % (2 * n_fam):
         raise ValueError(f"K={k} must be a multiple of 2N={2 * n_fam}")
     gk = (k // (2 * n_fam)) * (n_fam - 1) * 4
+    gkw = gk // 2 if w4 else gk  # stored weight width (bytes when packed)
     m = w_slided_q.shape[0]
-    if w_slided_q.shape[1] != gk:
+    if w_slided_q.shape[1] != gkw:
         raise ValueError(
             f"w_slided_q has contraction {w_slided_q.shape[1]}, expected"
-            f" gamma*K = {gk} for K={k}, N={n_fam}")
+            f" {'packed ' if w4 else ''}gamma*K = {gkw} for K={k}, N={n_fam}")
     dbr, dbm = default_tiles(m, k, gk)
     br, bm = br or dbr, bm or dbm
     br = clamp_rows(br, rows)
@@ -141,18 +161,19 @@ def fused_slided_matmul_pallas(x, w_slided_q, s_w, bias=None, *, n_fam: int,
     grid = (rp // br, mp // bm)
     y = pl.pallas_call(
         functools.partial(_kernel, n_fam=n_fam, has_bias=has_bias,
-                          activation=activation),
+                          activation=activation, fp8=fp8, w4=w4),
         grid=grid,
         in_specs=[
             pl.BlockSpec((br, k), lambda r, m_: (r, 0)),
-            pl.BlockSpec((bm, gk), lambda r, m_: (m_, 0)),
+            pl.BlockSpec((bm, gkw), lambda r, m_: (m_, 0)),
             pl.BlockSpec((bm, 1), lambda r, m_: (m_, 0)),
             pl.BlockSpec((1, bm), lambda r, m_: (0, m_)),
         ],
         out_specs=pl.BlockSpec((br, bm), lambda r, m_: (r, m_)),
         out_shape=jax.ShapeDtypeStruct((rp, mp), out_dtype),
         scratch_shapes=[
-            pltpu.VMEM((br, gk), jnp.int8),
+            pltpu.VMEM((br, gk),
+                       jnp.float8_e4m3fn if fp8 else jnp.int8),
             pltpu.VMEM((br, 1), jnp.float32),
         ],
         interpret=interpret,
@@ -163,10 +184,19 @@ def fused_slided_matmul_pallas(x, w_slided_q, s_w, bias=None, *, n_fam: int,
 def fused_slided_matmul(x: jax.Array, w_slided_q: jax.Array, s_w: jax.Array,
                         dec: SlideDecomposition, bias=None,
                         out_dtype=jnp.float32, interpret: bool = False,
-                        activation: str | None = None, **tiles):
+                        activation: str | None = None, recipe=None, **tiles):
+    """Recipe-polymorphic wrapper: ``recipe`` (PrecisionRecipe or registry
+    name; default 'int8') selects the prologue quantizer and whether the
+    slided weight operand is nibble-packed."""
     n = dec.source.family_n
     if n is None or dec.hw.m != 2 or dec.hw.n != 4:
         raise ValueError("Pallas kernel supports the (2N-2):2N -> 2:4 family")
+    from repro.core import precision  # deferred: core imports first
+
+    rec = precision.resolve(recipe if recipe is not None else "int8")
+    if not rec.quantized:
+        raise ValueError(f"recipe {rec.name!r} has no quantized GEMM form")
     return fused_slided_matmul_pallas(
         x, w_slided_q, s_w, bias, n_fam=n, out_dtype=out_dtype,
-        interpret=interpret, activation=activation, **tiles)
+        interpret=interpret, activation=activation, act=rec.act,
+        w4=rec.packed_weights, **tiles)

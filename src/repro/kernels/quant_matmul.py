@@ -23,9 +23,14 @@ def _kernel(x_ref, w_ref, sx_ref, sw_ref, b_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    x, w = x_ref[...], w_ref[...]
+    if jnp.float8_e4m3fn in (x.dtype, w.dtype):
+        # fp8 operands: lossless fp32 casts (the accumulator scratch is
+        # fp32 in that case — see the wrapper)
+        x, w = x.astype(jnp.float32), w.astype(jnp.float32)
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.int32)
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _epilogue():
@@ -43,8 +48,13 @@ def quant_matmul_pallas(q_x, q_w, s_x, s_w, bias=None, *,
                         interpret: bool = False, bm: int = 256,
                         br: int = 256, bk: int = 512,
                         activation: str | None = None):
-    """y[R, M] = act((q_x[R, K] @ q_w[M, K]^T) * s_x * s_w + bias)
-    (int32 accumulate)."""
+    """y[R, M] = act((q_x[R, K] @ q_w[M, K]^T) * s_x * s_w + bias).
+
+    Dtype-polymorphic (DESIGN.md §10): all-integer operands accumulate in
+    int32 (bit-exact vs the jnp oracle); any fp8-e4m3 operand is cast
+    losslessly to fp32 and accumulates in fp32 (identical up to the
+    K-blocked summation order).
+    """
     rows, k = q_x.shape
     m = q_w.shape[0]
     br = clamp_rows(br, rows)
@@ -61,6 +71,9 @@ def quant_matmul_pallas(q_x, q_w, s_x, s_w, bias=None, *,
     rp, kp, mp = q_x.shape[0], q_x.shape[1], q_w.shape[0]
     k_steps = kp // bk
     grid = (rp // br, mp // bm, k_steps)
+    ints = (jnp.issubdtype(q_x.dtype, jnp.integer)
+            and jnp.issubdtype(q_w.dtype, jnp.integer))
+    acc_dtype = jnp.int32 if ints else jnp.float32
     y = pl.pallas_call(
         functools.partial(_kernel, k_steps=k_steps, has_bias=has_bias,
                           activation=activation),
@@ -74,7 +87,7 @@ def quant_matmul_pallas(q_x, q_w, s_x, s_w, bias=None, *,
         ],
         out_specs=pl.BlockSpec((br, bm), lambda r, m_, k_: (r, m_)),
         out_shape=jax.ShapeDtypeStruct((rp, mp), out_dtype),
-        scratch_shapes=[pltpu.VMEM((br, bm), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((br, bm), acc_dtype)],
         interpret=interpret,
     )(q_x, q_w, s_x, s_w, b)
     return y[:rows, :m]

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant, slide, compressed as comp
+from repro.core import quant, slide, compressed as comp, packer, precision
 from repro.core.patterns import SlideDecomposition
 
 
@@ -24,26 +24,43 @@ def epilogue(y: jax.Array, bias: jax.Array | None,
 
 
 def fused_quant_slide(x: jax.Array, dec: SlideDecomposition,
-                      fp8: bool = False):
+                      fp8: bool = False,
+                      absmax: jax.Array | None = None):
     """Paper Alg. 1: per-row dynamic quantization + activation lifting.
 
     x: [rows, K] -> (q_lifted int8|e4m3 [rows, gamma*K], scale fp32
     [rows, 1]).  Quantize-then-lift == lift-then-quantize (lifting only
-    duplicates values, so the per-row absmax is unchanged).
+    duplicates values, so the per-row absmax is unchanged).  ``absmax``
+    optionally overrides the per-row absmax (tensor-parallel global
+    quantization, DESIGN.md §10).
     """
-    qx = quant.quantize_fp8(x) if fp8 else quant.quantize_int8(x)
+    qx = (quant.quantize_fp8(x, absmax=absmax) if fp8
+          else quant.quantize_int8(x, absmax=absmax))
     return slide.lift(qx.q, dec), qx.scale
+
+
+def _quant_dot(q_x: jax.Array, q_w: jax.Array) -> jax.Array:
+    """Shared accumulator rule: all-integer operands -> int32 dot; any fp8
+    operand -> lossless fp32 casts + fp32 dot (DESIGN.md §10)."""
+    ints = (jnp.issubdtype(q_x.dtype, jnp.integer)
+            and jnp.issubdtype(q_w.dtype, jnp.integer))
+    if ints:
+        return jax.lax.dot_general(q_x, q_w, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+    return jax.lax.dot_general(
+        q_x.astype(jnp.float32), q_w.astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
 
 
 def quant_matmul(q_x: jax.Array, s_x: jax.Array, q_w: jax.Array,
                  s_w: jax.Array, out_dtype=jnp.float32) -> jax.Array:
-    """w8a8 GEMM + dequant epilogue: (q_x @ q_w^T) * s_x * s_w.
+    """Quantized GEMM + dequant epilogue: (q_x @ q_w^T) * s_x * s_w.
 
-    q_x: [rows, K] int8; s_x: [rows, 1] fp32; q_w: [out, K] int8;
-    s_w: [out, 1] fp32.
+    q_x: [rows, K] int8 or float8_e4m3fn; s_x: [rows, 1] fp32; q_w:
+    [out, K] int8 (or e4m3); s_w: [out, 1] fp32.  Accumulator follows the
+    operand dtypes (int32 for all-integer, else fp32).
     """
-    acc = jax.lax.dot_general(
-        q_x, q_w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+    acc = _quant_dot(q_x, q_w)
     return (acc.astype(jnp.float32) * s_x * s_w[:, 0][None, :]).astype(out_dtype)
 
 
@@ -63,21 +80,57 @@ def compressed_matmul_fp(x: jax.Array, c: comp.CompressedSlided,
     return epilogue(acc, bias, activation).astype(out_dtype)
 
 
+def compressed_matmul_quant(x: jax.Array, c: comp.CompressedSlided,
+                            s_w: jax.Array, recipe, out_dtype=None,
+                            bias: jax.Array | None = None,
+                            activation: str | None = None,
+                            act_absmax: jax.Array | None = None
+                            ) -> jax.Array:
+    """Quantized path, recipe-polymorphic (DESIGN.md §10): per-token
+    activation quantization (int8 or fp8-e4m3) + decompress-matmul over
+    int8/int4 values + dequant epilogue.
+
+    c.values hold rowwise-quantized weights (nibble-packed when
+    ``c.packed``); s_w: [out, 1] fp32 row scales.  ``act_absmax``
+    optionally overrides the per-token absmax (tensor-parallel global
+    quantization).
+    """
+    rec = precision.resolve(recipe)
+    out_dtype = out_dtype or x.dtype
+    qx = rec.quantize_act(x, absmax=act_absmax)
+    w_rec = comp.decompress_original(c)  # int8-range [out, K]
+    acc = _quant_dot(qx.q, w_rec)
+    y = acc.astype(jnp.float32) * qx.scale * s_w[:, 0][None, :]
+    return epilogue(y, bias, activation).astype(out_dtype)
+
+
 def compressed_matmul_int8(x: jax.Array, c: comp.CompressedSlided,
                            s_w: jax.Array, out_dtype=None,
                            bias: jax.Array | None = None,
                            activation: str | None = None) -> jax.Array:
-    """w8a8 path: per-token int8 quant + int8 decompress-matmul + dequant.
+    """The int8 instance of :func:`compressed_matmul_quant` (w8a8)."""
+    return compressed_matmul_quant(x, c, s_w, "int8", out_dtype,
+                                   bias=bias, activation=activation)
 
-    c.values must be int8 (weights quantized per-output-row before
-    compression); s_w: [out, 1] fp32 row scales.
+
+def slided_matmul_quant(x: jax.Array, w_slided_q: jax.Array, s_w: jax.Array,
+                        dec: SlideDecomposition, recipe, out_dtype=None,
+                        bias: jax.Array | None = None,
+                        activation: str | None = None,
+                        act_absmax: jax.Array | None = None) -> jax.Array:
+    """Paper-faithful GPU semantics end-to-end, recipe-polymorphic:
+
+    y = (Psi(q_x) @ Phi(q_W)^T) * s_x * s_w   over the gamma*K contraction,
+    with q_x int8 or fp8-e4m3 and Phi(q_W) int8 or nibble-packed int4.
     """
+    rec = precision.resolve(recipe)
     out_dtype = out_dtype or x.dtype
-    qx = quant.quantize_int8(x)
-    w_rec = comp.decompress_original(c)  # int8 [out, K]
-    acc = jax.lax.dot_general(
-        qx.q, w_rec, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
-    y = acc.astype(jnp.float32) * qx.scale * s_w[:, 0][None, :]
+    q_lift, s_x = fused_quant_slide(x, dec, fp8=rec.act == "fp8",
+                                    absmax=act_absmax)
+    if rec.packed_weights:
+        w_slided_q = packer.unpack_nibbles(w_slided_q, q_lift.shape[-1])
+    acc = _quant_dot(q_lift, w_slided_q)
+    y = acc.astype(jnp.float32) * s_x * s_w[:, 0][None, :]
     return epilogue(y, bias, activation).astype(out_dtype)
 
 
@@ -85,14 +138,6 @@ def slided_matmul_int8(x: jax.Array, w_slided_q: jax.Array, s_w: jax.Array,
                        dec: SlideDecomposition, out_dtype=None,
                        bias: jax.Array | None = None,
                        activation: str | None = None) -> jax.Array:
-    """Paper-faithful GPU semantics end-to-end in int8:
-
-    y = (Psi(q_x) @ Phi(q_W)^T) * s_x * s_w   over the gamma*K contraction.
-    """
-    out_dtype = out_dtype or x.dtype
-    q_lift, s_x = fused_quant_slide(x, dec)
-    acc = jax.lax.dot_general(
-        q_lift, w_slided_q, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.int32)
-    y = acc.astype(jnp.float32) * s_x * s_w[:, 0][None, :]
-    return epilogue(y, bias, activation).astype(out_dtype)
+    """The int8 instance of :func:`slided_matmul_quant`."""
+    return slided_matmul_quant(x, w_slided_q, s_w, dec, "int8", out_dtype,
+                               bias=bias, activation=activation)

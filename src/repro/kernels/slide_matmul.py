@@ -33,6 +33,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.compressed import CompressedSlided
+from repro.core.packer import unpack_nibbles
 
 from .fused_slide_matmul import apply_activation, clamp_rows, prepare_bias
 
@@ -80,20 +81,31 @@ def decompress_tile(vals: jax.Array, idx: jax.Array, n_fam: int) -> jax.Array:
 def _mm_kernel(x_ref, v_ref, i_ref, sx_ref, sw_ref, b_ref, o_ref, w_scr,
                *, n_fam: int, k_chunks: int, bk: int, bkc: int, acc_dtype,
                quantized: bool, has_bias: bool, activation: str | None,
-               instrument: bool):
+               instrument: bool, packed: bool):
     # Decompress the (m, :) weight tile once — at the first r step — into the
     # persistent VMEM scratch; all later r steps reuse it (R-innermost grid).
+    # 'w4' values arrive nibble-packed (half the HBM bytes): sign-extend to
+    # int8 right before the slide-window scatter, still once per (m, k).
+    bkcv = bkc // 2 if packed else bkc  # stored chunk width (bytes if packed)
+
     @pl.when(pl.program_id(1) == 0)
     def _decompress():
         for j in range(k_chunks):
+            v = v_ref[:, j * bkcv:(j + 1) * bkcv]
+            if packed:
+                v = unpack_nibbles(v)
             w_scr[:, j * bk:(j + 1) * bk] = decompress_tile(
-                v_ref[:, j * bkc:(j + 1) * bkc],
-                i_ref[:, j * bkc:(j + 1) * bkc], n_fam)
+                v, i_ref[:, j * bkc:(j + 1) * bkc], n_fam)
             if instrument:
                 jax.debug.callback(_bump_decompress_count)
 
+    x, w = x_ref[...], w_scr[...]
+    if jnp.float8_e4m3fn in (x.dtype, w.dtype):
+        # fp8 operands: lossless fp32 casts, fp32 accumulate — identical
+        # arithmetic to the jnp oracle
+        x, w = x.astype(jnp.float32), w.astype(jnp.float32)
     acc = jax.lax.dot_general(
-        x_ref[...], w_scr[...], (((1,), (1,)), ((), ())),
+        x, w, (((1,), (1,)), ((), ())),
         preferred_element_type=acc_dtype)
     out = acc.astype(jnp.float32)
     if quantized:
@@ -133,19 +145,24 @@ def default_tiles(m: int, k: int, kc: int, x_itemsize: int,
 @functools.partial(
     jax.jit,
     static_argnames=("n_fam", "quantized", "interpret", "bm", "br", "bk",
-                     "out_dtype", "activation", "instrument"))
+                     "out_dtype", "activation", "instrument", "packed"))
 def compressed_matmul_pallas(x, values, indices, s_x, s_w, bias=None, *,
                              n_fam: int, quantized: bool,
                              out_dtype=jnp.float32, interpret: bool = False,
                              bm: int | None = None, br: int | None = None,
                              bk: int | None = None,
                              activation: str | None = None,
-                             instrument: bool = False):
+                             instrument: bool = False,
+                             packed: bool = False):
     """y[R, M] = act(x[R, K] @ decompress(values, indices)[M, K]^T
                      (+ dequant) (+ bias)).
 
-    quantized=True: x/values int8, int32 accumulate, epilogue * s_x * s_w.
-    quantized=False: float path, fp32 accumulate (s_x/s_w ignored; pass ones).
+    quantized=True: x int8 or float8_e4m3fn, integer values; int32
+    accumulate for all-integer operands, fp32 (lossless casts) when any
+    operand is fp8; epilogue * s_x * s_w.
+    quantized=False: float path, fp32 accumulate (s_x/s_w ignored; pass
+    ones).  packed=True: ``values`` are nibble-packed int4 pairs (the 'w4'
+    recipe) at half width, sign-extended in the decompress prologue.
     bias: [M] fp32 or None; activation: None | 'silu' | 'gelu' (fused
     epilogue, applied after dequant/bias).  ``bk`` is the dense width of one
     decompression chunk; the full (bm, K) tile is cached in VMEM scratch.
@@ -160,7 +177,7 @@ def compressed_matmul_pallas(x, values, indices, s_x, s_w, bias=None, *,
                          " chunk boundaries align with window groups")
     bkc = bk * density_num // density_den
 
-    dbm, dbr = default_tiles(m, k, values.shape[1], x.dtype.itemsize,
+    dbm, dbr = default_tiles(m, k, indices.shape[1], x.dtype.itemsize,
                              values.dtype.itemsize)
     bm, br = bm or dbm, br or dbr
     br = clamp_rows(br, rows)
@@ -171,29 +188,34 @@ def compressed_matmul_pallas(x, values, indices, s_x, s_w, bias=None, *,
         x = jnp.pad(x, ((0, pad_r), (0, pad_k)))
     if pad_r:
         s_x = jnp.pad(s_x, ((0, pad_r), (0, 0)), constant_values=1.0)
-    kc = values.shape[1]
+    kc = indices.shape[1]  # compressed SLOT count (values may be packed)
     pad_kc = (k + pad_k) * density_num // density_den - kc
     if pad_kc or pad_m:
-        values = jnp.pad(values, ((0, pad_m), (0, pad_kc)))
+        # every window group holds an even slot count, so pad_kc is even
+        # and the packed byte pad is exactly half the slot pad
+        values = jnp.pad(values, ((0, pad_m),
+                                  (0, pad_kc // 2 if packed else pad_kc)))
         indices = jnp.pad(indices, ((0, pad_m), (0, pad_kc)))
     if pad_m:
         s_w = jnp.pad(s_w, ((0, pad_m), (0, 0)), constant_values=1.0)
 
     rp, kp, mp = x.shape[0], x.shape[1], values.shape[0]
-    kcp = values.shape[1]
+    kcp = indices.shape[1]
+    kcvp = values.shape[1]  # kcp, or kcp // 2 when packed
     k_chunks = kp // bk
     grid = (mp // bm, rp // br)  # R innermost: decompress once per (m, k)
-    acc_dtype = jnp.int32 if quantized else jnp.float32
+    acc_dtype = (jnp.int32 if quantized and x.dtype == jnp.int8
+                 else jnp.float32)
 
     y = pl.pallas_call(
         functools.partial(_mm_kernel, n_fam=n_fam, k_chunks=k_chunks, bk=bk,
                           bkc=bkc, acc_dtype=acc_dtype, quantized=quantized,
                           has_bias=has_bias, activation=activation,
-                          instrument=instrument),
+                          instrument=instrument, packed=packed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((br, kp), lambda m_, r: (r, 0)),
-            pl.BlockSpec((bm, kcp), lambda m_, r: (m_, 0)),
+            pl.BlockSpec((bm, kcvp), lambda m_, r: (m_, 0)),
             pl.BlockSpec((bm, kcp), lambda m_, r: (m_, 0)),
             pl.BlockSpec((br, 1), lambda m_, r: (r, 0)),
             pl.BlockSpec((bm, 1), lambda m_, r: (m_, 0)),
@@ -213,10 +235,14 @@ def compressed_matmul(x: jax.Array, c: CompressedSlided,
                       bias: jax.Array | None = None,
                       out_dtype=jnp.float32, interpret: bool = False,
                       activation: str | None = None, **tiles):
+    """Dtype-polymorphic: the quantized path (dequant epilogue, integer or
+    fp32 accumulation) is selected by the activation dtype — callers pass
+    pre-quantized int8/e4m3 activations — and nibble-packing rides on
+    ``c.packed`` (the 'w4' recipe)."""
     n = c.decomposition.source.family_n
     if n is None or c.m != 2 or c.n != 4:
         raise ValueError("Pallas kernel supports the (2N-2):2N -> 2:4 family")
-    quantized = c.values.dtype == jnp.int8
+    quantized = x.dtype in (jnp.int8, jnp.float8_e4m3fn)
     rows = x.shape[0]
     mout = c.values.shape[0]
     if s_x is None:
@@ -226,4 +252,4 @@ def compressed_matmul(x: jax.Array, c: CompressedSlided,
     return compressed_matmul_pallas(
         x, c.values, c.indices, s_x, s_w, bias, n_fam=n, quantized=quantized,
         out_dtype=out_dtype, interpret=interpret, activation=activation,
-        **tiles)
+        packed=c.packed, **tiles)

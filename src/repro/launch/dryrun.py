@@ -108,7 +108,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              opt_state_dtype: str = "int8", verbose: bool = True,
              serve_tp_only: bool = False, swa_tile_skip: bool = False,
              sparse: tuple[int, int] | None = None,
-             act_quant: str | None = None, moe_pad: int = 0,
+             act_quant: str | None = None, precision: str | None = None,
+             moe_pad: int = 0,
              no_remat2: bool = False, seq_par: bool = False,
              kv_int8: bool = False, grad_accum: int = 1) -> dict:
     cfg = registry.get(arch)
@@ -125,8 +126,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     if sparse:
         from repro.core.linear import SparsityConfig
         cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
-            pattern=tuple(sparse), mode="compressed", act_quant=act_quant,
-            use_pallas=False))
+            pattern=tuple(sparse), mode="compressed", recipe=precision,
+            act_quant=act_quant, use_pallas=False))
     shape = shp.SHAPES[shape_name]
     ok, reason = shp.applicable(cfg, shape)
     rec = {"arch": arch, "shape": shape_name,
@@ -215,7 +216,11 @@ def main(argv=None):
                     help="windowed KV slicing on SWA layers")
     ap.add_argument("--sparse", nargs=2, type=int, metavar=("Z", "L"),
                     help="SlideSparse compressed weights")
-    ap.add_argument("--act-quant", choices=["int8"], default=None)
+    ap.add_argument("--act-quant", choices=["int8"], default=None,
+                    help="legacy precision flag; maps onto --precision int8")
+    ap.add_argument("--precision", default=None,
+                    choices=["none", "int8", "fp8", "w4", "fp8w4"],
+                    help="precision recipe for --sparse (DESIGN.md §10)")
     ap.add_argument("--moe-pad", type=int, default=0,
                     help="pad expert stacks to N for EP divisibility")
     ap.add_argument("--no-remat2", action="store_true",
@@ -264,7 +269,8 @@ def main(argv=None):
                    serve_tp_only=args.serve_tp_only,
                    swa_tile_skip=args.swa_tile_skip,
                    sparse=tuple(args.sparse) if args.sparse else None,
-                   act_quant=args.act_quant, moe_pad=args.moe_pad,
+                   act_quant=args.act_quant, precision=args.precision,
+                   moe_pad=args.moe_pad,
                    no_remat2=args.no_remat2, seq_par=args.seq_par,
                    kv_int8=args.kv_int8, grad_accum=args.grad_accum)
     if args.json:

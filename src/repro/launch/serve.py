@@ -20,7 +20,12 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sparse", nargs=2, type=int, metavar=("Z", "L"))
-    ap.add_argument("--act-quant", choices=["int8"], default=None)
+    ap.add_argument("--act-quant", choices=["int8"], default=None,
+                    help="legacy precision flag; maps onto --precision int8")
+    ap.add_argument("--precision", default=None,
+                    choices=["none", "int8", "fp8", "w4", "fp8w4"],
+                    help="precision recipe (DESIGN.md §10): activation "
+                         "quantizer x weight storage; overrides --act-quant")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -45,7 +50,7 @@ def main(argv=None):
     if args.sparse:
         cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
             pattern=tuple(args.sparse), mode="compressed",
-            act_quant=args.act_quant))
+            recipe=args.precision, act_quant=args.act_quant))
 
     params = M.init(cfg, jax.random.PRNGKey(0))
     params = serve_loop.pack_params(params, cfg)
@@ -70,7 +75,8 @@ def main(argv=None):
                        rid=i, arrival=i)  # staggered joins
         out = eng.run()
         s = eng.stats
-        print(f"[launch.serve] engine(tp={s.tp}): {len(out)} requests; "
+        print(f"[launch.serve] engine(tp={s.tp}, precision={s.precision}): "
+              f"{len(out)} requests; "
               f"decode {s.decode_tok_s:.1f} tok/s "
               f"({s.decode_tok_s_per_device:.1f}/device); occupancy "
               f"{s.mean_occupancy:.2f}; evictions {s.evictions}; "

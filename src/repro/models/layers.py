@@ -97,7 +97,10 @@ def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
 def swiglu(params, x, cfg: SparsityConfig):
     """Gate/up/down MLP.  With ``cfg.fuse_epilogue`` the SiLU runs inside
     the gate projection's matmul epilogue (DESIGN.md §2.3) instead of as a
-    separate elementwise pass over the [*, d_ff] gate tensor.
+    separate elementwise pass over the [*, d_ff] gate tensor.  Precision
+    rides on ``cfg.recipe`` (DESIGN.md §10): all three projections run the
+    recipe's quantized GEMM (int8/fp8 activations, int8/w4 weights)
+    through the same ``linear.apply`` dispatch.
 
     Under tensor-parallel serving (DESIGN.md §9) gate/up are
     column-parallel (SiLU and the Hadamard product act on local d_ff
@@ -124,5 +127,6 @@ def embed(params, tokens):
 
 
 def unembed(params, x, cfg: SparsityConfig = sl.DENSE):
-    """LM head (SparseLinear-routed so the technique covers it too)."""
+    """LM head (SparseLinear-routed so the technique — sparsity AND the
+    precision recipe — covers it too)."""
     return sl.apply(params, x, cfg)

@@ -4,7 +4,12 @@ Layers are grouped into the config's repeating *unit* (e.g. gemma3's
 5 local : 1 global, jamba's 7 mamba : 1 attn) and scanned with stacked
 parameters — one traced unit regardless of depth, which keeps 80-layer
 compiles tractable and gives the sharding rules a single leading 'unit'
-axis.  ``jax.checkpoint`` wraps the unit for training (remat)."""
+axis.  ``jax.checkpoint`` wraps the unit for training (remat).
+
+Every projection routes through ``linear.apply`` on ``cfg.sparsity``, so
+both axes of the paper's technique — the (2N-2):2N pattern AND the
+precision recipe (int8 / fp8 / w4 operands, DESIGN.md §10) — apply
+model-wide without any per-layer branching here."""
 from __future__ import annotations
 
 import functools

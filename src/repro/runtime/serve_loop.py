@@ -12,9 +12,11 @@ finished sequences retire and free their KV pages.  With
 ``EngineConfig.tp > 1`` both jitted steps run under ``shard_map`` over a
 1-D ``('tp',)`` device mesh: weights are column-/row-parallel, the paged
 KV pool is head-parallel, and greedy decode stays argmax-identical to the
-single-device engine (``tests/test_tp_serve.py``) — except with
-``act_quant='int8'``, where row-parallel layers quantize per-(token,
-shard) and results are close but not parity-exact (DESIGN.md §9).
+single-device engine (``tests/test_tp_serve.py``).  Quantized precision
+recipes (int8 / fp8 / w4, DESIGN.md §10) ride along: row-parallel layers
+quantize with the pmax-GLOBAL per-token absmax, so sharded quantization
+emits the same quantized values as the unsharded run and parity holds up
+to fp32 reassociation of the post-epilogue psum (DESIGN.md §9/§10).
 """
 from __future__ import annotations
 
@@ -51,7 +53,17 @@ class ServeStats:
 
 def pack_params(params: dict[str, Any], cfg: ModelConfig) -> dict[str, Any]:
     """Load-time compression (§4.3): walk the tree and run linear.prepare on
-    every SparseLinear leaf-dict (identified by holding a 2-D 'w')."""
+    every SparseLinear leaf-dict (a dict holding only a weight matrix 'w',
+    possibly with leading stack axes — the scanned unit projections are
+    [U, out, K] and ``jax.lax.scan`` strips the unit axis before
+    ``linear.apply`` sees them).
+
+    Packing at load time (not lazily inside the jitted step) matters for
+    quantized recipes under tensor parallelism (DESIGN.md §10): the rowwise
+    weight scales are computed over the FULL contraction dim here, then the
+    packed blocks + scales are sharded — a lazy in-trace prepare would
+    quantize each shard's local K-slice with its own scale and break parity
+    with the unsharded engine."""
     sp = cfg.sparsity
     if sp.mode in ("dense", "masked") or sp.pattern is None:
         return params
@@ -60,7 +72,11 @@ def pack_params(params: dict[str, Any], cfg: ModelConfig) -> dict[str, Any]:
         if isinstance(node, dict):
             if name in ("embed", "router"):
                 return node  # lookup tables / routers are not GEMMs
-            if set(node) == {"w"} and node["w"].ndim == 2 \
+            if "router" in node:
+                # MoE block: the [E, F, D] expert stacks run the grouped
+                # einsum path (moe._expert_weights), not SparseLinear
+                return node
+            if set(node) == {"w"} and node["w"].ndim >= 2 \
                     and node["w"].shape[-1] % sp.pattern[1] == 0:
                 return sl.prepare(node, sp)
             return {k: walk(v, k) for k, v in node.items()}
@@ -140,8 +156,8 @@ class Completion:
 @dataclasses.dataclass
 class EngineStats:
     """Engine-level counters accumulated over a ``run``: step/token
-    accounting, eviction count, mean decode-batch occupancy, and the
-    tensor-parallel degree the run executed at."""
+    accounting, eviction count, mean decode-batch occupancy, the
+    tensor-parallel degree and the precision recipe the run executed at."""
     steps: int = 0
     wall_s: float = 0.0
     decode_tokens: int = 0
@@ -150,6 +166,7 @@ class EngineStats:
     evictions: int = 0
     mean_occupancy: float = 0.0
     tp: int = 1               # tensor-parallel degree of the run
+    precision: str = "none"   # precision-recipe name (DESIGN.md §10)
 
     @property
     def decode_tok_s(self) -> float:
@@ -186,9 +203,10 @@ class ServeEngine:
     and greedy argmax needs no further collective.  Scheduling, page
     accounting, and sampling are unchanged — TP is invisible above the
     two step functions.  Argmax-parity with the single-device engine
-    holds for dense / compressed / int8-KV stacks; ``act_quant='int8'``
-    quantizes row-parallel activations per-(token, shard), which is
-    standard quantized-TP semantics but not parity-exact (DESIGN.md §9).
+    holds for dense / compressed / int8-KV stacks and for the quantized
+    precision recipes (int8 / fp8 / w4): row-parallel projections
+    quantize with the pmax-global per-token absmax (``tp.reduce_max``),
+    so every shard emits the unsharded quantized values (DESIGN.md §10).
     """
 
     def __init__(self, params, cfg: ModelConfig,
@@ -239,7 +257,7 @@ class ServeEngine:
             self._decode_fn = jax.jit(decode_step)
         self.completions: dict[int, Completion] = {}
         self._prompts: dict[int, list[int]] = {}
-        self.stats = EngineStats(tp=ntp)
+        self.stats = EngineStats(tp=ntp, precision=cfg.sparsity.recipe.name)
 
     # ------------------------------------------------------------ intake
     def submit(self, prompt: list[int], max_new_tokens: int,

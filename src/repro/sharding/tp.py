@@ -24,7 +24,12 @@ owns everything TP-specific:
   blocks) shard exactly like their dense ``w``: the compressed layout is
   group-major (K/L groups of w·M slots), so a row-parallel K-slice is a
   contiguous block-slice and every device holds *only its shard* of the
-  packed blocks — see ``compressed.split_k``.
+  packed blocks — see ``compressed.split_k``.  Nibble-packed 'w4' values
+  (DESIGN.md §10) shard on the same dim: every window group holds an even
+  slot count, so shard boundaries stay byte-aligned and byte slices are
+  congruent with slot slices.  Quantized recipes stay parity with the
+  unsharded engine because row-parallel activation quantization uses the
+  :func:`reduce_max` global absmax (see ``linear.apply``).
 * :func:`validate` — fail-fast divisibility checks (heads, d_ff, vocab,
   SSM heads, and pattern-group alignment of row-parallel K shards).
 * :func:`rmsnorm` — TP-aware gated-RMSNorm for activations sharded on
@@ -94,6 +99,21 @@ def reduce(x: jax.Array) -> jax.Array:
     if ctx is None or ctx.size == 1:
         return x
     return jax.lax.psum(x, ctx.axis)
+
+
+def reduce_max(x: jax.Array) -> jax.Array:
+    """Elementwise max over the TP axis; identity without an active context.
+
+    Used by ``linear.apply`` to turn a row-parallel projection's per-shard
+    per-token absmax into the GLOBAL absmax before quantizing (DESIGN.md
+    §10): every shard then emits the same quantized values and the same
+    dequant scale as the unsharded run, so quantized recipes stay
+    argmax-parity with the single-device engine (the residual difference
+    is only the fp32 reassociation of the post-epilogue psum)."""
+    ctx = current()
+    if ctx is None or ctx.size == 1:
+        return x
+    return jax.lax.pmax(x, ctx.axis)
 
 
 def rmsnorm(params, x, eps: float = 1e-6):

@@ -114,7 +114,8 @@ def test_tune_skipped_under_jit_tracing():
     jax.block_until_ready(f(x))
     key = autotune.make_key("fused_slided_matmul",
                             rows=autotune.rows_bucket(rows), m=m, k=k,
-                            pattern="6:8", dtype="float32", interpret=True)
+                            pattern="6:8", dtype="float32", adt="int8",
+                            wdt="int8", interpret=True)
     assert autotune.lookup(key) is None  # nothing recorded under trace
 
 
@@ -131,7 +132,8 @@ def test_ops_tune_records_and_reuses(monkeypatch):
                                interpret=True, tune=True)
     key = autotune.make_key("fused_slided_matmul",
                             rows=autotune.rows_bucket(rows), m=m, k=k,
-                            pattern="6:8", dtype="float32", interpret=True)
+                            pattern="6:8", dtype="float32", adt="int8",
+                            wdt="int8", interpret=True)
     assert autotune.lookup(key) is not None
     # second call must hit the cache, not re-search
     calls = []

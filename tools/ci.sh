@@ -14,16 +14,26 @@
 # 4. A tensor-parallel smoke (DESIGN.md §9): the same engine demo under
 #    --tp 2 on 4 forced host devices — sharded weights, head-parallel
 #    pages — still parity-checked against the dense reference.
-# 5. API-docs drift check: docs/api.md must match what
+# 5. Precision-recipe smokes ride step 3's engine path (fp8 + w4).
+# 6. API-docs drift check: docs/api.md must match what
 #    tools/gen_api_docs.py generates from the live docstrings.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-timeout 120 python -m benchmarks.run fused_pipeline
+timeout 240 python -m benchmarks.run fused_pipeline
 
 timeout 300 python examples/serve_batched.py --engine --requests 3 \
     --batch 2 --prompt-len 16 --new-tokens 6
+
+# precision-recipe smokes (DESIGN.md §10): fp8 activations and nibble-packed
+# w4 weights through the paged engine, parity-printed by launch.serve
+timeout 300 python -m repro.launch.serve --arch h2o-danube-3-4b --smoke \
+    --sparse 6 8 --precision fp8 --engine --batch 2 --prompt-len 16 \
+    --new-tokens 6
+timeout 300 python -m repro.launch.serve --arch h2o-danube-3-4b --smoke \
+    --sparse 6 8 --precision w4 --engine --batch 2 --prompt-len 16 \
+    --new-tokens 6
 
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 timeout 300 python examples/serve_batched.py --engine --tp 2 --requests 3 \
