@@ -294,11 +294,14 @@ def bench_roofline_table():
 
 
 def bench_serve():
-    """DESIGN.md §5: continuous-batching paged-KV engine vs the one-shot
-    dense-cache loop on the same staggered request set.  Derived column:
-    decode tok/s, mean batch occupancy, prefill/decode token split, and
-    pages in flight.  Timings are CPU interpret-scale — the comparable
-    quantities are occupancy (scheduler quality) and the token accounting.
+    """DESIGN.md §5/§11: continuous-batching paged-KV engine vs the
+    one-shot dense-cache loop on the same staggered request set, plus a
+    shared-prefix workload (common system prompt) with the radix prefix
+    cache off vs on.  Derived column: decode tok/s, mean batch occupancy,
+    prefill/decode token split, and for the shared-prefix rows the
+    prefix_hit_rate / prefill_chunks_skipped economics.  Timings are CPU
+    interpret-scale — the comparable quantities are occupancy (scheduler
+    quality) and the token accounting.
     """
     import dataclasses as dc
 
@@ -344,6 +347,37 @@ def bench_serve():
                  f"kv_tokens_per_shard="
                  f"{ecfg.kv_config().per_shard_page_tokens}",
                  precision=s.precision)
+
+    # shared-prefix workload (DESIGN.md §11): a common system prompt across
+    # requests, engine run with the radix prefix cache off vs on — the
+    # derived column records hit rate and skipped prefill work (every
+    # skipped chunk is a fused (2N-2):2N prefill GEMM never launched)
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=16).tolist()
+    sprompts = [sys_prompt + rng.integers(0, cfg.vocab_size, size=6).tolist()
+                for _ in range(4)]
+    for cache_on in (False, True):
+        ecfg = serve_loop.EngineConfig(
+            max_batch=4, page_size=8, num_pages=32, max_seq_len=40,
+            prefill_chunk=8, prefix_cache=cache_on)
+        eng = serve_loop.ServeEngine(params, cfg, ecfg)
+        for i, p in enumerate(sprompts):
+            eng.submit(p, new_tokens, rid=i, arrival=4 * i)
+        eng.run()
+        s, ss = eng.stats, eng.sched.stats
+        skip_frac = s.prefill_chunks_skipped / max(
+            s.prefill_chunks_skipped + ss.prefill_chunks, 1)
+        emit(f"serve_prefix[{'on' if cache_on else 'off'},"
+             f"shared16+4x6new]",
+             s.wall_s / max(s.steps, 1) * 1e6,
+             f"prefix_hit_rate={s.prefix_hit_rate:.3f};"
+             f"prefill_chunks_skipped={s.prefill_chunks_skipped};"
+             f"chunks_skipped_frac={skip_frac:.3f};"
+             f"prefill_tokens={s.prefill_tokens};"
+             f"recompute_tokens={s.recompute_tokens};"
+             f"prefix_hit_tokens={s.prefix_hit_tokens};"
+             f"cow_copies={s.cow_copies};"
+             f"decode_tok_s={s.decode_tok_s:.1f}",
+             precision=s.precision)
 
     # one-shot dense reference on the same traffic (batched, same prompts
     # padded to a rectangle is not apples-to-apples; serve one by one)

@@ -29,29 +29,40 @@ from repro.runtime import serve_loop
 
 def engine_demo(args, base, params):
     """Continuous-batching traffic over the packed SlideSparse pipeline:
-    staggered arrivals, mid-flight joins, retirement freeing pages.  Every
-    stream is verified against the one-shot dense-KV reference."""
+    staggered arrivals, mid-flight joins, retirement freeing pages.  With
+    ``--shared-prefix N`` every request opens with the same N-token system
+    prompt, and ``--prefix-cache`` reuses its KV pages across requests
+    (radix prefix cache + copy-on-write, DESIGN.md §11).  Every stream is
+    verified against the one-shot dense-KV reference."""
     z, l = args.pattern
+    if args.shared_prefix >= args.prompt_len:
+        raise SystemExit(f"--shared-prefix {args.shared_prefix} must be < "
+                         f"--prompt-len {args.prompt_len} (each prompt "
+                         "needs at least one unique suffix token)")
     cfg = dataclasses.replace(base, sparsity=SparsityConfig(
         pattern=(z, l), mode="compressed", use_pallas=False,
         fuse_epilogue=args.fuse_epilogue))
     packed = serve_loop.pack_params(params, cfg)
 
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, base.vocab_size,
-                            size=int(rng.integers(args.prompt_len // 2,
-                                                  args.prompt_len + 1))
-                            ).tolist()
+    shared = rng.integers(0, base.vocab_size,
+                          size=args.shared_prefix).tolist()
+    lo = max(1, (args.prompt_len - args.shared_prefix) // 2)
+    hi = max(lo + 1, args.prompt_len - args.shared_prefix + 1)
+    prompts = [shared + rng.integers(0, base.vocab_size,
+                                     size=int(rng.integers(lo, hi))).tolist()
                for _ in range(args.requests)]
 
     print(f"=== SlideSparse {z}:{l} continuous-batching engine "
-          f"({args.requests} staggered requests, tp={args.tp}) ===")
+          f"({args.requests} staggered requests, tp={args.tp}, "
+          f"policy={args.policy}, prefix_cache={args.prefix_cache}) ===")
     ecfg = serve_loop.EngineConfig(
         max_batch=min(args.batch, args.requests), page_size=8,
         num_pages=max(16, args.requests *
                       (args.prompt_len + args.new_tokens) // 8 + 8),
         max_seq_len=args.prompt_len + args.new_tokens,
-        prefill_chunk=max(8, args.prompt_len // 2), tp=args.tp)
+        prefill_chunk=max(8, args.prompt_len // 2), tp=args.tp,
+        prefix_cache=args.prefix_cache, policy=args.policy)
     eng = serve_loop.ServeEngine(packed, cfg, ecfg)
     for i, p in enumerate(prompts):
         eng.submit(p, args.new_tokens, rid=i, arrival=2 * i)
@@ -62,6 +73,14 @@ def engine_demo(args, base, params):
           f"({s.decode_tok_s_per_device:.1f}/device), "
           f"batch occupancy {s.mean_occupancy:.2f}, "
           f"evictions {s.evictions}")
+    if args.prefix_cache:
+        print(f"prefix cache: hit_rate {s.prefix_hit_rate:.2f}, "
+              f"{s.prefix_hit_tokens} cached tokens, "
+              f"{s.prefill_chunks_skipped} prefill chunks skipped, "
+              f"{s.cow_copies} COW page copies")
+        if args.shared_prefix >= 2 * ecfg.page_size and args.requests > 1:
+            assert s.prefix_hit_tokens > 0, \
+                "shared system prompt produced no prefix hits"
 
     mismatch = 0
     for i, p in enumerate(prompts):
@@ -98,6 +117,15 @@ def main():
                     help="engine mode: tensor-parallel degree (DESIGN.md "
                          "§9); on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N first")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="engine mode: radix prefix cache over ref-counted "
+                         "copy-on-write pages (DESIGN.md §11)")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=["fcfs", "priority"],
+                    help="engine mode: scheduler admission/eviction policy")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="engine mode: open every request with the same "
+                         "N-token system prompt (prefix-cache workload)")
     args = ap.parse_args()
 
     base = registry.smoke_config(args.arch)

@@ -40,6 +40,13 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=256)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over ref-counted copy-on-"
+                         "write pages for --engine (DESIGN.md §11): "
+                         "shared prompt prefixes skip re-prefill")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=["fcfs", "priority"],
+                    help="--engine scheduler admission/eviction policy")
     args = ap.parse_args(argv)
     if args.tp > 1 and not args.engine:
         raise SystemExit("--tp requires --engine (the one-shot loop is "
@@ -68,19 +75,24 @@ def main(argv=None):
             max_batch=args.batch, page_size=args.page_size,
             num_pages=args.num_pages,
             max_seq_len=args.prompt_len + args.new_tokens,
-            prefill_chunk=args.prefill_chunk, tp=args.tp)
+            prefill_chunk=args.prefill_chunk, tp=args.tp,
+            prefix_cache=args.prefix_cache, policy=args.policy)
         eng = serve_loop.ServeEngine(params, cfg, ecfg)
         for i in range(args.batch):
             eng.submit(batch["tokens"][i].tolist(), args.new_tokens,
                        rid=i, arrival=i)  # staggered joins
         out = eng.run()
         s = eng.stats
-        print(f"[launch.serve] engine(tp={s.tp}, precision={s.precision}): "
-              f"{len(out)} requests; "
+        print(f"[launch.serve] engine(tp={s.tp}, precision={s.precision}, "
+              f"policy={ecfg.policy}): {len(out)} requests; "
               f"decode {s.decode_tok_s:.1f} tok/s "
               f"({s.decode_tok_s_per_device:.1f}/device); occupancy "
               f"{s.mean_occupancy:.2f}; evictions {s.evictions}; "
               f"sample: {out[0].tokens[:8]}")
+        if args.prefix_cache:
+            print(f"[launch.serve] prefix cache: hit_rate "
+                  f"{s.prefix_hit_rate:.2f}; {s.prefill_chunks_skipped} "
+                  f"chunks skipped; {s.cow_copies} COW copies")
         return
 
     toks, stats = serve_loop.generate(params, cfg, batch, args.new_tokens)

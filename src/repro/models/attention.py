@@ -313,6 +313,22 @@ def _pool_scatter(pool, page_ids, slot_ids, k_new, v_new):
     return out
 
 
+def pool_copy_pages(pool, src_ids, dst_ids):
+    """Copy-on-write data plane (DESIGN.md §11): copy whole physical pages
+    ``src_ids[i] -> dst_ids[i]`` in every pool leaf.  Leaves are stacked
+    ``[U, num_pages, page_size, KVH, hd-or-1]``; a ``dst`` id equal to
+    ``num_pages`` is out of bounds and the copy is dropped (the padding
+    no-op, same convention as the scatter masks).  All reads snapshot the
+    input pool before any write lands, so chained pairs in one call are
+    consistent.  Under tensor-parallel serving the KVH dim is sharded;
+    page copies are per-shard elementwise, so the same host-decided pairs
+    apply on every shard with no collective."""
+    num_pages = pool["k"].shape[1]
+    src = jnp.clip(src_ids, 0, num_pages - 1)
+    return {name: leaf.at[:, dst_ids].set(leaf[:, src], mode="drop")
+            for name, leaf in pool.items()}
+
+
 def _pool_gather(pool, page_table, dtype):
     """page_table [B, maxp] -> contiguous logical K/V [B, maxp*P, KVH, hd].
 

@@ -85,6 +85,13 @@ def paged_decode_step(params, cfg: ModelConfig, token, cache, page_table,
         params, cfg, token, cache, page_table, kv_len, active, page_size)
 
 
+def paged_copy_pages(cfg: ModelConfig, cache, src_ids, dst_ids):
+    """Copy-on-write page duplication across the whole stack (the data
+    plane behind the prefix cache's shared pages, DESIGN.md §11); same
+    tensor-parallel calling convention as paged_prefill_chunk."""
+    return transformer.paged_copy_pages(cfg, cache, src_ids, dst_ids)
+
+
 def make_cache(cfg: ModelConfig, batch: int, max_len: int):
     if cfg.is_encoder_decoder:
         return {"self": encdec.make_cache(cfg, batch, max_len),

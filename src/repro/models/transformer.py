@@ -345,6 +345,22 @@ def make_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
     return jax.vmap(one_unit)(jnp.arange(cfg.num_units))
 
 
+def paged_copy_pages(cfg: ModelConfig, cache, src_ids, dst_ids):
+    """Copy-on-write step (DESIGN.md §11): duplicate physical pages
+    ``src_ids[i] -> dst_ids[i]`` in every attention layer's pool (one
+    logical page id addresses the same slot in every layer, so one host
+    decision copies the whole stack).  SSM layers hold per-slot state, not
+    pages — they pass through untouched (prefix caching is attention-only).
+    ``dst == num_pages`` entries are padding no-ops."""
+    out = {}
+    for i, kind in enumerate(cfg.unit_pattern):
+        lc = cache[f"layer_{i}"]
+        out[f"layer_{i}"] = (lc if kind == "ssm"
+                             else attention.pool_copy_pages(lc, src_ids,
+                                                            dst_ids))
+    return out
+
+
 def paged_prefill_chunk(params, cfg: ModelConfig, tokens, cache, page_table,
                         start, real_len, slot, reset, page_size: int):
     """One prompt chunk of one sequence through the paged cache.

@@ -1,27 +1,69 @@
-"""Block-paged KV cache accounting (vLLM-style, DESIGN.md §5).
+"""Block-paged KV cache accounting: ref-counted copy-on-write pages with a
+radix-style prefix cache (vLLM/SGLang-style, DESIGN.md §5/§11).
 
 Device storage is a per-layer *pool* of fixed-size pages
 (``[num_pages, page_size, KVH, hd]``, built by
 ``transformer.make_paged_cache``); this module owns the host-side
-bookkeeping: a free-list allocator over physical pages and per-sequence
-page tables mapping logical token blocks to physical pages.  The engine
-mirrors the tables to device as a dense ``[max_batch, max_pages]`` int32
-array each step — gather/scatter indices, never copied KV bytes.
+bookkeeping:
 
-All methods are O(pages touched) pure-Python; the only invariant-bearing
-state is ``_free`` + ``_tables``, and ``check()`` asserts the global
-accounting balance (used by the scheduler property tests).
+* :class:`PagePool` — a free-list allocator over physical pages extended
+  with per-page *refcounts* (``fork``/``release``), a token-block hash
+  index mapping chained full-page hashes to physical pages (the radix
+  prefix cache: a chain of block hashes is exactly a root-to-node path in
+  the radix tree of cached prompts), and LRU eviction of refcount-0
+  cached pages when the free list runs dry.
+* :class:`KVCacheManager` — per-sequence page tables over one shared
+  pool, prefix lookup/adoption at admission, full-block registration as
+  prefill completes, and the copy-on-write bookkeeping for writes into
+  shared pages.
+
+A page is in exactly one of three states — *free* (allocator), *cached*
+(refcount 0 but still in the hash index, reclaimable in LRU order), or
+*referenced* (refcount >= 1 slot tables point at it).  ``check()``
+asserts the partition, refcount conservation against the tables, and
+hash-index consistency; the scheduler property tests drive it after
+every decision.
+
+Hash keys are *chained*: ``h_i = H(h_{i-1} || tokens of block i)`` with
+``h_{-1} = H(namespace)``, where the namespace encodes model, precision
+recipe, KV dtype, tensor-parallel degree and page size — two engines
+with different recipes can never share each other's cache entries even
+if they somehow shared a pool (see :func:`block_hashes`).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import Counter, OrderedDict
 
 import numpy as np
 
 
 class OutOfPages(RuntimeError):
-    """Raised when an allocation cannot be satisfied; the scheduler reacts
-    by deferring admission or evicting a victim (recompute-preemption)."""
+    """Raised when an allocation cannot be satisfied even after reclaiming
+    cached refcount-0 pages; the scheduler reacts by deferring admission or
+    evicting a victim (recompute-preemption)."""
+
+
+def block_hashes(tokens, page_size: int, namespace: str = ""
+                 ) -> tuple[bytes, ...]:
+    """Chained hashes over the *full* pages of a prompt (DESIGN.md §11).
+
+    Block ``i`` covers tokens ``[i*page_size, (i+1)*page_size)``; a partial
+    tail block gets no hash (only full pages are cacheable).  Each hash
+    folds in the previous block's hash, so equal hashes imply equal whole
+    prefixes — the chain is a path in the radix tree of cached prompts.
+    ``namespace`` seeds the chain so caches keyed to different models,
+    precision recipes, or mesh shapes never cross-pollinate.
+    """
+    h = hashlib.blake2b(namespace.encode(), digest_size=16).digest()
+    out = []
+    for i in range(len(tokens) // page_size):
+        blk = np.asarray(tokens[i * page_size:(i + 1) * page_size],
+                         np.int64).tobytes()
+        h = hashlib.blake2b(h + blk, digest_size=16).digest()
+        out.append(h)
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,7 +77,9 @@ class PagedKVConfig:
     host page table, and each page carries only KVH/tp heads' bytes — so
     the allocator/accounting below is exactly shard-replicated and
     ``per_shard_page_tokens`` is the per-shard budget the scheduler's
-    invariants govern.
+    invariants govern.  The prefix cache and refcounts live in this same
+    host bookkeeping, so a tp=N engine makes identical hit/miss/COW
+    decisions to tp=1 (DESIGN.md §11).
     """
     page_size: int = 8          # tokens per page
     num_pages: int = 64         # physical pages in the pool (per layer)
@@ -64,46 +108,168 @@ class PagedKVConfig:
 
 
 class PagePool:
-    """LIFO free-list over physical page ids (LIFO keeps hot pages reused)."""
+    """Ref-counted page allocator with a block-hash prefix index.
+
+    Page lifecycle (DESIGN.md §11)::
+
+        free --alloc--> referenced(ref=1) --fork--> ref+1
+        referenced --release--> ref-1; at 0: cached if registered else free
+        cached --lookup+fork--> referenced   (prefix hit revives it)
+        cached --LRU reclaim--> referenced   (alloc under pressure,
+                                              hash unregistered first)
+
+    The free list is LIFO (hot pages reused); LRU reclaim takes the
+    *least recently used* cached page so long-lived shared prefixes
+    survive pressure longest.
+    """
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, -1, -1))
-        self._allocated: set[int] = set()
+        self._ref: dict[int, int] = {}           # page -> refcount (>= 1)
+        self._hash_of_page: dict[int, bytes] = {}  # registered full pages
+        self._index: dict[bytes, int] = {}         # chain hash -> page
+        self._lru: OrderedDict[int, None] = OrderedDict()  # cached, ref==0
+        self.cached_evictions = 0   # LRU reclaims of cached pages
 
+    # ------------------------------------------------------------ queries
     @property
     def num_free(self) -> int:
         return len(self._free)
 
+    @property
+    def num_cached(self) -> int:
+        """Refcount-0 pages still in the hash index (reclaimable)."""
+        return len(self._lru)
+
+    @property
+    def num_reclaimable(self) -> int:
+        """Pages an ``alloc`` can hand out: free + cached refcount-0."""
+        return len(self._free) + len(self._lru)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    # ----------------------------------------------------------- alloc
     def alloc(self, n: int) -> list[int]:
-        """Pop ``n`` page ids off the free list (raises OutOfPages)."""
-        if n > len(self._free):
-            raise OutOfPages(f"need {n} pages, {len(self._free)} free")
-        pages = [self._free.pop() for _ in range(n)]
-        self._allocated.update(pages)
+        """Hand out ``n`` exclusively-owned pages (refcount 1): free-list
+        pages first, then LRU reclaim of cached refcount-0 pages (their
+        hash entries are dropped first).  Raises :class:`OutOfPages`."""
+        if n > self.num_reclaimable:
+            raise OutOfPages(f"need {n} pages, {self.num_free} free + "
+                             f"{self.num_cached} cached")
+        pages = []
+        for _ in range(n):
+            if self._free:
+                p = self._free.pop()
+            else:
+                p = self._reclaim_lru()
+            self._ref[p] = 1
+            pages.append(p)
         return pages
 
-    def free(self, pages: list[int]) -> None:
-        """Return pages to the free list (raises ValueError on double free)."""
+    def _reclaim_lru(self) -> int:
+        p, _ = self._lru.popitem(last=False)   # least recently used
+        del self._index[self._hash_of_page.pop(p)]
+        self.cached_evictions += 1
+        return p
+
+    def fork(self, pages: list[int]) -> None:
+        """Take an additional reference on each page (copy-on-write share).
+        A cached refcount-0 page is revived out of the LRU list."""
         for p in pages:
-            if p not in self._allocated:
+            if p in self._lru:
+                del self._lru[p]
+                self._ref[p] = 1
+            elif p in self._ref:
+                self._ref[p] += 1
+            else:
+                raise ValueError(f"fork of unreferenced page {p}")
+
+    def release(self, pages: list[int]) -> None:
+        """Drop one reference per page.  At refcount 0 a registered page
+        parks in the prefix cache (LRU tail — most recently released);
+        an unregistered page returns to the free list.  Raises ValueError
+        on over-release (the double-free of the refcounted world)."""
+        for p in pages:
+            r = self._ref.get(p)
+            if r is None:
                 raise ValueError(f"double free of page {p}")
-            self._allocated.remove(p)
-            self._free.append(p)
+            if r > 1:
+                self._ref[p] = r - 1
+            else:
+                del self._ref[p]
+                if p in self._hash_of_page:
+                    self._lru[p] = None
+                else:
+                    self._free.append(p)
+
+    # backwards-compatible alias: exclusive-ownership free == release
+    free = release
+
+    # ------------------------------------------------------ prefix cache
+    def register(self, page: int, chain_hash: bytes) -> bool:
+        """Enter a *full, written* page into the prefix index.  First
+        writer wins: a hash already mapped (a concurrent duplicate) or a
+        page already registered under another hash is left alone (returns
+        False)."""
+        if chain_hash in self._index or page in self._hash_of_page:
+            return False
+        if page not in self._ref:
+            raise ValueError(f"register of unreferenced page {page}")
+        self._hash_of_page[page] = chain_hash
+        self._index[chain_hash] = page
+        return True
+
+    def lookup(self, chain_hash: bytes) -> int | None:
+        """Page holding the block chain ``chain_hash``, or None.  Touches
+        the LRU order of cached pages so hot prefixes survive reclaim."""
+        p = self._index.get(chain_hash)
+        if p is not None and p in self._lru:
+            self._lru.move_to_end(p)
+        return p
+
+    # --------------------------------------------------------- invariant
+    def check(self) -> None:
+        """free / cached / referenced partition ``range(num_pages)``; every
+        refcount >= 1; LRU pages are exactly the refcount-0 registered
+        pages; the hash index and the per-page hash map are inverse."""
+        free, lru, ref = set(self._free), set(self._lru), set(self._ref)
+        assert len(self._free) == len(free), "free-list duplicate"
+        assert not (free & lru) and not (free & ref) and not (lru & ref), \
+            "page in two lifecycle states"
+        assert free | lru | ref == set(range(self.num_pages)), "page leak"
+        assert all(r >= 1 for r in self._ref.values()), "zombie refcount"
+        assert self._index == {h: p for p, h in self._hash_of_page.items()}, \
+            "hash index drift"
+        assert len(self._index) == len(self._hash_of_page), \
+            "two pages under one hash"
+        registered = set(self._hash_of_page)
+        assert lru <= registered, "cached page without a hash"
+        assert not (registered & free), "registered page on the free list"
 
 
 class KVCacheManager:
-    """Per-slot page tables over one shared pool.
+    """Per-slot page tables over one shared ref-counted pool.
 
     A *slot* is a decode batch index (0..max_batch).  ``ensure(slot, n)``
-    grows the slot's table until it covers ``n`` tokens; ``free_slot``
-    returns every page.  Unused table entries point at physical page 0 —
-    always a valid gather index; reads from them are masked by ``kv_len``
-    (decode) or the causal mask (prefill), never trusted.
+    grows the slot's table with exclusively-owned pages until it covers
+    ``n`` tokens; ``adopt_cached`` forks prefix-cache hits in as the
+    table's head at admission; ``cow_range`` replaces shared pages in a
+    write range with fresh exclusive copies (the host half of
+    copy-on-write — the engine performs the device-side page copy);
+    ``free_slot`` releases every page (registered ones park in the prefix
+    cache).  Unused table entries point at physical page 0 — always a
+    valid gather index; reads from them are masked by ``kv_len`` (decode)
+    or the causal mask (prefill), never trusted.
+
+    ``namespace`` seeds this manager's block-hash chains (model /
+    precision / KV dtype / tp / page size — see :func:`block_hashes`).
     """
 
-    def __init__(self, cfg: PagedKVConfig):
+    def __init__(self, cfg: PagedKVConfig, namespace: str = ""):
         self.cfg = cfg
+        self.namespace = namespace
         self.pool = PagePool(cfg.num_pages)
         self._tables: dict[int, list[int]] = {}
 
@@ -116,11 +282,16 @@ class KVCacheManager:
         return len(self._tables.get(slot, ())) * self.cfg.page_size
 
     def can_allocate(self, num_tokens: int) -> bool:
-        return self.cfg.pages_for(num_tokens) <= self.pool.num_free
+        """Conservative: counts free + reclaimable-cached pages."""
+        return self.cfg.pages_for(num_tokens) <= self.pool.num_reclaimable
 
     @property
     def used_pages(self) -> int:
         return self.pool.num_pages - self.pool.num_free
+
+    def hashes_for(self, tokens) -> tuple[bytes, ...]:
+        """Block-hash chain of a prompt under this manager's namespace."""
+        return block_hashes(tokens, self.cfg.page_size, self.namespace)
 
     # ---------------------------------------------------------- mutation
     def ensure(self, slot: int, num_tokens: int) -> None:
@@ -136,7 +307,56 @@ class KVCacheManager:
     def free_slot(self, slot: int) -> None:
         pages = self._tables.pop(slot, [])
         if pages:
-            self.pool.free(pages)
+            self.pool.release(pages)
+
+    # ------------------------------------------------------ prefix cache
+    def lookup_prefix(self, hashes) -> list[int]:
+        """Longest cached chain for ``hashes``: pages for blocks
+        0..k while every block hits (a radix-tree descent — the chained
+        hashes make block k's hit imply blocks 0..k-1 match too)."""
+        pages = []
+        for h in hashes:
+            p = self.pool.lookup(h)
+            if p is None:
+                break
+            pages.append(p)
+        return pages
+
+    def adopt_cached(self, slot: int, pages: list[int]) -> None:
+        """Fork prefix-cache hit pages in as the slot's table head
+        (admission-time sharing; the slot must not hold pages yet)."""
+        if self._tables.get(slot):
+            raise ValueError(f"slot {slot} already holds pages")
+        self.pool.fork(pages)
+        self._tables[slot] = list(pages)
+
+    def register_block(self, slot: int, block_idx: int,
+                       chain_hash: bytes) -> bool:
+        """Enter the slot's ``block_idx``-th page — now fully written with
+        prompt tokens — into the prefix index (first writer wins)."""
+        return self.pool.register(self._tables[slot][block_idx], chain_hash)
+
+    def cow_range(self, slot: int, start_tok: int, end_tok: int,
+                  pairs: list[tuple[int, int]]) -> None:
+        """Copy-on-write bookkeeping for a pending write to
+        ``[start_tok, end_tok)``: every overlapped page with refcount > 1
+        is swapped for a fresh exclusive page, appending ``(src, dst)`` to
+        ``pairs`` (appended incrementally so completed swaps survive an
+        OutOfPages mid-range — the caller evicts and retries; already
+        exclusive pages are skipped on the retry).  The engine executes
+        the device-side page copies before the write runs."""
+        if end_tok <= start_tok:
+            return
+        table = self._tables.get(slot, [])
+        ps = self.cfg.page_size
+        last = min(-(-end_tok // ps), len(table))
+        for bi in range(start_tok // ps, last):
+            src = table[bi]
+            if self.pool.refcount(src) > 1:
+                dst = self.pool.alloc(1)[0]   # may raise OutOfPages
+                self.pool.release([src])      # siblings keep their refs
+                table[bi] = dst
+                pairs.append((src, dst))
 
     # ----------------------------------------------------- device mirror
     def page_table_array(self) -> np.ndarray:
@@ -149,20 +369,20 @@ class KVCacheManager:
 
     # --------------------------------------------------------- invariant
     def check(self) -> None:
-        """Accounting balance: every page is free xor owned by one slot.
+        """Refcount conservation + pool partition + hash-index consistency.
 
-        Under tensor parallelism pages are head-sharded behind one shared
-        table — every shard holds a structurally identical pool — so
-        these assertions ARE the per-shard invariants: one check covers
-        all ``cfg.tp`` shards (there is no additional per-shard state to
-        balance; the per-shard *budget* is ``cfg.per_shard_page_tokens``
-        and equals the single-device one by construction).
+        A page referenced by k slot tables must carry refcount exactly k
+        (shared prefixes are the only way k > 1); within one table every
+        page appears once.  Under tensor parallelism pages are
+        head-sharded behind one shared table — every shard holds a
+        structurally identical pool — so these assertions ARE the
+        per-shard invariants: one check covers all ``cfg.tp`` shards.
         """
-        owned: list[int] = [p for t in self._tables.values() for p in t]
-        assert len(owned) == len(set(owned)), "page owned by two slots"
-        assert set(owned) == self.pool._allocated, "alloc set drift"
-        assert len(owned) + self.pool.num_free == self.pool.num_pages, \
-            "page leak: used + free != total"
+        owned = Counter(p for t in self._tables.values() for p in t)
+        assert dict(owned) == self.pool._ref, \
+            "refcount drift: table references != pool refcounts"
         for slot, t in self._tables.items():
             assert 0 <= slot < self.cfg.max_batch
             assert len(t) <= self.cfg.max_pages_per_seq
+            assert len(t) == len(set(t)), "page twice in one table"
+        self.pool.check()

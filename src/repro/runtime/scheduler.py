@@ -1,32 +1,51 @@
-"""Continuous-batching scheduler: iteration-level admission over paged KV.
+"""Continuous-batching scheduler: iteration-level admission over paged KV,
+pluggable admission/eviction policies, and radix-prefix-cache reuse.
 
 One ``Scheduler`` instance drives one model replica.  Each engine step asks
 for a :class:`Decision`:
 
-* ``PrefillChunk(seq, start, length)`` — run ``length`` prompt tokens of one
-  sequence through the model, writing KV into its pages.  Prompts are
-  chunked to ``prefill_chunk`` tokens (the per-step token budget), so long
-  prompts never stall running decodes for more than one step.
-* ``DecodeBatch(seqs)`` — one token for every running sequence at once.
+* ``PrefillChunk(seq, start, length, cow)`` — run ``length`` prompt tokens
+  of one sequence through the model, writing KV into its pages.  Prompts
+  are chunked to ``prefill_chunk`` tokens (the per-step token budget), so
+  long prompts never stall running decodes for more than one step.
+* ``DecodeBatch(seqs, cow)`` — one token for every running sequence.
 
-Policy (deterministic, FCFS):
-  1. admit waiting requests (arrival <= clock) while a slot and first-chunk
-     pages are available;
-  2. alternate prefill and decode when both have work (fair interleave);
-  3. a sequence that cannot get a page triggers *recompute preemption*: the
-     youngest running sequence is evicted — pages freed, prompt + generated
-     tokens re-queued as a new prompt.  Greedy decoding makes recompute
-     lossless: the re-prefilled sequence continues the same token stream.
+``cow`` carries host-decided copy-on-write page pairs: pages in the
+decision's write range that were shared with siblings have already been
+swapped for fresh exclusive pages in the page table; the engine must copy
+``src -> dst`` on device *before* executing the step (DESIGN.md §11).
 
-The scheduler never touches device state; it owns request lifecycle and the
-:class:`KVCacheManager` accounting, which is what the property tests drive.
+Policies are pluggable (:class:`SchedulerPolicy`): admission picks which
+waiting request joins next, eviction picks the recompute-preemption
+victim.  :class:`FCFSPolicy` preserves the original strict
+first-come-first-served behavior; :class:`PriorityPolicy` admits the
+highest-priority arrived request and evicts the lowest-priority youngest
+sequence (SLA-style).  Both are deterministic — the decision trace is
+part of the test contract.
+
+With ``prefix_cache=True`` the admission path queries the block-hash
+prefix index (``kv_cache.block_hashes`` chains computed at enqueue) and
+truncates the prefill plan to the *uncached suffix*: hit pages are forked
+into the new sequence's table, ``prefill_pos`` starts at the cached
+length (always capped at ``len(prompt) - 1`` so at least one real token
+is prefilled to produce logits), and the skipped chunks are accounted in
+``SchedStats``.  Full prompt pages are registered into the index as their
+prefill completes.  Recompute-preemption releases forked pages without
+disturbing siblings (refcounts), and a preempted request's re-queued
+prompt (prompt + generated) gets fresh block hashes so re-admission can
+hit its own surviving cached pages.
+
+The scheduler never touches device state; it owns request lifecycle and
+the :class:`KVCacheManager` accounting, which is what the property tests
+drive.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
 
-from .kv_cache import KVCacheManager, OutOfPages, PagedKVConfig
+from .kv_cache import (KVCacheManager, OutOfPages, PagedKVConfig,
+                       block_hashes)
 
 
 @dataclasses.dataclass
@@ -36,6 +55,15 @@ class Request:
     max_new_tokens: int
     arrival: int = 0            # engine step clock at which it may be admitted
     eos_id: int | None = None
+    priority: int = 0           # PriorityPolicy: higher admits/survives first
+    # chained full-page hashes of ``prompt`` (kv_cache.block_hashes),
+    # computed at enqueue by the engine; None disables prefix lookup
+    block_hashes: tuple[bytes, ...] | None = None
+    requeued: bool = False      # re-admission after recompute-preemption
+    # leading tokens of ``prompt`` whose KV was already computed in an
+    # earlier residency (prefilled or decoded before the eviction):
+    # re-prefilling them is *recomputation*, not new prompt work
+    recompute_high: int = 0
 
 
 @dataclasses.dataclass
@@ -44,6 +72,8 @@ class Sequence:
     req: Request
     slot: int
     prefill_pos: int = 0        # prompt tokens whose KV is already written
+    resume_pos: int = 0         # admission-time prefill_pos (prefix-cache hit)
+    registered_blocks: int = 0  # full prompt pages entered in the hash index
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     evictions: int = 0
 
@@ -78,14 +108,99 @@ class PrefillChunk:
     seq: Sequence
     start: int
     length: int
+    cow: tuple[tuple[int, int], ...] = ()   # (src, dst) page copies, pre-step
 
 
 @dataclasses.dataclass(frozen=True)
 class DecodeBatch:
     seqs: tuple[Sequence, ...]
+    cow: tuple[tuple[int, int], ...] = ()   # (src, dst) page copies, pre-step
 
 
 Decision = PrefillChunk | DecodeBatch
+
+
+# ------------------------------------------------------------------ policy
+class SchedulerPolicy:
+    """Admission/eviction strategy plugged into the scheduler.
+
+    Implementations must be deterministic pure functions of their
+    arguments — the decision trace is replayed by the determinism tests.
+    """
+
+    name = "base"
+
+    def select_admission(self, waiting, clock: int) -> int | None:
+        """Index into ``waiting`` of the request to admit next, or None to
+        admit nothing this step (resource checks happen in the scheduler —
+        this only expresses *ordering*)."""
+        raise NotImplementedError
+
+    def select_victim(self, running, protect) -> "Sequence | None":
+        """The running sequence to recompute-preempt so ``protect`` can
+        get pages; None when no victim exists."""
+        raise NotImplementedError
+
+
+class FCFSPolicy(SchedulerPolicy):
+    """Strict first-come-first-served: only the queue head is eligible
+    (a not-yet-arrived head blocks later arrivals — original PR-2
+    semantics); the eviction victim is the youngest running sequence."""
+
+    name = "fcfs"
+
+    def select_admission(self, waiting, clock):
+        if waiting and waiting[0].arrival <= clock:
+            return 0
+        return None
+
+    def select_victim(self, running, protect):
+        victims = [s for s in running if s is not protect]
+        return victims[-1] if victims else None   # youngest admission
+
+
+class PriorityPolicy(SchedulerPolicy):
+    """Priority/SLA scheduling on ``Request.priority`` (higher wins).
+
+    Admission: the highest-priority *arrived* request, ties broken by
+    queue position (FCFS within a priority class).  Eviction: the
+    lowest-priority running sequence, ties broken youngest-first — a
+    high-priority arrival can preempt background work but never a peer
+    that got there first.
+    """
+
+    name = "priority"
+
+    def select_admission(self, waiting, clock):
+        best = None
+        for i, req in enumerate(waiting):
+            if req.arrival > clock:
+                continue
+            if best is None or req.priority > waiting[best].priority:
+                best = i
+        return best
+
+    def select_victim(self, running, protect):
+        victims = [s for s in running if s is not protect]
+        if not victims:
+            return None
+        lowest = min(s.req.priority for s in victims)
+        return [s for s in victims if s.req.priority == lowest][-1]
+
+
+POLICIES: dict[str, type[SchedulerPolicy]] = {
+    "fcfs": FCFSPolicy,
+    "priority": PriorityPolicy,
+}
+
+
+def make_policy(name: str) -> SchedulerPolicy:
+    """Instantiate a registered policy by name (``fcfs`` | ``priority``)."""
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise ValueError(f"unknown scheduler policy {name!r}; "
+                         f"registered: {sorted(POLICIES)}") from None
 
 
 @dataclasses.dataclass
@@ -93,21 +208,43 @@ class SchedStats:
     admitted: int = 0
     retired: int = 0
     evicted: int = 0
-    prefill_tokens: int = 0
+    prefill_tokens: int = 0     # first-pass prompt tokens actually prefilled
+    recompute_tokens: int = 0   # re-prefilled tokens after an eviction —
+    #                             counted separately so prefill_tokens (and
+    #                             the hit-rate denominator) stays truthful
+    prefill_chunks: int = 0     # PrefillChunk decisions executed
     decode_tokens: int = 0
     decode_steps: int = 0
     occupancy_sum: float = 0.0  # sum over decode steps of running/max_batch
+    # prefix cache (DESIGN.md §11)
+    prefix_lookups: int = 0         # admissions that consulted the index
+    prefix_hits: int = 0            # admissions with >= 1 cached page
+    prefix_hit_tokens: int = 0      # prompt tokens skipped via cached pages
+    prefill_chunks_skipped: int = 0  # chunk decisions avoided by hits
+    cow_copies: int = 0             # copy-on-write page copies issued
 
     @property
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / max(self.decode_steps, 1)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Cached fraction of all prompt tokens that needed KV: hits over
+        hits + actually-prefilled (first-pass and recomputed) tokens."""
+        total = (self.prefix_hit_tokens + self.prefill_tokens
+                 + self.recompute_tokens)
+        return self.prefix_hit_tokens / max(total, 1)
+
 
 class Scheduler:
-    def __init__(self, kv: KVCacheManager, prefill_chunk: int = 16):
+    def __init__(self, kv: KVCacheManager, prefill_chunk: int = 16,
+                 policy: SchedulerPolicy | None = None,
+                 prefix_cache: bool = False):
         self.kv = kv
         self.cfg: PagedKVConfig = kv.cfg
         self.prefill_chunk = prefill_chunk
+        self.policy = policy or FCFSPolicy()
+        self.prefix_cache = prefix_cache
         self.waiting: deque[Request] = deque()
         self.running: list[Sequence] = []   # admission order (oldest first)
         self.clock = 0
@@ -122,6 +259,8 @@ class Scheduler:
         if len(req.prompt) + req.max_new_tokens > self.cfg.max_seq_len:
             raise ValueError(f"request {req.rid}: prompt+max_new exceeds "
                              f"max_seq_len={self.cfg.max_seq_len}")
+        if self.prefix_cache and req.block_hashes is None:
+            req.block_hashes = self.kv.hashes_for(req.prompt)
         self.waiting.append(req)
 
     @property
@@ -134,34 +273,72 @@ class Scheduler:
 
     # ---------------------------------------------------------- policy
     def _admit(self) -> None:
-        while self.waiting and self.waiting[0].arrival <= self.clock:
+        while self.waiting:
+            idx = self.policy.select_admission(self.waiting, self.clock)
+            if idx is None:
+                return
             slots = self._free_slots()
-            req = self.waiting[0]
-            first = min(self.prefill_chunk, len(req.prompt))
+            req = self.waiting[idx]
+            ps = self.cfg.page_size
+
+            cached_pages: list[int] = []
+            cached_len = 0
+            if self.prefix_cache and req.block_hashes:
+                hits = self.kv.lookup_prefix(req.block_hashes)
+                # cap: at least one real token must prefill to emit logits
+                cached_len = min(len(hits) * ps, len(req.prompt) - 1)
+                cached_pages = hits[:self.cfg.pages_for(cached_len)]
+            first = cached_len + min(self.prefill_chunk,
+                                     len(req.prompt) - cached_len)
+            # conservative: counts forked pages as if freshly allocated,
+            # so the fork + ensure below can never fail mid-admission
             if not slots or not self.kv.can_allocate(first):
                 return
-            self.waiting.popleft()
-            seq = Sequence(req, slots[0])
+            del self.waiting[idx]
+            seq = Sequence(req, slots[0], prefill_pos=cached_len,
+                           resume_pos=cached_len,
+                           registered_blocks=len(cached_pages))
+            if cached_pages:
+                self.kv.adopt_cached(seq.slot, cached_pages)
             self.kv.ensure(seq.slot, first)
             self.running.append(seq)
             self.stats.admitted += 1
-            self.trace.append(f"admit r{req.rid}@s{seq.slot}")
+            hit_note = ""
+            if self.prefix_cache and req.block_hashes is not None:
+                self.stats.prefix_lookups += 1
+                if cached_len:
+                    self.stats.prefix_hits += 1
+                    self.stats.prefix_hit_tokens += cached_len
+                    chunks = -(-len(req.prompt) // self.prefill_chunk)
+                    left = -(-(len(req.prompt) - cached_len)
+                             // self.prefill_chunk)
+                    self.stats.prefill_chunks_skipped += chunks - left
+                    hit_note = (f" hit={len(cached_pages)}pg/"
+                                f"{cached_len}tok")
+            self.trace.append(f"admit r{req.rid}@s{seq.slot}{hit_note}")
 
-    def _evict_youngest(self, protect: Sequence) -> bool:
-        """Recompute-preempt the youngest running seq other than `protect`."""
-        victims = [s for s in self.running if s is not protect]
-        if not victims:
+    def _preempt(self, protect: Sequence) -> bool:
+        """Recompute-preempt the policy's victim (never ``protect``)."""
+        victim = self.policy.select_victim(self.running, protect)
+        if victim is None:
             return False
-        victim = victims[-1]  # youngest admission
         self.running.remove(victim)
+        # release, not free: pages shared with siblings just drop one ref;
+        # registered full pages park in the prefix cache, so re-admission
+        # of this same victim can hit its own surviving prompt pages
         self.kv.free_slot(victim.slot)
         # re-queue at the FRONT: preempted work has priority over new work
         # recompute preemption: generated-so-far tokens become prompt; the
         # re-admitted sequence re-prefills them and continues the stream
+        new_prompt = victim.req.prompt + victim.out_tokens
         victim.req = dataclasses.replace(
-            victim.req, prompt=victim.req.prompt + victim.out_tokens,
-            arrival=self.clock,
-            max_new_tokens=victim.req.max_new_tokens - len(victim.out_tokens))
+            victim.req, prompt=new_prompt, arrival=self.clock,
+            max_new_tokens=victim.req.max_new_tokens - len(victim.out_tokens),
+            requeued=True,
+            recompute_high=max(victim.req.recompute_high,
+                               victim.prefill_pos + len(victim.out_tokens)),
+            block_hashes=(self.kv.hashes_for(new_prompt)
+                          if self.prefix_cache else victim.req.block_hashes))
         self._requeued_outputs.setdefault(victim.rid, []).extend(
             victim.out_tokens)
         self.evict_counts[victim.rid] = self.evict_counts.get(
@@ -171,16 +348,30 @@ class Scheduler:
         self.trace.append(f"evict r{victim.rid}")
         return True
 
-    def _ensure_or_evict(self, seq: Sequence, num_tokens: int) -> bool:
+    def _ensure_or_evict(self, seq: Sequence, num_tokens: int,
+                         write_start: int) -> list[tuple[int, int]]:
+        """Grow ``seq``'s table to ``num_tokens`` and make every page in
+        the write range ``[write_start, num_tokens)`` exclusively owned,
+        evicting victims on page pressure.  Returns the accumulated
+        copy-on-write (src, dst) pairs for the engine to copy on device."""
+        pairs: list[tuple[int, int]] = []
         while True:
             try:
                 self.kv.ensure(seq.slot, num_tokens)
-                return True
+                self.kv.cow_range(seq.slot, write_start, num_tokens, pairs)
+                return pairs
             except OutOfPages:
-                if not self._evict_youngest(protect=seq):
+                if not self._preempt(protect=seq):
                     raise RuntimeError(
                         "paged-KV deadlock: a lone sequence cannot get a "
                         "page — num_pages is below max_seq_len/page_size")
+
+    def _record_cow(self, pairs) -> tuple[tuple[int, int], ...]:
+        if pairs:
+            self.stats.cow_copies += len(pairs)
+            self.trace.append(
+                "cow " + ",".join(f"{s}->{d}" for s, d in pairs))
+        return tuple(pairs)
 
     def next_decision(self) -> Decision | None:
         """One iteration of the policy; advances the clock."""
@@ -198,15 +389,28 @@ class Scheduler:
             seq = prefilling[0]  # oldest admitted
             start = seq.prefill_pos
             length = min(self.prefill_chunk, len(seq.prompt) - start)
-            self._ensure_or_evict(seq, start + length)
-            self.stats.prefill_tokens += length
+            cow = self._ensure_or_evict(seq, start + length,
+                                        write_start=start)
+            # tokens computed in an earlier residency re-prefill as
+            # *recompute* work; only first-pass tokens are prompt work
+            rec = min(max(seq.req.recompute_high - start, 0), length)
+            self.stats.recompute_tokens += rec
+            self.stats.prefill_tokens += length - rec
+            self.stats.prefill_chunks += 1
             self._last_was_prefill = True
             self.trace.append(f"prefill r{seq.rid}[{start}:{start + length}]")
-            return PrefillChunk(seq, start, length)
+            return PrefillChunk(seq, start, length, self._record_cow(cow))
         if decoding:
+            per_seq: list[tuple[Sequence, list[tuple[int, int]]]] = []
             for seq in decoding:
                 if seq in self.running:  # an earlier ensure may have evicted it
-                    self._ensure_or_evict(seq, seq.kv_len)
+                    per_seq.append((seq, self._ensure_or_evict(
+                        seq, seq.kv_len, write_start=seq.kv_len - 1)))
+            # keep only pairs of sequences that SURVIVED the eviction pass:
+            # a preempted sequence's freed COW dst can be re-allocated to a
+            # later sequence in this same decision, and executing the stale
+            # copy would alias two writes onto one physical page
+            cow = [p for s, ps in per_seq if s in self.running for p in ps]
             decoding = [s for s in self.running
                         if not s.prefilling and not s.done]
             if not decoding:  # everyone got evicted while making room
@@ -218,13 +422,23 @@ class Scheduler:
             self._last_was_prefill = False
             self.trace.append(
                 "decode " + ",".join(f"r{s.rid}" for s in decoding))
-            return DecodeBatch(tuple(decoding))
+            return DecodeBatch(tuple(decoding), self._record_cow(cow))
         self._last_was_prefill = False
         return None  # only future arrivals remain — engine ticks the clock
 
     # --------------------------------------------------------- feedback
     def completed_prefill(self, chunk: PrefillChunk) -> None:
-        chunk.seq.prefill_pos = chunk.start + chunk.length
+        seq = chunk.seq
+        seq.prefill_pos = chunk.start + chunk.length
+        if self.prefix_cache and seq.req.block_hashes:
+            # register every prompt page this chunk filled completely: its
+            # KV is on device now, so future admissions may share it
+            n_full = min(seq.prefill_pos // self.cfg.page_size,
+                         len(seq.req.block_hashes))
+            for bi in range(seq.registered_blocks, n_full):
+                self.kv.register_block(seq.slot, bi,
+                                       seq.req.block_hashes[bi])
+            seq.registered_blocks = max(seq.registered_blocks, n_full)
 
     def append_token(self, seq: Sequence, token: int) -> None:
         seq.out_tokens.append(token)

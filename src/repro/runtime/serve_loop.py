@@ -35,7 +35,7 @@ from repro.core import linear as sl
 from repro.models import model as M
 from repro.runtime.kv_cache import KVCacheManager, PagedKVConfig
 from repro.runtime.scheduler import (DecodeBatch, PrefillChunk, Request,
-                                     Scheduler)
+                                     Scheduler, make_policy)
 from repro.sharding import tp as tpmod
 
 
@@ -127,6 +127,12 @@ class EngineConfig:
     the first ``tp`` devices.  Page counts are per *shard-replicated*
     table: every shard holds the same ``num_pages`` page structure, each
     page carrying only its KVH/tp heads' bytes.
+
+    ``prefix_cache`` turns on radix-prefix reuse over ref-counted
+    copy-on-write pages (DESIGN.md §11): admissions that share a full-page
+    prompt prefix with earlier traffic fork the cached pages and prefill
+    only the uncached suffix.  ``policy`` names the admission/eviction
+    policy (``fcfs`` | ``priority`` — ``scheduler.POLICIES``).
     """
     max_batch: int = 4        # decode slots
     page_size: int = 8        # tokens per KV page
@@ -134,6 +140,8 @@ class EngineConfig:
     max_seq_len: int = 128    # prompt + generated cap per sequence
     prefill_chunk: int = 16   # prompt tokens per engine step (token budget)
     tp: int = 1               # tensor-parallel degree (devices in the mesh)
+    prefix_cache: bool = False  # radix prefix cache + COW pages (§11)
+    policy: str = "fcfs"      # scheduler policy name (fcfs | priority)
 
     def kv_config(self) -> PagedKVConfig:
         return PagedKVConfig(page_size=self.page_size,
@@ -157,20 +165,41 @@ class Completion:
 class EngineStats:
     """Engine-level counters accumulated over a ``run``: step/token
     accounting, eviction count, mean decode-batch occupancy, the
-    tensor-parallel degree and the precision recipe the run executed at."""
+    tensor-parallel degree, the precision recipe the run executed at,
+    and the prefix-cache economics (DESIGN.md §11).
+
+    ``prefill_tokens`` counts *first-pass* prompt tokens only;
+    ``recompute_tokens`` separates the re-prefills that recompute-
+    preemption forces (they were previously double-counted as new prompt
+    tokens, which inflated prompt-throughput and corrupted hit-rate
+    denominators)."""
     steps: int = 0
     wall_s: float = 0.0
     decode_tokens: int = 0
     decode_steps: int = 0
     prefill_tokens: int = 0
+    recompute_tokens: int = 0  # eviction re-prefills (not new prompt work)
     evictions: int = 0
     mean_occupancy: float = 0.0
     tp: int = 1               # tensor-parallel degree of the run
     precision: str = "none"   # precision-recipe name (DESIGN.md §10)
+    # prefix cache (DESIGN.md §11)
+    prefix_cache: bool = False
+    prefix_hit_tokens: int = 0       # prompt tokens served from cached pages
+    prefill_chunks_skipped: int = 0  # prefill steps avoided by hits
+    cow_copies: int = 0              # device page copies (copy-on-write)
+    cached_page_evictions: int = 0   # LRU reclaims of refcount-0 pages
 
     @property
     def decode_tok_s(self) -> float:
         return self.decode_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Cached fraction of all prompt tokens that needed KV."""
+        total = (self.prefix_hit_tokens + self.prefill_tokens
+                 + self.recompute_tokens)
+        return self.prefix_hit_tokens / max(total, 1)
 
     @property
     def decode_tok_s_per_device(self) -> float:
@@ -207,6 +236,16 @@ class ServeEngine:
     precision recipes (int8 / fp8 / w4): row-parallel projections
     quantize with the pmax-global per-token absmax (``tp.reduce_max``),
     so every shard emits the unsharded quantized values (DESIGN.md §10).
+
+    With ``ecfg.prefix_cache`` (DESIGN.md §11) the engine hashes each
+    prompt's full token pages at enqueue, forks cached pages in at
+    admission (ref-counted sharing), prefills only the uncached suffix,
+    and copy-on-writes any shared page before a step writes into it via
+    a third fixed-shape jitted copy step.  Because paged K/V writes are
+    token-local and both cache modes run the same fixed step shapes,
+    cache-on greedy decode is argmax-identical to cache-off.  All prefix
+    decisions are host-side, so a tp=N engine reuses prefixes identically
+    to tp=1.
     """
 
     def __init__(self, params, cfg: ModelConfig,
@@ -214,14 +253,31 @@ class ServeEngine:
         self.ecfg = ecfg or EngineConfig()
         if cfg.is_encoder_decoder:
             raise NotImplementedError("paged engine is decoder-only")
+        if self.ecfg.prefix_cache and "ssm" in cfg.unit_pattern:
+            raise ValueError(
+                "prefix_cache requires an attention-only stack: SSM layers "
+                "carry per-slot recurrent state that cached pages cannot "
+                "restore at the resume point (DESIGN.md §11)")
         self.params, self.cfg = params, cfg
-        self.kv = KVCacheManager(self.ecfg.kv_config())
-        self.sched = Scheduler(self.kv, self.ecfg.prefill_chunk)
+        # hash namespace: cache entries are keyed to the exact serving
+        # recipe — model, precision, KV dtype, mesh degree, page size —
+        # so recipes never cross-pollinate (DESIGN.md §11)
+        namespace = (f"{cfg.name}|{cfg.sparsity.recipe.name}"
+                     f"|kv={cfg.kv_cache_dtype}|tp={self.ecfg.tp}"
+                     f"|ps={self.ecfg.page_size}")
+        self.kv = KVCacheManager(self.ecfg.kv_config(), namespace=namespace)
+        self.sched = Scheduler(self.kv, self.ecfg.prefill_chunk,
+                               policy=make_policy(self.ecfg.policy),
+                               prefix_cache=self.ecfg.prefix_cache)
         self.cache = M.make_paged_cache(cfg, self.ecfg.num_pages,
                                         self.ecfg.page_size,
                                         self.ecfg.max_batch)
         ps = self.ecfg.page_size
         ntp = self.ecfg.tp
+        # one fixed-shape COW copy call: enough lanes for a decode batch
+        # (<= 1 write page per slot) or a prefill chunk's page span
+        self._cow_lanes = max(self.ecfg.max_batch,
+                              -(-self.ecfg.prefill_chunk // ps) + 1)
 
         def prefill_step(p, tok, c, pt, start, rlen, slot, reset):
             with tpmod.activate(ntp):
@@ -231,6 +287,10 @@ class ServeEngine:
         def decode_step(p, tok, c, pt, kvl, act):
             with tpmod.activate(ntp):
                 return M.paged_decode_step(p, cfg, tok, c, pt, kvl, act, ps)
+
+        def copy_step(c, src, dst):
+            with tpmod.activate(ntp):
+                return M.paged_copy_pages(cfg, c, src, dst)
 
         if ntp > 1:
             tpmod.validate(cfg, ntp)
@@ -252,9 +312,16 @@ class ServeEngine:
                 decode_step, mesh=self.mesh,
                 in_specs=(pspecs, rep, cspecs, rep, rep, rep),
                 out_specs=(logits_spec, cspecs), check_rep=False))
+            # COW page copies are per-shard elementwise on the head-sharded
+            # pools; the host-decided (src, dst) pairs replicate, so every
+            # shard copies the same page structure (DESIGN.md §11)
+            self._cow_fn = jax.jit(shard_map(
+                copy_step, mesh=self.mesh, in_specs=(cspecs, rep, rep),
+                out_specs=cspecs, check_rep=False))
         else:
             self._prefill_fn = jax.jit(prefill_step)
             self._decode_fn = jax.jit(decode_step)
+            self._cow_fn = jax.jit(copy_step)
         self.completions: dict[int, Completion] = {}
         self._prompts: dict[int, list[int]] = {}
         self.stats = EngineStats(tp=ntp, precision=cfg.sparsity.recipe.name)
@@ -262,16 +329,21 @@ class ServeEngine:
     # ------------------------------------------------------------ intake
     def submit(self, prompt: list[int], max_new_tokens: int,
                rid: int | None = None, arrival: int = 0,
-               eos_id: int | None = None) -> int:
+               eos_id: int | None = None, priority: int = 0) -> int:
         rid = rid if rid is not None else len(self._prompts)
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         if not prompt:
             raise ValueError("prompt must be non-empty")
         self._prompts[rid] = list(prompt)
+        # block hashing at enqueue (DESIGN.md §11): the chained full-page
+        # hashes ride the request so admission can probe the prefix index
+        hashes = (self.kv.hashes_for(prompt)
+                  if self.ecfg.prefix_cache else None)
         self.sched.submit(Request(rid=rid, prompt=list(prompt),
                                   max_new_tokens=max_new_tokens,
-                                  arrival=arrival, eos_id=eos_id))
+                                  arrival=arrival, eos_id=eos_id,
+                                  priority=priority, block_hashes=hashes))
         return rid
 
     # -------------------------------------------------------------- step
@@ -288,12 +360,29 @@ class ServeEngine:
             out.append(comp)
         return out
 
+    def _run_cow(self, pairs) -> None:
+        """Execute host-decided copy-on-write page copies on device before
+        the step that writes into the (now exclusive) dst pages.  Fixed
+        [_cow_lanes] shape — unused lanes carry the out-of-bounds dst id
+        ``num_pages`` (dropped writes), so the copy fn compiles once."""
+        if not pairs:
+            return
+        n = self._cow_lanes
+        for i in range(0, len(pairs), n):
+            src = np.zeros((n,), np.int32)
+            dst = np.full((n,), self.ecfg.num_pages, np.int32)
+            for j, (s, d) in enumerate(pairs[i:i + n]):
+                src[j], dst[j] = s, d
+            self.cache = self._cow_fn(self.cache, src, dst)
+        self.stats.cow_copies += len(pairs)
+
     def step(self) -> list[Completion]:
         """Execute one scheduler decision; returns newly finished requests."""
         self.stats.steps += 1
         decision = self.sched.next_decision()
         if decision is None:
             return []  # only future arrivals remain; clock has advanced
+        self._run_cow(decision.cow)
 
         if isinstance(decision, PrefillChunk):
             seq, start, length = (decision.seq, decision.start,
@@ -304,7 +393,7 @@ class ServeEngine:
             logits, self.cache = self._prefill_fn(
                 self.params, np.asarray([chunk], np.int32), self.cache,
                 pt, np.int32(start), np.int32(length), np.int32(seq.slot),
-                np.bool_(start == 0))
+                np.bool_(start == seq.resume_pos))
             self.sched.completed_prefill(decision)
             if not seq.prefilling:  # prompt done -> first generated token
                 self.sched.append_token(seq, self._sample(
@@ -337,5 +426,10 @@ class ServeEngine:
         s.wall_s = time.time() - t0
         s.decode_tokens, s.decode_steps = ss.decode_tokens, ss.decode_steps
         s.prefill_tokens, s.evictions = ss.prefill_tokens, ss.evicted
+        s.recompute_tokens = ss.recompute_tokens
         s.mean_occupancy = ss.mean_occupancy
+        s.prefix_cache = self.ecfg.prefix_cache
+        s.prefix_hit_tokens = ss.prefix_hit_tokens
+        s.prefill_chunks_skipped = ss.prefill_chunks_skipped
+        s.cached_page_evictions = self.kv.pool.cached_evictions
         return dict(self.completions)

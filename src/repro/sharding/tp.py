@@ -228,6 +228,12 @@ def serve_cache_specs(cache):
     * SSM ``conv`` [U, B, K-1, dI] shards d_inner, ``ssd`` [U, B, H, P, N]
       shards heads;
     * anything else (none today) stays replicated.
+
+    Because the page *structure* replicates, the host-side page table,
+    refcounts, and prefix-cache hash index (DESIGN.md §11) are shared
+    across shards unchanged: a copy-on-write page copy is per-shard
+    elementwise on these same specs (replicated src/dst id vectors), so
+    a tp=N engine reuses prefixes and copies pages identically to tp=1.
     """
     def spec(path, leaf):
         last = _names(path)[-1]

@@ -1,0 +1,583 @@
+"""Radix prefix cache + copy-on-write paged KV (DESIGN.md §11).
+
+Three layers of coverage:
+
+* host-only unit/property tests over the ref-counted :class:`PagePool`
+  and :class:`KVCacheManager` — random alloc/fork/release/register/LRU
+  sequences must conserve refcounts and never trip ``check()``;
+* scheduler-level tests with a stub executor — prefix-hit admission
+  truncates the prefill plan, copy-on-write pairs appear in decisions,
+  eviction releases shared pages without disturbing siblings, and the
+  recompute-token accounting bugfix holds;
+* model-backed engine parity — cache-on greedy decode is argmax-identical
+  to cache-off on overlapping-prefix request sets (compressed N ∈
+  {2, 3, 4}), under forced eviction/cache pressure, and at tp=2 in a
+  subprocess (identical prefix reuse to tp=1).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from proptest import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import registry
+from repro.core.linear import SparsityConfig
+from repro.models import model as M
+from repro.runtime import serve_loop
+from repro.runtime.kv_cache import (KVCacheManager, OutOfPages,
+                                    PagedKVConfig, PagePool, block_hashes)
+from repro.runtime.scheduler import (DecodeBatch, FCFSPolicy, PrefillChunk,
+                                     PriorityPolicy, Request, Scheduler,
+                                     Sequence, make_policy)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# -------------------------------------------------------------- hashing
+def test_block_hashes_chain_prefix_and_namespace():
+    toks = list(range(20))
+    h = block_hashes(toks, 4, "ns")
+    assert len(h) == 5  # full pages only
+    assert block_hashes(toks[:13], 4, "ns") == h[:3]  # prefix property
+    # chaining: same block content, different predecessor -> different hash
+    other = block_hashes([99] + toks[1:], 4, "ns")
+    assert other[1] != h[1]
+    # namespace separation: recipes never cross-pollinate
+    assert block_hashes(toks, 4, "ns2") != h
+    assert block_hashes(toks[:3], 4, "ns") == ()  # no full page
+
+
+# ------------------------------------------------------------ page pool
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 2**31 - 1))
+def test_page_pool_refcount_conservation(num_pages, seed):
+    """Random alloc/fork/release/register sequences: refcounts match a
+    shadow model, check() never trips, and every page is reachable."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages)
+    held: list[list[int]] = []   # each entry holds one ref per page listed
+    model_ref: dict[int, int] = {}
+    next_hash = [0]
+    for _ in range(80):
+        op = rng.integers(0, 4)
+        if op == 0:  # alloc
+            n = int(rng.integers(0, num_pages // 2 + 1))
+            try:
+                pages = pool.alloc(n)
+                held.append(pages)
+                for p in pages:
+                    assert model_ref.get(p, 0) == 0
+                    model_ref[p] = 1
+            except OutOfPages:
+                assert n > pool.num_reclaimable
+        elif op == 1 and held:  # fork a random held group
+            grp = held[int(rng.integers(len(held)))]
+            pool.fork(grp)
+            held.append(list(grp))
+            for p in grp:
+                model_ref[p] += 1
+        elif op == 2 and held:  # release a random group
+            grp = held.pop(int(rng.integers(len(held))))
+            pool.release(grp)
+            for p in grp:
+                model_ref[p] -= 1
+        elif op == 3 and held:  # register a random held page
+            grp = held[int(rng.integers(len(held)))]
+            if grp:
+                p = grp[int(rng.integers(len(grp)))]
+                h = bytes([next_hash[0] % 256, next_hash[0] // 256])
+                next_hash[0] += 1
+                if pool.register(p, h):
+                    assert pool.lookup(h) == p
+        pool.check()
+        for p in range(num_pages):
+            assert pool.refcount(p) == model_ref.get(p, 0)
+    for grp in held:
+        pool.release(grp)
+    pool.check()
+    assert pool.num_reclaimable == num_pages  # cached pages still count
+    with pytest.raises(ValueError):
+        pool.release(pool.alloc(1) * 2)  # over-release detected
+
+
+def test_page_pool_lru_reclaim_order_and_revival():
+    pool = PagePool(3)
+    pages = pool.alloc(3)
+    for i, p in enumerate(pages):
+        assert pool.register(p, bytes([i]))
+    pool.release(pages)          # all cached, ref 0, LRU order 0,1,2
+    assert pool.num_free == 0 and pool.num_cached == 3
+    assert pool.lookup(bytes([0])) == pages[0]   # touch page 0 -> hot
+    got = pool.alloc(1)          # reclaims LRU: page 1, not the touched 0
+    assert got == [pages[1]]
+    assert pool.lookup(bytes([1])) is None       # its hash was dropped
+    assert pool.cached_evictions == 1
+    pool.fork([pages[0]])        # revive a cached page out of the LRU
+    assert pool.refcount(pages[0]) == 1
+    pool.check()
+
+
+# ------------------------------------------------------ manager + COW
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 6), st.integers(0, 2**31 - 1))
+def test_manager_random_fork_release_cow(max_batch, pages_scale, seed):
+    """Random slot-level ensure/adopt/cow/free against the manager: the
+    refcount-conservation check holds after every operation."""
+    rng = np.random.default_rng(seed)
+    cfg = PagedKVConfig(page_size=4, num_pages=4 * pages_scale,
+                        max_batch=max_batch,
+                        max_seq_len=4 * pages_scale * 4)
+    kv = KVCacheManager(cfg, namespace="prop")
+    lens: dict[int, int] = {}
+    for _ in range(60):
+        slot = int(rng.integers(0, max_batch))
+        op = rng.integers(0, 4)
+        if op == 0:
+            want = int(rng.integers(1, cfg.max_seq_len + 1))
+            try:
+                kv.ensure(slot, want)
+                lens[slot] = max(lens.get(slot, 0), want)
+            except OutOfPages:
+                pass
+        elif op == 1 and lens.get(slot):  # fork this slot's pages elsewhere
+            free = [s for s in range(max_batch) if not kv.slot_pages(s)]
+            if free:
+                kv.adopt_cached(free[0], kv.slot_pages(slot))
+                lens[free[0]] = len(kv.slot_pages(slot)) * cfg.page_size
+        elif op == 2 and lens.get(slot):
+            pairs: list = []
+            try:
+                kv.cow_range(slot, 0, lens[slot], pairs)
+                for s, d in pairs:
+                    assert kv.pool.refcount(d) == 1
+            except OutOfPages:
+                pass
+        elif op == 3:
+            kv.free_slot(slot)
+            lens.pop(slot, None)
+        kv.check()
+    for s in list(lens):
+        kv.free_slot(s)
+    kv.check()
+    assert kv.pool.num_reclaimable == cfg.num_pages
+
+
+def test_cow_leaves_siblings_untouched():
+    cfg = PagedKVConfig(page_size=4, num_pages=8, max_batch=3,
+                        max_seq_len=32)
+    kv = KVCacheManager(cfg)
+    kv.ensure(0, 8)
+    orig = kv.slot_pages(0)
+    kv.adopt_cached(1, orig)
+    kv.adopt_cached(2, orig)
+    pairs: list = []
+    kv.cow_range(1, 0, 8, pairs)
+    assert len(pairs) == 2 and [s for s, _ in pairs] == orig
+    assert kv.slot_pages(0) == orig          # sibling tables undisturbed
+    assert kv.slot_pages(2) == orig
+    assert all(p not in orig for p in kv.slot_pages(1))
+    assert all(kv.pool.refcount(p) == 2 for p in orig)
+    kv.check()
+
+
+# ----------------------------------------------------------- scheduler
+def _drive_stub(sched: Scheduler, requests):
+    """Stub executor: deterministic rid*1000+i streams (no device)."""
+    for r in requests:
+        sched.submit(r)
+    outputs: dict[int, list[int]] = {}
+    guard = 0
+    while sched.has_work:
+        guard += 1
+        assert guard < 20000, "scheduler livelock"
+        d = sched.next_decision()
+        sched.kv.check()
+        if d is None:
+            continue
+        if isinstance(d, PrefillChunk):
+            sched.completed_prefill(d)
+            if not d.seq.prefilling:
+                sched.append_token(
+                    d.seq, d.seq.rid * 1000 + len(sched.full_output(d.seq)))
+        else:
+            for seq in d.seqs:
+                sched.append_token(
+                    seq, seq.rid * 1000 + len(sched.full_output(seq)))
+        for seq in sched.retire_finished():
+            outputs[seq.rid] = sched.full_output(seq)
+    return outputs
+
+
+def test_recompute_tokens_counted_separately():
+    """Bugfix: eviction re-prefills used to inflate prefill_tokens — with
+    the split accounting, prefill_tokens is exactly the first-pass prompt
+    tokens and the recomputed remainder lands in recompute_tokens."""
+    cfg = PagedKVConfig(page_size=4, num_pages=6, max_batch=3,
+                        max_seq_len=24)
+    sched = Scheduler(KVCacheManager(cfg), prefill_chunk=8)
+    reqs = [Request(rid=i, prompt=[0] * 8, max_new_tokens=8)
+            for i in range(3)]
+    outputs = _drive_stub(sched, reqs)
+    assert sched.stats.evicted > 0, "test needs page pressure"
+    for r in reqs:
+        assert outputs[r.rid] == [r.rid * 1000 + i for i in range(8)]
+    assert sched.stats.prefill_tokens == 3 * 8  # first-pass prompts only
+    assert sched.stats.recompute_tokens > 0
+
+
+def test_prefix_hits_truncate_prefill_plan_and_trace():
+    """Stub-level: a second identical prompt admits with a hit, prefills
+    only the uncached suffix, and the hit appears in the decision trace."""
+    cfg = PagedKVConfig(page_size=4, num_pages=16, max_batch=2,
+                        max_seq_len=32)
+    sched = Scheduler(KVCacheManager(cfg, namespace="t"), prefill_chunk=4,
+                      prefix_cache=True)
+    prompt = list(range(10))
+    outs = _drive_stub(sched, [
+        Request(rid=0, prompt=list(prompt), max_new_tokens=2, arrival=0),
+        Request(rid=1, prompt=list(prompt), max_new_tokens=2, arrival=6),
+    ])
+    assert set(outs) == {0, 1}
+    s = sched.stats
+    assert s.prefix_hits == 1 and s.prefix_hit_tokens == 8
+    assert s.prefill_chunks_skipped == 2  # 3 chunks -> 1 suffix chunk
+    assert s.prefill_tokens == 10 + 2     # r1 prefilled only the suffix
+    assert any("hit=2pg/8tok" in t for t in sched.trace)
+    # r1's prefill chunks start at the cached suffix, never at 0
+    r1_chunks = [t for t in sched.trace if t.startswith("prefill r1")]
+    assert r1_chunks == ["prefill r1[8:10]"]
+    assert 0 < s.prefix_hit_rate < 1
+
+
+def test_eviction_releases_shared_pages_and_recaches():
+    """Recompute-preemption of one sharer must not disturb the sibling
+    (refcount drop only), and the victim's registered pages survive in
+    the cache so its own re-admission hits them."""
+    cfg = PagedKVConfig(page_size=4, num_pages=8, max_batch=2,
+                        max_seq_len=32)
+    kv = KVCacheManager(cfg, namespace="t")
+    sched = Scheduler(kv, prefill_chunk=8, prefix_cache=True)
+    prompt = list(range(8))
+    outs = _drive_stub(sched, [
+        Request(rid=0, prompt=list(prompt), max_new_tokens=12, arrival=0),
+        Request(rid=1, prompt=list(prompt), max_new_tokens=12, arrival=4),
+    ])
+    assert sched.stats.evicted > 0, "test needs page pressure"
+    assert sched.stats.prefix_hits >= 1
+    for rid in (0, 1):
+        assert outs[rid] == [rid * 1000 + i for i in range(12)]
+    kv.check()
+    assert kv.pool.num_reclaimable == cfg.num_pages
+
+
+def test_decode_write_to_shared_page_triggers_cow():
+    """White-box: a decode step whose write position lands in a shared
+    page must carry a copy-on-write pair (the data-plane invariant: no
+    step ever writes a page with refcount > 1)."""
+    cfg = PagedKVConfig(page_size=4, num_pages=8, max_batch=2,
+                        max_seq_len=16)
+    kv = KVCacheManager(cfg, namespace="t")
+    sched = Scheduler(kv, prefill_chunk=4, prefix_cache=True)
+    sched.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4))
+    d = sched.next_decision()
+    assert isinstance(d, PrefillChunk)
+    sched.completed_prefill(d)
+    sched.append_token(d.seq, 7)
+    # fake sibling decoding in the same (now shared) page at kv_len=4
+    kv.adopt_cached(1, kv.slot_pages(0)[:1])
+    sib = Sequence(Request(rid=1, prompt=[1, 2, 3], max_new_tokens=4),
+                   slot=1, prefill_pos=3, resume_pos=3)
+    sib.out_tokens.append(9)
+    sched.running.append(sib)
+    kv.check()
+    d = sched.next_decision()
+    assert isinstance(d, DecodeBatch) and len(d.cow) == 1
+    src, dst = d.cow[0]
+    assert kv.pool.refcount(src) == 1 and kv.pool.refcount(dst) == 1
+    assert any(t.startswith("cow ") for t in sched.trace)
+    kv.check()
+
+
+def test_decode_cow_pairs_of_preempted_sequence_are_dropped():
+    """Regression: a COW pair collected for a sequence that is preempted
+    later in the SAME decode decision must not reach the engine — its
+    freed dst page can be re-allocated to a surviving sequence within the
+    decision, and executing the stale copy would alias two writes onto
+    one physical page."""
+    cfg = PagedKVConfig(page_size=4, num_pages=2, max_batch=2,
+                        max_seq_len=8)
+    kv = KVCacheManager(cfg, namespace="t")
+    sched = Scheduler(kv, prefill_chunk=4, prefix_cache=True)
+    # seq A (oldest): decoding at kv_len=4, writes pos 3 of a SHARED page
+    kv.ensure(0, 4)
+    shared_page = kv.slot_pages(0)[0]
+    a = Sequence(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4),
+                 slot=0, prefill_pos=3, resume_pos=3)
+    a.out_tokens.append(9)
+    # seq B (youngest... protected): shares the page, needs a SECOND page
+    kv.adopt_cached(1, [shared_page])
+    b = Sequence(Request(rid=1, prompt=[1, 2, 3], max_new_tokens=4),
+                 slot=1, prefill_pos=3, resume_pos=3)
+    b.out_tokens.extend([9, 9])          # kv_len=5 -> pages_for=2
+    sched.running.extend([a, b])
+    kv.check()
+    # decode: A's COW takes the last free page; B's ensure then preempts A
+    d = sched.next_decision()
+    assert isinstance(d, DecodeBatch)
+    assert [s.rid for s in d.seqs] == [1]
+    assert sched.stats.evicted == 1      # A was recompute-preempted
+    assert d.cow == (), "stale COW pair of the preempted sequence leaked"
+    kv.check()
+
+
+def test_policy_registry_and_priority_ordering():
+    assert isinstance(make_policy("fcfs"), FCFSPolicy)
+    assert isinstance(make_policy("priority"), PriorityPolicy)
+    with pytest.raises(ValueError, match="unknown scheduler policy"):
+        make_policy("lifo")
+
+    cfg = PagedKVConfig(page_size=4, num_pages=16, max_batch=1,
+                        max_seq_len=32)
+
+    def run(policy):
+        sched = Scheduler(KVCacheManager(cfg), prefill_chunk=8,
+                          policy=make_policy(policy))
+        _drive_stub(sched, [
+            Request(rid=0, prompt=[0] * 4, max_new_tokens=2, priority=0),
+            Request(rid=1, prompt=[0] * 4, max_new_tokens=2, priority=5),
+            Request(rid=2, prompt=[0] * 4, max_new_tokens=2, priority=1),
+        ])
+        admits = [t for t in sched.trace if t.startswith("admit")]
+        return [int(t.split("r")[1][0]) for t in admits]
+
+    assert run("fcfs") == [0, 1, 2]          # strict arrival order
+    assert run("priority") == [1, 2, 0]      # highest priority first
+    assert run("priority") == [1, 2, 0]      # deterministic
+
+
+def test_priority_policy_evicts_lowest_priority():
+    cfg = PagedKVConfig(page_size=4, num_pages=6, max_batch=3,
+                        max_seq_len=24)
+    sched = Scheduler(KVCacheManager(cfg), prefill_chunk=8,
+                      policy=make_policy("priority"))
+    outs = _drive_stub(sched, [
+        Request(rid=0, prompt=[0] * 8, max_new_tokens=8, priority=2),
+        Request(rid=1, prompt=[0] * 8, max_new_tokens=8, priority=0),
+        Request(rid=2, prompt=[0] * 8, max_new_tokens=8, priority=2),
+    ])
+    assert sched.stats.evicted > 0, "test needs page pressure"
+    evicts = [t for t in sched.trace if t.startswith("evict")]
+    assert evicts[0] == "evict r1", evicts  # background work goes first
+    for rid in (0, 1, 2):
+        assert outs[rid] == [rid * 1000 + i for i in range(8)]
+
+
+# --------------------------------------------------------- model-backed
+def _shared_prefix_prompts(rng, vocab, shared_len, suffix_lens):
+    shared = rng.integers(0, vocab, size=shared_len).tolist()
+    return [shared + rng.integers(0, vocab, size=k).tolist()
+            for k in suffix_lens]
+
+
+def _run_engine(params, cfg, prompts, max_new, ecfg, arrivals=None):
+    eng = serve_loop.ServeEngine(params, cfg, ecfg)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i,
+                   arrival=(arrivals[i] if arrivals else i))
+    out = eng.run()
+    eng.kv.check()
+    return {i: c.tokens for i, c in out.items()}, eng
+
+
+@pytest.mark.parametrize("n_family", [2, 3, 4])
+def test_prefix_cache_engine_parity(n_family):
+    """Acceptance: cache-on greedy decode is argmax-identical to cache-off
+    on an overlapping-prefix request set, for the (2N-2):2N compressed
+    pipeline, N in {2, 3, 4} — while actually skipping prefill chunks."""
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, d_model=48, num_heads=4, num_kv_heads=2,
+                               head_dim=12, d_ff=96, num_layers=2)
+    z, l = 2 * n_family - 2, 2 * n_family
+    cfg = dataclasses.replace(base, sparsity=SparsityConfig(
+        pattern=(z, l), mode="compressed", use_pallas=False))
+    params = serve_loop.pack_params(M.init(base, jax.random.PRNGKey(0)), cfg)
+    rng = np.random.default_rng(n_family)
+    prompts = _shared_prefix_prompts(rng, cfg.vocab_size, 8, (3, 5, 8))
+    arrivals = [0, 4, 8]
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=8)
+    ref, _ = _run_engine(params, cfg, prompts, 4, ecfg, arrivals)
+    got, eng = _run_engine(
+        params, cfg, prompts, 4,
+        dataclasses.replace(ecfg, prefix_cache=True), arrivals)
+    assert got == ref, f"cache-on diverged from cache-off at {z}:{l}"
+    s = eng.stats
+    assert s.prefix_hit_tokens > 0 and s.prefill_chunks_skipped > 0
+    assert s.prefix_hit_rate > 0
+    assert any("hit=" in t for t in eng.sched.trace)
+
+
+@pytest.mark.parametrize("recipe", ["int8", "fp8", "w4"])
+def test_prefix_cache_quantized_recipe_parity(recipe):
+    """Quantized precision recipes (DESIGN.md §10) through the prefix
+    cache: per-token activation quantization is row-local, so cache-on
+    stays argmax-identical to cache-off."""
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, d_model=48, num_heads=4, num_kv_heads=2,
+                               head_dim=12, d_ff=96, num_layers=2)
+    cfg = dataclasses.replace(base, sparsity=SparsityConfig(
+        pattern=(6, 8), mode="compressed", recipe=recipe, use_pallas=False))
+    params = serve_loop.pack_params(M.init(base, jax.random.PRNGKey(0)), cfg)
+    rng = np.random.default_rng(7)
+    prompts = _shared_prefix_prompts(rng, cfg.vocab_size, 8, (3, 6))
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=8)
+    ref, _ = _run_engine(params, cfg, prompts, 4, ecfg, [0, 4])
+    got, eng = _run_engine(params, cfg, prompts, 4,
+                           dataclasses.replace(ecfg, prefix_cache=True),
+                           [0, 4])
+    assert got == ref, f"cache-on diverged from cache-off for {recipe}"
+    assert eng.stats.prefix_hit_tokens > 0
+    assert eng.stats.precision == recipe
+
+
+def test_prefix_cache_partial_tail_cow_parity():
+    """Identical full-page prompts with overlapping residency: the second
+    admission's resume point lands mid-shared-page, forcing the
+    partial-tail copy-on-fork — streams still match cache-off."""
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    cfg = dataclasses.replace(cfg, num_layers=2)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    prompts = [list(shared), list(shared)]
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=8)
+    ref, _ = _run_engine(params, cfg, prompts, 6, ecfg, [0, 4])
+    got, eng = _run_engine(params, cfg, prompts, 6,
+                           dataclasses.replace(ecfg, prefix_cache=True),
+                           [0, 4])
+    assert got == ref
+    assert eng.stats.cow_copies > 0, "partial-tail fork must copy-on-write"
+    assert eng.stats.prefix_hit_tokens == 7  # 8 cached, capped at len-1
+
+
+def test_prefix_cache_forced_eviction_parity():
+    """Cache pressure: pool small enough to force recompute-preemption AND
+    LRU reclaim of cached pages; streams still match cache-off and the
+    pool balances (free + cached == total) after the run."""
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    cfg = dataclasses.replace(cfg, num_layers=2)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = _shared_prefix_prompts(rng, cfg.vocab_size, 8, (2, 4, 1))
+    ecfg = serve_loop.EngineConfig(max_batch=3, page_size=4, num_pages=7,
+                                   max_seq_len=24, prefill_chunk=8)
+    ref, _ = _run_engine(params, cfg, prompts, 8, ecfg)
+    got, eng = _run_engine(params, cfg, prompts, 8,
+                           dataclasses.replace(ecfg, prefix_cache=True))
+    assert got == ref
+    assert eng.stats.evictions > 0, "test needs page pressure"
+    assert eng.stats.prefix_hit_tokens > 0
+    assert eng.kv.pool.num_reclaimable == ecfg.num_pages
+
+
+def test_prefix_cache_lru_churn_parity():
+    """Sequential distinct prompts through a pool just big enough for one
+    resident sequence: every retirement parks cached pages, so later
+    admissions must LRU-reclaim them — parity with cache-off holds and
+    the reclaim counter moves."""
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    cfg = dataclasses.replace(cfg, num_layers=2)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8).tolist()
+               for _ in range(3)]
+    ecfg = serve_loop.EngineConfig(max_batch=1, page_size=4, num_pages=4,
+                                   max_seq_len=16, prefill_chunk=8)
+    ref, _ = _run_engine(params, cfg, prompts, 4, ecfg)
+    got, eng = _run_engine(params, cfg, prompts, 4,
+                           dataclasses.replace(ecfg, prefix_cache=True))
+    assert got == ref
+    assert eng.stats.cached_page_evictions > 0, "LRU reclaim never fired"
+    eng.kv.check()
+
+
+def test_prefix_cache_rejects_ssm_stacks():
+    cfg = registry.smoke_config("mamba2-780m")
+    with pytest.raises(ValueError, match="attention-only"):
+        serve_loop.ServeEngine({}, cfg, serve_loop.EngineConfig(
+            prefix_cache=True))
+
+
+def test_prefix_cache_tp2_subprocess():
+    """tp=2 engine reuses prefixes identically to tp=1 (same hit/skip/COW
+    stats, same streams) and all three jitted steps compile exactly once."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = textwrap.dedent("""
+    import dataclasses, numpy as np, jax
+    from repro.configs import registry
+    from repro.core.linear import SparsityConfig
+    from repro.models import model as M
+    from repro.runtime import serve_loop
+
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, num_layers=2)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, base.vocab_size, size=8).tolist()
+    prompts = [list(shared), list(shared),
+               shared + rng.integers(0, base.vocab_size, size=5).tolist()]
+
+    def run(tp, cfg, params):
+        eng = serve_loop.ServeEngine(params, cfg, serve_loop.EngineConfig(
+            max_batch=2, page_size=4, num_pages=24, max_seq_len=32,
+            prefill_chunk=8, tp=tp, prefix_cache=True))
+        for i, p in enumerate(prompts):
+            eng.submit(p, 4, rid=i, arrival=4 * i)
+        out = eng.run()
+        eng.kv.check()
+        s = eng.stats
+        return ({i: out[i].tokens for i in out},
+                (s.prefix_hit_tokens, s.prefill_chunks_skipped,
+                 s.cow_copies), eng)
+
+    # dense stack
+    params = M.init(base, jax.random.PRNGKey(0))
+    o1, h1, eng1 = run(1, base, params)
+    o2, h2, eng2 = run(2, base, params)
+    assert o1 == o2, (o1, o2)
+    assert h1 == h2 and h1[0] > 0 and h1[2] > 0, (h1, h2)
+    # identical reuse: hit/miss/COW decisions are host-side, tp-invariant
+    assert eng1.sched.trace == eng2.sched.trace
+    for fn in (eng2._prefill_fn, eng2._decode_fn, eng2._cow_fn):
+        assert fn._cache_size() == 1, "a jitted step retraced"
+    print("tp2 prefix reuse OK", h1)
+
+    # quantized recipe through the packed compressed pipeline
+    narrow = dataclasses.replace(base, d_model=48, num_heads=4,
+                                 num_kv_heads=2, head_dim=12, d_ff=96)
+    qcfg = dataclasses.replace(narrow, sparsity=SparsityConfig(
+        pattern=(6, 8), mode="compressed", recipe="fp8", use_pallas=False))
+    qparams = serve_loop.pack_params(
+        M.init(narrow, jax.random.PRNGKey(0)), qcfg)
+    oq1, hq1, _ = run(1, qcfg, qparams)
+    oq2, hq2, engq = run(2, qcfg, qparams)
+    assert oq1 == oq2, (oq1, oq2)
+    assert hq1 == hq2 and hq1[0] > 0, (hq1, hq2)
+    assert engq.stats.precision == "fp8"
+    print("tp2 fp8 prefix reuse OK", hq1)
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, \
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "tp2 prefix reuse OK" in out.stdout

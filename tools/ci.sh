@@ -7,10 +7,12 @@
 #    hypothesis via tests/proptest.py — no silently-skipped modules.
 # 2. A ~30s benchmark smoke: the fused-pipeline comparison runs both GEMM
 #    pipelines end-to-end and emits a machine-readable BENCH_*.json.
-# 3. A serve-engine smoke: a few requests with staggered arrivals join,
+# 3. Serve-engine smokes: a few requests with staggered arrivals join,
 #    decode, and retire through the continuous-batching paged-KV engine;
 #    every stream is checked against the one-shot dense-KV reference
-#    (DESIGN.md §5).
+#    (DESIGN.md §5).  A second run shares a system prompt across requests
+#    with the radix prefix cache on (DESIGN.md §11) — hits asserted,
+#    streams still parity-checked.
 # 4. A tensor-parallel smoke (DESIGN.md §9): the same engine demo under
 #    --tp 2 on 4 forced host devices — sharded weights, head-parallel
 #    pages — still parity-checked against the dense reference.
@@ -25,6 +27,12 @@ timeout 240 python -m benchmarks.run fused_pipeline
 
 timeout 300 python examples/serve_batched.py --engine --requests 3 \
     --batch 2 --prompt-len 16 --new-tokens 6
+
+# radix prefix cache smoke (DESIGN.md §11): a shared 16-token system prompt
+# across requests must produce prefix hits (asserted in the demo) and stay
+# parity-checked against the one-shot dense reference
+timeout 300 python examples/serve_batched.py --engine --prefix-cache \
+    --shared-prefix 16 --requests 3 --batch 2 --prompt-len 24 --new-tokens 6
 
 # precision-recipe smokes (DESIGN.md §10): fp8 activations and nibble-packed
 # w4 weights through the paged engine, parity-printed by launch.serve
