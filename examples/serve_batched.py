@@ -24,6 +24,7 @@ from repro.configs import registry
 from repro.core.linear import SparsityConfig
 from repro.core.patterns import Pattern, SlideDecomposition, TWO_FOUR
 from repro.models import model as M
+from repro.runtime import faults as fl
 from repro.runtime import serve_loop
 
 
@@ -33,7 +34,15 @@ def engine_demo(args, base, params):
     ``--shared-prefix N`` every request opens with the same N-token system
     prompt, and ``--prefix-cache`` reuses its KV pages across requests
     (radix prefix cache + copy-on-write, DESIGN.md §11).  Every stream is
-    verified against the one-shot dense-KV reference."""
+    verified against the one-shot dense-KV reference.
+
+    ``--inject-faults SEED`` arms the deterministic fault injector
+    (DESIGN.md §12: allocation failures + transient step errors on the
+    seed's schedule) and ``--cancel-frac F`` cancels a seeded fraction of
+    requests mid-flight.  The parity contract then becomes status-typed:
+    OK streams must equal the dense reference exactly, CANCELLED/TIMEOUT/
+    FAILED streams must be a *prefix* of it, REJECTED streams are empty —
+    injected chaos must never corrupt a surviving request."""
     z, l = args.pattern
     if args.shared_prefix >= args.prompt_len:
         raise SystemExit(f"--shared-prefix {args.shared_prefix} must be < "
@@ -56,23 +65,58 @@ def engine_demo(args, base, params):
     print(f"=== SlideSparse {z}:{l} continuous-batching engine "
           f"({args.requests} staggered requests, tp={args.tp}, "
           f"policy={args.policy}, prefix_cache={args.prefix_cache}) ===")
+    plan = None
+    if args.inject_faults is not None:
+        plan = fl.FaultPlan(seed=args.inject_faults, alloc_fail_rate=0.08,
+                            step_error_rate=0.04)
+        print(f"fault injection armed: seed={plan.seed} "
+              f"alloc_fail_rate={plan.alloc_fail_rate} "
+              f"step_error_rate={plan.step_error_rate} "
+              f"cancel_frac={args.cancel_frac} watchdog={args.watchdog}")
     ecfg = serve_loop.EngineConfig(
         max_batch=min(args.batch, args.requests), page_size=8,
         num_pages=max(16, args.requests *
                       (args.prompt_len + args.new_tokens) // 8 + 8),
         max_seq_len=args.prompt_len + args.new_tokens,
         prefill_chunk=max(8, args.prompt_len // 2), tp=args.tp,
-        prefix_cache=args.prefix_cache, policy=args.policy)
+        prefix_cache=args.prefix_cache, policy=args.policy,
+        watchdog=args.watchdog, faults=plan)
     eng = serve_loop.ServeEngine(packed, cfg, ecfg)
     for i, p in enumerate(prompts):
         eng.submit(p, args.new_tokens, rid=i, arrival=2 * i)
-    out = eng.run()
+
+    # seeded cancellation schedule: cancel_frac of the rids, each at a
+    # deterministic engine step — reproducible chaos, like the injector
+    cancel_at: dict[int, int] = {}
+    if args.cancel_frac > 0:
+        crng = np.random.default_rng(args.inject_faults or 0)
+        victims = crng.choice(args.requests,
+                              size=int(args.cancel_frac * args.requests),
+                              replace=False)
+        for r in victims:
+            cancel_at[int(crng.integers(2, 12))] = int(r)
+
+    def on_step(e, k):
+        if k in cancel_at:
+            e.cancel(cancel_at[k])
+
+    out = eng.run(on_step=on_step if cancel_at else None)
     s = eng.stats
     print(f"engine(tp={s.tp}): {s.steps} steps, decode "
           f"{s.decode_tok_s:.1f} tok/s "
           f"({s.decode_tok_s_per_device:.1f}/device), "
           f"batch occupancy {s.mean_occupancy:.2f}, "
           f"evictions {s.evictions}")
+    if plan is not None or cancel_at:
+        print(f"lifecycle: ok={s.completed_ok} cancelled={s.cancelled} "
+              f"timeouts={s.timeouts} rejected={s.rejected} "
+              f"failed={s.failed} quarantined={s.quarantined}; "
+              f"faults_injected={s.faults_injected} "
+              f"(step_errors={s.step_errors}, "
+              f"recovered_retries={s.step_retries}); "
+              f"injector[{eng.injector.describe() if eng.injector else '-'}]")
+        eng.kv.check()  # no leaked/aliased pages after the chaos
+        print("kv invariants hold after injected faults")
     if args.prefix_cache:
         print(f"prefix cache: hit_rate {s.prefix_hit_rate:.2f}, "
               f"{s.prefix_hit_tokens} cached tokens, "
@@ -88,14 +132,25 @@ def engine_demo(args, base, params):
             packed, cfg, {"tokens": np.asarray([p], np.int32)},
             args.new_tokens)
         ref = np.asarray(toks)[0].tolist()
-        ok = ref == out[i].tokens
+        comp = out[i]
+        if comp.status == "REJECTED":
+            ok = comp.tokens == []          # never executed
+        elif comp.ok:
+            ok = ref == comp.tokens         # unaffected: exact parity
+        else:
+            # CANCELLED / TIMEOUT / FAILED: whatever was generated before
+            # the exit must be a prefix of the fault-free stream
+            ok = comp.tokens == ref[:len(comp.tokens)]
         mismatch += not ok
-        print(f"  r{i}: prompt_len={len(p)} tokens={out[i].tokens[:6]}... "
+        print(f"  r{i}: prompt_len={len(p)} status={comp.status}"
+              f"{'' if comp.ok else f'({comp.reason})'} "
+              f"tokens={comp.tokens[:6]}... "
               f"parity_with_dense_ref={'OK' if ok else 'MISMATCH'}")
     if mismatch:
         raise SystemExit(f"{mismatch} stream(s) diverged from the dense "
                          "reference")
-    print("all engine streams match the one-shot dense-KV reference")
+    print("all engine streams match the one-shot dense-KV reference "
+          "(OK exact; non-OK prefix)")
 
 
 def main():
@@ -126,6 +181,19 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="engine mode: open every request with the same "
                          "N-token system prompt (prefix-cache workload)")
+    ap.add_argument("--inject-faults", type=int, default=None,
+                    metavar="SEED",
+                    help="engine mode: arm the deterministic fault "
+                         "injector (DESIGN.md §12) — allocation failures "
+                         "+ transient step errors on SEED's schedule; "
+                         "parity becomes status-typed (OK exact, non-OK "
+                         "prefix)")
+    ap.add_argument("--cancel-frac", type=float, default=0.0,
+                    help="engine mode: cancel this fraction of requests "
+                         "mid-flight on a seeded schedule")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="engine mode: assert KV invariants after every "
+                         "scheduler decision (quarantine on violation)")
     args = ap.parse_args()
 
     base = registry.smoke_config(args.arch)

@@ -26,6 +26,7 @@ import json
 import os
 import tempfile
 import time
+import warnings
 from typing import Any, Callable, Iterable
 
 import jax
@@ -63,6 +64,38 @@ def cache_path() -> str | None:
         os.path.expanduser("~"), ".cache", "repro", "autotune.json")
 
 
+def _quarantine_cache(path: str, err: Exception) -> None:
+    """A corrupt/truncated cache file (interrupted pre-flock writer, hand
+    edit, disk fault) must not take the kernels down — or silently poison
+    tuning.  Move it aside to ``<path>.bak`` for post-mortem, warn once,
+    and continue with an empty cache that will be re-tuned and rewritten
+    atomically."""
+    bak = path + ".bak"
+    try:
+        os.replace(path, bak)
+        where = f"quarantined to {bak}"
+    except OSError:
+        where = "could not be quarantined (left in place, ignored)"
+    warnings.warn(f"autotune cache {path} is corrupt ({err}); {where}; "
+                  "continuing with an empty cache", RuntimeWarning,
+                  stacklevel=3)
+
+
+def _parse_cache(raw: str) -> dict[str, Any]:
+    """Strict parse of the on-disk cache: a JSON object whose values are
+    record objects.  Anything else raises ValueError — a cache that
+    *parses* but has the wrong shape would otherwise crash ``lookup``
+    far from the cause."""
+    disk = json.loads(raw)  # JSONDecodeError is a ValueError
+    if not isinstance(disk, dict):
+        raise ValueError(f"cache root is {type(disk).__name__}, not object")
+    for key, rec in disk.items():
+        if not isinstance(rec, dict):
+            raise ValueError(f"record {key!r} is {type(rec).__name__}, "
+                             "not object")
+    return disk
+
+
 def _load_disk() -> None:
     global _DISK_LOADED
     if _DISK_LOADED:
@@ -73,8 +106,13 @@ def _load_disk() -> None:
         return
     try:
         with open(path) as f:
-            disk = json.load(f)
-    except (OSError, json.JSONDecodeError):
+            raw = f.read()
+    except OSError:
+        return  # unreadable (permissions/races): run uncached
+    try:
+        disk = _parse_cache(raw)
+    except (ValueError, UnicodeDecodeError) as e:
+        _quarantine_cache(path, e)
         return
     for key, rec in disk.items():
         _MEM.setdefault(key, rec)
@@ -110,9 +148,9 @@ def _save_disk() -> None:
             merged: dict[str, Any] = {}
             try:
                 with open(path) as f:
-                    merged = json.load(f)
-            except (OSError, json.JSONDecodeError, ValueError):
-                merged = {}  # absent or torn by a pre-fix writer
+                    merged = _parse_cache(f.read())
+            except (OSError, ValueError, UnicodeDecodeError):
+                merged = {}  # absent, torn, or corrupt: start fresh
             # merge ONLY keys this process tuned: _MEM also holds entries
             # loaded from disk at startup, and writing those back would
             # revert a concurrent writer's newer tuning for the same key

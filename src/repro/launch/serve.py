@@ -47,6 +47,25 @@ def main(argv=None):
     ap.add_argument("--policy", default="fcfs",
                     choices=["fcfs", "priority"],
                     help="--engine scheduler admission/eviction policy")
+    ap.add_argument("--inject-faults", type=int, default=None,
+                    metavar="SEED",
+                    help="--engine: arm the deterministic fault injector "
+                         "(DESIGN.md §12) — seeded allocation failures + "
+                         "transient step errors; the engine must degrade "
+                         "per-request, never crash")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="--engine: assert KV accounting invariants after "
+                         "every scheduler decision; violations quarantine "
+                         "the offending request instead of killing the "
+                         "loop")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="--engine: bounded admission queue — beyond this "
+                         "depth, backpressure rejects (fcfs) or sheds the "
+                         "lowest-priority queued request (priority)")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="--engine: per-request step budget; requests "
+                         "exceeding it finish as TIMEOUT with their "
+                         "partial stream")
     args = ap.parse_args(argv)
     if args.tp > 1 and not args.engine:
         raise SystemExit("--tp requires --engine (the one-shot loop is "
@@ -71,16 +90,22 @@ def main(argv=None):
             (args.batch, cfg.max_source_positions, cfg.d_model))
 
     if args.engine:
+        from repro.runtime import faults as fl
+        plan = (fl.FaultPlan(seed=args.inject_faults, alloc_fail_rate=0.08,
+                             step_error_rate=0.04)
+                if args.inject_faults is not None else None)
         ecfg = serve_loop.EngineConfig(
             max_batch=args.batch, page_size=args.page_size,
             num_pages=args.num_pages,
             max_seq_len=args.prompt_len + args.new_tokens,
             prefill_chunk=args.prefill_chunk, tp=args.tp,
-            prefix_cache=args.prefix_cache, policy=args.policy)
+            prefix_cache=args.prefix_cache, policy=args.policy,
+            max_queue=args.max_queue, watchdog=args.watchdog, faults=plan)
         eng = serve_loop.ServeEngine(params, cfg, ecfg)
         for i in range(args.batch):
             eng.submit(batch["tokens"][i].tolist(), args.new_tokens,
-                       rid=i, arrival=i)  # staggered joins
+                       rid=i, arrival=i,  # staggered joins
+                       deadline_steps=args.deadline_steps)
         out = eng.run()
         s = eng.stats
         print(f"[launch.serve] engine(tp={s.tp}, precision={s.precision}, "
@@ -93,6 +118,16 @@ def main(argv=None):
             print(f"[launch.serve] prefix cache: hit_rate "
                   f"{s.prefix_hit_rate:.2f}; {s.prefill_chunks_skipped} "
                   f"chunks skipped; {s.cow_copies} COW copies")
+        if plan is not None or args.watchdog or args.max_queue is not None \
+                or args.deadline_steps is not None:
+            eng.kv.check()  # robustness run: prove pages balanced
+            print(f"[launch.serve] lifecycle: ok={s.completed_ok} "
+                  f"cancelled={s.cancelled} timeouts={s.timeouts} "
+                  f"rejected={s.rejected} failed={s.failed} "
+                  f"quarantined={s.quarantined}; goodput "
+                  f"{s.goodput_tok_s:.1f} tok/s; faults_injected="
+                  f"{s.faults_injected}; p95_queue_wait="
+                  f"{s.p95_queue_wait_steps:.0f} steps; kv invariants OK")
         return
 
     toks, stats = serve_loop.generate(params, cfg, batch, args.new_tokens)

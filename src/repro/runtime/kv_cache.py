@@ -121,15 +121,29 @@ class PagePool:
     The free list is LIFO (hot pages reused); LRU reclaim takes the
     *least recently used* cached page so long-lived shared prefixes
     survive pressure longest.
+
+    A fourth terminal state exists for debug-mode containment
+    (DESIGN.md §12): *quarantined* pages have been pulled out of
+    circulation by the invariant watchdog — their contents may be
+    aliased, so they are never handed out again; the pool keeps serving
+    with a smaller capacity instead of killing the engine.
+
+    ``injector`` (a :class:`repro.runtime.faults.FaultInjector`) makes
+    ``alloc`` fail on the injector's deterministic ``"alloc"`` schedule —
+    the failure is raised before any state changes, so an injected
+    :class:`OutOfPages` is indistinguishable from real exhaustion to the
+    caller and perfectly recoverable.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, injector=None):
         self.num_pages = num_pages
+        self.injector = injector
         self._free = list(range(num_pages - 1, -1, -1))
         self._ref: dict[int, int] = {}           # page -> refcount (>= 1)
         self._hash_of_page: dict[int, bytes] = {}  # registered full pages
         self._index: dict[bytes, int] = {}         # chain hash -> page
         self._lru: OrderedDict[int, None] = OrderedDict()  # cached, ref==0
+        self._quarantined: set[int] = set()  # watchdog-retired pages (§12)
         self.cached_evictions = 0   # LRU reclaims of cached pages
 
     # ------------------------------------------------------------ queries
@@ -147,6 +161,11 @@ class PagePool:
         """Pages an ``alloc`` can hand out: free + cached refcount-0."""
         return len(self._free) + len(self._lru)
 
+    @property
+    def num_quarantined(self) -> int:
+        """Pages retired from circulation by the invariant watchdog."""
+        return len(self._quarantined)
+
     def refcount(self, page: int) -> int:
         return self._ref.get(page, 0)
 
@@ -155,6 +174,11 @@ class PagePool:
         """Hand out ``n`` exclusively-owned pages (refcount 1): free-list
         pages first, then LRU reclaim of cached refcount-0 pages (their
         hash entries are dropped first).  Raises :class:`OutOfPages`."""
+        if self.injector is not None and self.injector.fire("alloc"):
+            # before any mutation: an injected failure leaves the pool
+            # bit-identical, so the caller's retry path sees a clean state
+            raise OutOfPages(f"injected allocation failure "
+                             f"(occurrence {self.injector.calls['alloc'] - 1})")
         if n > self.num_reclaimable:
             raise OutOfPages(f"need {n} pages, {self.num_free} free + "
                              f"{self.num_cached} cached")
@@ -229,16 +253,46 @@ class PagePool:
             self._lru.move_to_end(p)
         return p
 
+    # ------------------------------------------------------- containment
+    def quarantine(self, pages) -> None:
+        """Watchdog containment (DESIGN.md §12): forcibly retire ``pages``
+        from every lifecycle state.  A quarantined page may be aliased by
+        corrupt bookkeeping, so it is never handed out again — capacity
+        shrinks, the engine survives."""
+        for p in set(pages):
+            self._ref.pop(p, None)
+            self._lru.pop(p, None)
+            h = self._hash_of_page.pop(p, None)
+            if h is not None:
+                self._index.pop(h, None)
+            if p in self._free:
+                self._free.remove(p)
+            self._quarantined.add(p)
+
+    def reconcile(self, page: int, refcount: int) -> None:
+        """Watchdog containment: force ``page``'s refcount to the number
+        of surviving table references, quarantining it when none remain
+        (its contents can no longer be trusted)."""
+        if refcount <= 0:
+            self.quarantine([page])
+        else:
+            self._lru.pop(page, None)
+            self._ref[page] = refcount
+
     # --------------------------------------------------------- invariant
     def check(self) -> None:
-        """free / cached / referenced partition ``range(num_pages)``; every
-        refcount >= 1; LRU pages are exactly the refcount-0 registered
-        pages; the hash index and the per-page hash map are inverse."""
+        """free / cached / referenced / quarantined partition
+        ``range(num_pages)``; every refcount >= 1; LRU pages are exactly
+        the refcount-0 registered pages; the hash index and the per-page
+        hash map are inverse."""
         free, lru, ref = set(self._free), set(self._lru), set(self._ref)
+        quar = self._quarantined
         assert len(self._free) == len(free), "free-list duplicate"
         assert not (free & lru) and not (free & ref) and not (lru & ref), \
             "page in two lifecycle states"
-        assert free | lru | ref == set(range(self.num_pages)), "page leak"
+        assert not (quar & (free | lru | ref)), "quarantined page in use"
+        assert free | lru | ref | quar == set(range(self.num_pages)), \
+            "page leak"
         assert all(r >= 1 for r in self._ref.values()), "zombie refcount"
         assert self._index == {h: p for p, h in self._hash_of_page.items()}, \
             "hash index drift"
@@ -265,12 +319,16 @@ class KVCacheManager:
 
     ``namespace`` seeds this manager's block-hash chains (model /
     precision / KV dtype / tp / page size — see :func:`block_hashes`).
+    ``injector`` threads a deterministic fault schedule through page
+    allocation and the copy-on-write fork path (DESIGN.md §12).
     """
 
-    def __init__(self, cfg: PagedKVConfig, namespace: str = ""):
+    def __init__(self, cfg: PagedKVConfig, namespace: str = "",
+                 injector=None):
         self.cfg = cfg
         self.namespace = namespace
-        self.pool = PagePool(cfg.num_pages)
+        self.injector = injector
+        self.pool = PagePool(cfg.num_pages, injector=injector)
         self._tables: dict[int, list[int]] = {}
 
     # ------------------------------------------------------------ queries
@@ -353,10 +411,49 @@ class KVCacheManager:
         for bi in range(start_tok // ps, last):
             src = table[bi]
             if self.pool.refcount(src) > 1:
+                if (self.injector is not None
+                        and self.injector.fire("fork")):
+                    # injected COW-fork failure, before any mutation: the
+                    # caller's evict-retry resumes exactly here (already
+                    # swapped pages are exclusive and skipped on retry)
+                    raise OutOfPages("injected copy-on-write fork failure")
                 dst = self.pool.alloc(1)[0]   # may raise OutOfPages
                 self.pool.release([src])      # siblings keep their refs
                 table[bi] = dst
                 pairs.append((src, dst))
+
+    # -------------------------------------------------------- containment
+    def offending_slots(self) -> set[int]:
+        """Slots whose page tables are implicated in accounting drift:
+        tables referencing pages whose pool refcount disagrees with the
+        table-side count, duplicated pages within one table, or pages the
+        pool does not consider referenced.  Used by the invariant
+        watchdog (DESIGN.md §12) to attribute a failed ``check()`` to the
+        request(s) to quarantine — innocent siblings keep serving."""
+        owned = Counter(p for t in self._tables.values() for p in t)
+        bad_pages = {p for p in set(owned) | set(self.pool._ref)
+                     if owned.get(p, 0) != self.pool.refcount(p)}
+        out = set()
+        for slot, t in self._tables.items():
+            if bad_pages & set(t) or len(t) != len(set(t)):
+                out.add(slot)
+        return out
+
+    def quarantine_slot(self, slot: int) -> list[int]:
+        """Watchdog containment: drop ``slot``'s table without trusting
+        the pool bookkeeping, then reconcile each of its pages — pages
+        still referenced by surviving tables get their refcount forced to
+        the true count; orphaned pages are quarantined (retired from
+        circulation).  Returns the quarantined page list."""
+        table = self._tables.pop(slot, [])
+        owned = Counter(p for t in self._tables.values() for p in t)
+        gone = []
+        for p in set(table):
+            n = owned.get(p, 0)
+            self.pool.reconcile(p, n)
+            if n == 0:
+                gone.append(p)
+        return gone
 
     # ----------------------------------------------------- device mirror
     def page_table_array(self) -> np.ndarray:

@@ -35,6 +35,23 @@ disturbing siblings (refcounts), and a preempted request's re-queued
 prompt (prompt + generated) gets fresh block hashes so re-admission can
 hit its own surviving cached pages.
 
+Every request leaves the scheduler through exactly one *terminal
+status* (DESIGN.md §12): ``OK`` (retired normally), ``TIMEOUT``
+(wall-clock or step-budget deadline expired — partial tokens kept),
+``CANCELLED`` (client went away), ``REJECTED`` (typed admission refusal:
+oversized prompt, bounded-queue backpressure, or policy shed), or
+``FAILED`` (unrecoverable execution fault: exhausted step retries,
+poisoned request, persistent page starvation, or invariant-watchdog
+quarantine).  Terminal records accumulate in :attr:`Scheduler.finished`
+and are drained by the engine via :meth:`Scheduler.take_finished`; no
+client input ever raises out of ``submit``.
+
+Deadlines are checked only at decision boundaries (host side), so the
+fixed-shape jitted steps are untouched.  With ``watchdog=True`` the
+manager invariants (``KVCacheManager.check``) are asserted after every
+decision; a failed check quarantines the implicated request(s) and their
+pages instead of killing the loop.
+
 The scheduler never touches device state; it owns request lifecycle and
 the :class:`KVCacheManager` accounting, which is what the property tests
 drive.
@@ -42,10 +59,30 @@ drive.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 from .kv_cache import (KVCacheManager, OutOfPages, PagedKVConfig,
                        block_hashes)
+
+# terminal request statuses (DESIGN.md §12)
+OK = "OK"
+TIMEOUT = "TIMEOUT"
+CANCELLED = "CANCELLED"
+REJECTED = "REJECTED"
+FAILED = "FAILED"
+
+# failure/rejection reason taxonomy (Finished.reason / Completion.reason)
+REASON_EXCEEDS_CAPACITY = "prompt_exceeds_capacity"
+REASON_QUEUE_FULL = "queue_full"
+REASON_SHED = "shed_by_policy"
+REASON_DEADLINE = "deadline"          # wall-clock deadline expired
+REASON_MAX_STEPS = "max_steps"        # engine-step budget exhausted
+REASON_CLIENT_CANCEL = "client_cancel"
+REASON_STEP_ERROR = "step_error"      # transient step retries exhausted
+REASON_POISONED = "poisoned"
+REASON_OUT_OF_PAGES = "out_of_pages"  # persistent allocation starvation
+REASON_INVARIANT = "invariant_violation"  # watchdog quarantine
 
 
 @dataclasses.dataclass
@@ -64,6 +101,23 @@ class Request:
     # earlier residency (prefilled or decoded before the eviction):
     # re-prefilling them is *recomputation*, not new prompt work
     recompute_high: int = 0
+    # deadlines, checked at decision boundaries only (DESIGN.md §12):
+    # the engine-step clock value after which the request times out ...
+    deadline_step: int | None = None
+    # ... and the absolute wall-clock instant (scheduler ``time_fn`` units)
+    deadline_t: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Finished:
+    """Terminal record of one request: how it left the scheduler and the
+    greedy tokens it produced before leaving (partial for non-OK exits,
+    empty for requests that never reached a decode slot)."""
+    rid: int
+    status: str                 # OK | TIMEOUT | CANCELLED | REJECTED | FAILED
+    reason: str | None
+    tokens: tuple[int, ...]
+    evictions: int = 0
 
 
 @dataclasses.dataclass
@@ -141,6 +195,13 @@ class SchedulerPolicy:
         get pages; None when no victim exists."""
         raise NotImplementedError
 
+    def select_shed(self, waiting, incoming: "Request") -> int | None:
+        """Backpressure policy for a full admission queue (DESIGN.md §12):
+        index into ``waiting`` of the queued request to shed so
+        ``incoming`` can be accepted, or None to reject ``incoming``
+        itself.  Default: reject the newcomer (strict FCFS fairness)."""
+        return None
+
 
 class FCFSPolicy(SchedulerPolicy):
     """Strict first-come-first-served: only the queue head is eligible
@@ -187,6 +248,18 @@ class PriorityPolicy(SchedulerPolicy):
         lowest = min(s.req.priority for s in victims)
         return [s for s in victims if s.req.priority == lowest][-1]
 
+    def select_shed(self, waiting, incoming):
+        """Shed the lowest-priority queued request that ranks strictly
+        below the newcomer (youngest among ties); a newcomer that doesn't
+        outrank anyone is rejected instead."""
+        best = None
+        for i, req in enumerate(waiting):
+            if req.priority >= incoming.priority:
+                continue
+            if best is None or req.priority <= waiting[best].priority:
+                best = i
+        return best
+
 
 POLICIES: dict[str, type[SchedulerPolicy]] = {
     "fcfs": FCFSPolicy,
@@ -222,10 +295,30 @@ class SchedStats:
     prefix_hit_tokens: int = 0      # prompt tokens skipped via cached pages
     prefill_chunks_skipped: int = 0  # chunk decisions avoided by hits
     cow_copies: int = 0             # copy-on-write page copies issued
+    # request lifecycle (DESIGN.md §12) — terminal-status counters
+    cancelled: int = 0
+    timeouts: int = 0
+    rejected: int = 0           # typed admission refusals (incl. sheds)
+    shed: int = 0               # rejections of already-queued requests
+    failed: int = 0             # unrecoverable execution faults
+    quarantined: int = 0        # watchdog invariant quarantines
+    admission_deferrals: int = 0  # admissions deferred by alloc failure
+    # first-admission queue wait per request, in engine steps (overload
+    # benches derive p50/p95 from this; requeues after eviction excluded)
+    queue_wait_steps: list[int] = dataclasses.field(default_factory=list)
 
     @property
     def mean_occupancy(self) -> float:
         return self.occupancy_sum / max(self.decode_steps, 1)
+
+    def queue_wait_pct(self, pct: float) -> float:
+        """Percentile of first-admission queue wait (steps); 0 when no
+        request was admitted."""
+        if not self.queue_wait_steps:
+            return 0.0
+        xs = sorted(self.queue_wait_steps)
+        i = min(len(xs) - 1, int(round(pct / 100.0 * (len(xs) - 1))))
+        return float(xs[i])
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -236,17 +329,35 @@ class SchedStats:
         return self.prefix_hit_tokens / max(total, 1)
 
 
+class ScheduleFailed(Exception):
+    """Internal: a sequence could not be given pages even after bounded
+    evict-retry — the scheduler converts it into a FAILED terminal."""
+
+    def __init__(self, seq: "Sequence", reason: str):
+        super().__init__(reason)
+        self.seq, self.reason = seq, reason
+
+
 class Scheduler:
     def __init__(self, kv: KVCacheManager, prefill_chunk: int = 16,
                  policy: SchedulerPolicy | None = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 max_queue: int | None = None,
+                 watchdog: bool = False,
+                 evict_retry_limit: int = 3,
+                 time_fn=time.monotonic):
         self.kv = kv
         self.cfg: PagedKVConfig = kv.cfg
         self.prefill_chunk = prefill_chunk
         self.policy = policy or FCFSPolicy()
         self.prefix_cache = prefix_cache
+        self.max_queue = max_queue          # bounded admission queue (§12)
+        self.watchdog = watchdog            # invariant check per decision
+        self.evict_retry_limit = evict_retry_limit
+        self.time_fn = time_fn              # injectable wall clock (tests)
         self.waiting: deque[Request] = deque()
         self.running: list[Sequence] = []   # admission order (oldest first)
+        self.finished: list[Finished] = []  # terminal records, FIFO
         self.clock = 0
         self.stats = SchedStats()
         self.trace: list[str] = []          # decision log (determinism tests)
@@ -255,13 +366,110 @@ class Scheduler:
         self.evict_counts: dict[int, int] = {}
 
     # ----------------------------------------------------------- intake
-    def submit(self, req: Request) -> None:
-        if len(req.prompt) + req.max_new_tokens > self.cfg.max_seq_len:
-            raise ValueError(f"request {req.rid}: prompt+max_new exceeds "
-                             f"max_seq_len={self.cfg.max_seq_len}")
+    def submit(self, req: Request) -> str | None:
+        """Enqueue ``req``.  Returns None on acceptance, else the typed
+        rejection reason (also recorded as a REJECTED terminal in
+        :attr:`finished`) — client input never raises (DESIGN.md §12)."""
+        if len(req.prompt) + req.max_new_tokens > self.cfg.max_seq_len or \
+                self.cfg.pages_for(len(req.prompt) + req.max_new_tokens) \
+                > self.cfg.num_pages:
+            # validated up front: admitting this request would spin the
+            # evict-retry path forever (its page demand can never fit)
+            return self._reject(req, REASON_EXCEEDS_CAPACITY)
+        if self.max_queue is not None and len(self.waiting) >= self.max_queue:
+            shed = self.policy.select_shed(self.waiting, req)
+            if shed is None:
+                return self._reject(req, REASON_QUEUE_FULL)
+            victim = self.waiting[shed]
+            del self.waiting[shed]
+            self.stats.shed += 1
+            self._reject(victim, REASON_SHED)
         if self.prefix_cache and req.block_hashes is None:
             req.block_hashes = self.kv.hashes_for(req.prompt)
         self.waiting.append(req)
+        return None
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a live request: a running sequence releases its pages /
+        COW refcounts immediately (partial tokens kept); a queued request
+        is removed.  Returns False when ``rid`` is not live (already
+        terminal or unknown) — cancellation is idempotent."""
+        for seq in self.running:
+            if seq.rid == rid:
+                self._finish_seq(seq, CANCELLED, REASON_CLIENT_CANCEL)
+                self.stats.cancelled += 1
+                return True
+        for req in self.waiting:
+            if req.rid == rid:
+                self.waiting.remove(req)
+                self._finish_req(req, CANCELLED, REASON_CLIENT_CANCEL)
+                self.stats.cancelled += 1
+                return True
+        return False
+
+    def fail(self, seq: Sequence, reason: str) -> None:
+        """Terminate a running sequence as FAILED (engine-observed fault:
+        poisoned request, exhausted step retries)."""
+        self._finish_seq(seq, FAILED, reason)
+        self.stats.failed += 1
+
+    def take_finished(self) -> list[Finished]:
+        """Drain terminal records accumulated since the last call."""
+        out, self.finished = self.finished, []
+        return out
+
+    # ------------------------------------------------ terminal plumbing
+    def _finish_seq(self, seq: Sequence, status: str, reason: str | None,
+                    free: bool = True) -> None:
+        if seq in self.running:
+            self.running.remove(seq)
+        if free:
+            self.kv.free_slot(seq.slot)
+        self.finished.append(Finished(
+            seq.rid, status, reason, tuple(self.full_output(seq)),
+            self.evict_counts.get(seq.rid, 0)))
+        if status != OK:
+            self.trace.append(f"{status.lower()} r{seq.rid}({reason})")
+
+    def _finish_req(self, req: Request, status: str,
+                    reason: str | None) -> None:
+        """Terminal for a request that holds no decode slot (still queued,
+        or rejected at submit).  A requeued eviction victim keeps the
+        tokens it generated in earlier residencies."""
+        prior = self._requeued_outputs.get(req.rid, [])
+        self.finished.append(Finished(
+            req.rid, status, reason, tuple(prior),
+            self.evict_counts.get(req.rid, 0)))
+        self.trace.append(f"{status.lower()} r{req.rid}({reason})")
+
+    def _reject(self, req: Request, reason: str) -> str:
+        self.stats.rejected += 1
+        self._finish_req(req, REJECTED, reason)
+        return reason
+
+    def _expire_deadlines(self) -> None:
+        """Deadline enforcement at the decision boundary (§12): expired
+        queued requests time out before admission; expired running
+        sequences time out keeping their partial stream.  Wall clock is
+        consulted only when some live request carries a wall deadline."""
+        live = list(self.waiting) + [s.req for s in self.running]
+        now = (self.time_fn()
+               if any(r.deadline_t is not None for r in live) else None)
+
+        def expired(req: Request) -> str | None:
+            if req.deadline_step is not None and self.clock > req.deadline_step:
+                return REASON_MAX_STEPS
+            if req.deadline_t is not None and now >= req.deadline_t:
+                return REASON_DEADLINE
+            return None
+
+        for req in [r for r in self.waiting if expired(r)]:
+            self.waiting.remove(req)
+            self._finish_req(req, TIMEOUT, expired(req))
+            self.stats.timeouts += 1
+        for seq in [s for s in self.running if expired(s.req)]:
+            self._finish_seq(seq, TIMEOUT, expired(seq.req))
+            self.stats.timeouts += 1
 
     @property
     def has_work(self) -> bool:
@@ -294,15 +502,27 @@ class Scheduler:
             # so the fork + ensure below can never fail mid-admission
             if not slots or not self.kv.can_allocate(first):
                 return
-            del self.waiting[idx]
             seq = Sequence(req, slots[0], prefill_pos=cached_len,
                            resume_pos=cached_len,
                            registered_blocks=len(cached_pages))
-            if cached_pages:
-                self.kv.adopt_cached(seq.slot, cached_pages)
-            self.kv.ensure(seq.slot, first)
+            try:
+                if cached_pages:
+                    self.kv.adopt_cached(seq.slot, cached_pages)
+                self.kv.ensure(seq.slot, first)
+            except OutOfPages:
+                # can_allocate passed, so this is an injected (transient)
+                # allocation failure: undo any adoption and defer the
+                # admission to a later step — the request stays queued
+                self.kv.free_slot(seq.slot)
+                self.stats.admission_deferrals += 1
+                self.trace.append(f"defer r{req.rid}")
+                return
+            del self.waiting[idx]
             self.running.append(seq)
             self.stats.admitted += 1
+            if not req.requeued:
+                self.stats.queue_wait_steps.append(
+                    max(0, self.clock - req.arrival))
             hit_note = ""
             if self.prefix_cache and req.block_hashes is not None:
                 self.stats.prefix_lookups += 1
@@ -353,18 +573,27 @@ class Scheduler:
         """Grow ``seq``'s table to ``num_tokens`` and make every page in
         the write range ``[write_start, num_tokens)`` exclusively owned,
         evicting victims on page pressure.  Returns the accumulated
-        copy-on-write (src, dst) pairs for the engine to copy on device."""
+        copy-on-write (src, dst) pairs for the engine to copy on device.
+
+        Evict-retry is *bounded* (DESIGN.md §12): with no victim left,
+        an OutOfPages is retried ``evict_retry_limit`` times (covers
+        injected transient allocation failures — up-front capacity
+        validation guarantees a lone sequence's real demand always fits),
+        then the request FAILS with ``out_of_pages`` instead of wedging
+        or killing the loop."""
         pairs: list[tuple[int, int]] = []
+        retries = 0
         while True:
             try:
                 self.kv.ensure(seq.slot, num_tokens)
                 self.kv.cow_range(seq.slot, write_start, num_tokens, pairs)
                 return pairs
             except OutOfPages:
-                if not self._preempt(protect=seq):
-                    raise RuntimeError(
-                        "paged-KV deadlock: a lone sequence cannot get a "
-                        "page — num_pages is below max_seq_len/page_size")
+                if self._preempt(protect=seq):
+                    continue
+                retries += 1
+                if retries > self.evict_retry_limit:
+                    raise ScheduleFailed(seq, REASON_OUT_OF_PAGES) from None
 
     def _record_cow(self, pairs) -> tuple[tuple[int, int], ...]:
         if pairs:
@@ -374,8 +603,62 @@ class Scheduler:
         return tuple(pairs)
 
     def next_decision(self) -> Decision | None:
-        """One iteration of the policy; advances the clock."""
+        """One iteration of the policy; advances the clock.  Deadline
+        expiry, bounded-retry FAILED conversion, and the optional
+        invariant watchdog all happen here — at the decision boundary, so
+        the fixed-shape jitted steps never carry lifecycle logic (§12)."""
         self.clock += 1
+        self._expire_deadlines()
+        try:
+            decision = self._decide()
+        except ScheduleFailed as f:
+            # persistent page starvation: fail the one request instead of
+            # crashing the engine; siblings keep serving
+            self.fail(f.seq, f.reason)
+            self._last_was_prefill = False
+            decision = None
+        if self.watchdog:
+            decision = self._watchdog_check(decision)
+        return decision
+
+    def _watchdog_check(self, decision: Decision | None) -> Decision | None:
+        """Debug-mode invariant watchdog (§12): run the full accounting
+        check after the decision; on failure, quarantine the implicated
+        requests (their pages are reconciled or retired from circulation
+        via ``KVCacheManager.quarantine_slot``) and strip them from the
+        decision instead of killing the engine loop.  Corruption that
+        survives quarantine (unattributable) still raises."""
+        try:
+            self.kv.check()
+            return decision
+        except AssertionError:
+            pass
+        suspects = [s for s in self.running
+                    if s.slot in self.kv.offending_slots()]
+        if not suspects and decision is not None:
+            # fall back: blame the decision that surfaced the violation
+            suspects = ([decision.seq] if isinstance(decision, PrefillChunk)
+                        else [s for s in decision.seqs if s in self.running])
+        for seq in suspects:
+            self.kv.quarantine_slot(seq.slot)
+            self._finish_seq(seq, FAILED, REASON_INVARIANT, free=False)
+            self.stats.failed += 1
+            self.stats.quarantined += 1
+            self.trace.append(f"quarantine r{seq.rid}")
+        self.kv.check()  # unattributable corruption: nothing left to blame
+        # strip quarantined sequences from the decision; their already-
+        # booked COW pairs stay (the dst pages are quarantined — never
+        # re-allocated — so executing the copies is harmless, while
+        # surviving sequences' pairs MUST still execute)
+        qrids = {s.rid for s in suspects}
+        if isinstance(decision, PrefillChunk) and decision.seq.rid in qrids:
+            return None
+        if isinstance(decision, DecodeBatch):
+            keep = tuple(s for s in decision.seqs if s.rid not in qrids)
+            return DecodeBatch(keep, decision.cow) if keep else None
+        return decision
+
+    def _decide(self) -> Decision | None:
         self._admit()
         prefilling = [s for s in self.running if s.prefilling]
         decoding = [s for s in self.running if not s.prefilling and not s.done]
@@ -404,8 +687,14 @@ class Scheduler:
             per_seq: list[tuple[Sequence, list[tuple[int, int]]]] = []
             for seq in decoding:
                 if seq in self.running:  # an earlier ensure may have evicted it
-                    per_seq.append((seq, self._ensure_or_evict(
-                        seq, seq.kv_len, write_start=seq.kv_len - 1)))
+                    try:
+                        per_seq.append((seq, self._ensure_or_evict(
+                            seq, seq.kv_len, write_start=seq.kv_len - 1)))
+                    except ScheduleFailed as f:
+                        # fail only the starved sequence; its pages are
+                        # released, and its booked COW pairs are dropped
+                        # below exactly like a preempted sequence's
+                        self.fail(f.seq, f.reason)
             # keep only pairs of sequences that SURVIVED the eviction pass:
             # a preempted sequence's freed COW dst can be re-allocated to a
             # later sequence in this same decision, and executing the stale
@@ -444,10 +733,12 @@ class Scheduler:
         seq.out_tokens.append(token)
 
     def retire_finished(self) -> list[Sequence]:
+        """Retire sequences that completed normally (terminal status OK,
+        recorded in :attr:`finished`).  Returns the retired sequences —
+        host-only test harnesses read their streams directly."""
         done = [s for s in self.running if s.done]
         for seq in done:
-            self.running.remove(seq)
-            self.kv.free_slot(seq.slot)
+            self._finish_seq(seq, OK, None)
             self.stats.retired += 1
             self.trace.append(f"retire r{seq.rid}")
         return done

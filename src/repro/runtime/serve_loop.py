@@ -33,7 +33,9 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.core import linear as sl
 from repro.models import model as M
+from repro.runtime import faults as fl
 from repro.runtime.kv_cache import KVCacheManager, PagedKVConfig
+from repro.runtime import scheduler as sch
 from repro.runtime.scheduler import (DecodeBatch, PrefillChunk, Request,
                                      Scheduler, make_policy)
 from repro.sharding import tp as tpmod
@@ -142,6 +144,12 @@ class EngineConfig:
     tp: int = 1               # tensor-parallel degree (devices in the mesh)
     prefix_cache: bool = False  # radix prefix cache + COW pages (§11)
     policy: str = "fcfs"      # scheduler policy name (fcfs | priority)
+    # request-lifecycle robustness (DESIGN.md §12)
+    max_queue: int | None = None  # bounded admission queue; None = unbounded
+    watchdog: bool = False    # assert kv invariants after every decision
+    step_retries: int = 2     # transient step-error retries before FAILED
+    retry_backoff_s: float = 0.0  # backoff base between step retries
+    faults: "fl.FaultPlan | None" = None  # deterministic fault injection
 
     def kv_config(self) -> PagedKVConfig:
         return PagedKVConfig(page_size=self.page_size,
@@ -154,11 +162,23 @@ class EngineConfig:
 @dataclasses.dataclass
 class Completion:
     """A finished request: generated token ids (greedy stream, including
-    tokens emitted before any recompute-preemption) + eviction count."""
+    tokens emitted before any recompute-preemption), eviction count, and
+    the terminal lifecycle status (DESIGN.md §12).
+
+    ``status`` is one of ``OK | TIMEOUT | CANCELLED | REJECTED | FAILED``;
+    non-OK completions carry a typed ``reason`` from the scheduler's
+    failure taxonomy and keep whatever tokens were generated before the
+    exit (a TIMEOUT/CANCELLED stream is a prefix of the fault-free one)."""
     rid: int
     prompt: list[int]
     tokens: list[int]
     evictions: int = 0
+    status: str = sch.OK
+    reason: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == sch.OK
 
 
 @dataclasses.dataclass
@@ -189,10 +209,29 @@ class EngineStats:
     prefill_chunks_skipped: int = 0  # prefill steps avoided by hits
     cow_copies: int = 0              # device page copies (copy-on-write)
     cached_page_evictions: int = 0   # LRU reclaims of refcount-0 pages
+    # request lifecycle (DESIGN.md §12) — terminal statuses + fault economics
+    completed_ok: int = 0
+    cancelled: int = 0
+    timeouts: int = 0
+    rejected: int = 0                # typed backpressure/capacity refusals
+    failed: int = 0
+    quarantined: int = 0             # watchdog invariant quarantines
+    admission_deferrals: int = 0     # admissions deferred by alloc failure
+    step_errors: int = 0             # transient step-dispatch faults seen
+    step_retries: int = 0            # retries that recovered a step
+    faults_injected: int = 0         # injector-fired faults (all sites)
+    goodput_tokens: int = 0          # decode tokens of OK completions only
+    p95_queue_wait_steps: float = 0.0
 
     @property
     def decode_tok_s(self) -> float:
         return self.decode_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def goodput_tok_s(self) -> float:
+        """Decode throughput counting only tokens delivered in OK
+        completions — the overload-bench headline (DESIGN.md §12)."""
+        return self.goodput_tokens / max(self.wall_s, 1e-9)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -265,10 +304,15 @@ class ServeEngine:
         namespace = (f"{cfg.name}|{cfg.sparsity.recipe.name}"
                      f"|kv={cfg.kv_cache_dtype}|tp={self.ecfg.tp}"
                      f"|ps={self.ecfg.page_size}")
-        self.kv = KVCacheManager(self.ecfg.kv_config(), namespace=namespace)
+        self.injector = (fl.FaultInjector(self.ecfg.faults)
+                         if self.ecfg.faults is not None else None)
+        self.kv = KVCacheManager(self.ecfg.kv_config(), namespace=namespace,
+                                 injector=self.injector)
         self.sched = Scheduler(self.kv, self.ecfg.prefill_chunk,
                                policy=make_policy(self.ecfg.policy),
-                               prefix_cache=self.ecfg.prefix_cache)
+                               prefix_cache=self.ecfg.prefix_cache,
+                               max_queue=self.ecfg.max_queue,
+                               watchdog=self.ecfg.watchdog)
         self.cache = M.make_paged_cache(cfg, self.ecfg.num_pages,
                                         self.ecfg.page_size,
                                         self.ecfg.max_batch)
@@ -329,7 +373,18 @@ class ServeEngine:
     # ------------------------------------------------------------ intake
     def submit(self, prompt: list[int], max_new_tokens: int,
                rid: int | None = None, arrival: int = 0,
-               eos_id: int | None = None, priority: int = 0) -> int:
+               eos_id: int | None = None, priority: int = 0,
+               deadline_steps: int | None = None,
+               deadline_s: float | None = None) -> int:
+        """Enqueue a request.  Admission is *typed*, never an exception:
+        an oversized prompt or a full bounded queue produces a REJECTED
+        completion (reason ``prompt_exceeds_capacity`` / ``queue_full`` /
+        ``shed_by_policy``) visible immediately in ``self.completions``.
+
+        ``deadline_steps`` caps scheduler steps after arrival (a
+        deterministic budget usable in tests); ``deadline_s`` is a
+        wall-clock deadline.  Both are checked at decision boundaries
+        only, so the fixed-shape jitted steps are untouched."""
         rid = rid if rid is not None else len(self._prompts)
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
@@ -340,25 +395,64 @@ class ServeEngine:
         # hashes ride the request so admission can probe the prefix index
         hashes = (self.kv.hashes_for(prompt)
                   if self.ecfg.prefix_cache else None)
+        dstep = (arrival + deadline_steps
+                 if deadline_steps is not None else None)
+        dt = (time.monotonic() + deadline_s
+              if deadline_s is not None else None)
         self.sched.submit(Request(rid=rid, prompt=list(prompt),
                                   max_new_tokens=max_new_tokens,
                                   arrival=arrival, eos_id=eos_id,
-                                  priority=priority, block_hashes=hashes))
+                                  priority=priority, block_hashes=hashes,
+                                  deadline_step=dstep, deadline_t=dt))
+        self._drain_finished()  # surface immediate rejection/shed
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Client-initiated cancellation: drop the request whether it is
+        waiting or mid-flight (pages/COW refcounts released) and emit a
+        CANCELLED completion carrying tokens generated so far.  Returns
+        False when ``rid`` is unknown or already terminal."""
+        hit = self.sched.cancel(rid)
+        self._drain_finished()
+        return hit
 
     # -------------------------------------------------------------- step
     def _sample(self, logits_row: np.ndarray) -> int:
         return int(np.argmax(logits_row))  # greedy (parity with generate)
 
-    def _finish_retired(self) -> list[Completion]:
+    def _drain_finished(self) -> list[Completion]:
+        """Convert the scheduler's terminal :class:`~repro.runtime.
+        scheduler.Finished` records (any status) into Completions."""
         out = []
-        for seq in self.sched.retire_finished():
-            comp = Completion(seq.rid, self._prompts[seq.rid],
-                              self.sched.full_output(seq),
-                              self.sched.evict_counts.get(seq.rid, 0))
-            self.completions[seq.rid] = comp
+        for fin in self.sched.take_finished():
+            comp = Completion(fin.rid, self._prompts.get(fin.rid, []),
+                              list(fin.tokens), fin.evictions,
+                              status=fin.status, reason=fin.reason)
+            self.completions[fin.rid] = comp
             out.append(comp)
         return out
+
+    def _dispatch(self, fn, *args):
+        """Run a jitted step through the fault injector's ``step`` site
+        with bounded retry/backoff: a :class:`~repro.runtime.faults.
+        TransientStepError` fires *before* the device function runs, so
+        retrying is always safe.  Exhausting ``step_retries`` re-raises
+        for the caller to fail the decision's requests."""
+        if self.injector is None:
+            return fn(*args)
+        attempts = self.ecfg.step_retries + 1
+        for attempt in range(attempts):
+            if self.injector.fire("step"):
+                self.stats.step_errors += 1
+                if attempt + 1 >= attempts:
+                    raise fl.TransientStepError(
+                        f"injected step failure persisted through "
+                        f"{self.ecfg.step_retries} retries")
+                self.stats.step_retries += 1
+                if self.ecfg.retry_backoff_s:
+                    time.sleep(self.ecfg.retry_backoff_s * (2 ** attempt))
+                continue
+            return fn(*args)
 
     def _run_cow(self, pairs) -> None:
         """Execute host-decided copy-on-write page copies on device before
@@ -377,50 +471,80 @@ class ServeEngine:
         self.stats.cow_copies += len(pairs)
 
     def step(self) -> list[Completion]:
-        """Execute one scheduler decision; returns newly finished requests."""
+        """Execute one scheduler decision; returns newly finished requests
+        (any terminal status — OK completions and failures alike)."""
         self.stats.steps += 1
         decision = self.sched.next_decision()
         if decision is None:
-            return []  # only future arrivals remain; clock has advanced
+            # no executable work this tick (future arrivals, a voided
+            # decision, or a deferred admission); clock has advanced
+            return self._drain_finished()
+
+        if (isinstance(decision, PrefillChunk) and self.injector is not None
+                and self.injector.poisoned(decision.seq.rid)):
+            # poisoned request: fail at dispatch, before the device step
+            # runs or the COW copies execute (its dst pages are freed
+            # unread, so skipping the copies is safe — the pairs all
+            # belong to this one sequence)
+            self.sched.fail(decision.seq, sch.REASON_POISONED)
+            return self._drain_finished()
+
         self._run_cow(decision.cow)
+        try:
+            if isinstance(decision, PrefillChunk):
+                seq, start, length = (decision.seq, decision.start,
+                                      decision.length)
+                chunk = seq.prompt[start:start + length]
+                chunk = chunk + [0] * (self.ecfg.prefill_chunk - length)
+                pt = self.kv.page_table_array()[seq.slot:seq.slot + 1]
+                logits, self.cache = self._dispatch(
+                    self._prefill_fn, self.params,
+                    np.asarray([chunk], np.int32), self.cache,
+                    pt, np.int32(start), np.int32(length),
+                    np.int32(seq.slot), np.bool_(start == seq.resume_pos))
+                self.sched.completed_prefill(decision)
+                if not seq.prefilling:  # prompt done -> first token
+                    self.sched.append_token(seq, self._sample(
+                        np.asarray(logits[0])))
+            else:
+                assert isinstance(decision, DecodeBatch)
+                bmax = self.ecfg.max_batch
+                token = np.zeros((bmax,), np.int32)
+                kvl = np.zeros((bmax,), np.int32)
+                active = np.zeros((bmax,), bool)
+                for seq in decision.seqs:
+                    token[seq.slot] = seq.out_tokens[-1]
+                    kvl[seq.slot] = seq.kv_len - 1  # context written
+                    active[seq.slot] = True
+                logits, self.cache = self._dispatch(
+                    self._decode_fn, self.params, token, self.cache,
+                    self.kv.page_table_array(), kvl, active)
+                logits = np.asarray(logits)
+                for seq in decision.seqs:
+                    self.sched.append_token(
+                        seq, self._sample(logits[seq.slot]))
+        except fl.TransientStepError:
+            # retries exhausted: the device function never ran (injection
+            # precedes dispatch), so page state is consistent — fail the
+            # decision's requests and keep serving everyone else
+            doomed = ([decision.seq] if isinstance(decision, PrefillChunk)
+                      else list(decision.seqs))
+            for seq in doomed:
+                self.sched.fail(seq, sch.REASON_STEP_ERROR)
+        self.sched.retire_finished()
+        return self._drain_finished()
 
-        if isinstance(decision, PrefillChunk):
-            seq, start, length = (decision.seq, decision.start,
-                                  decision.length)
-            chunk = seq.prompt[start:start + length]
-            chunk = chunk + [0] * (self.ecfg.prefill_chunk - length)
-            pt = self.kv.page_table_array()[seq.slot:seq.slot + 1]
-            logits, self.cache = self._prefill_fn(
-                self.params, np.asarray([chunk], np.int32), self.cache,
-                pt, np.int32(start), np.int32(length), np.int32(seq.slot),
-                np.bool_(start == seq.resume_pos))
-            self.sched.completed_prefill(decision)
-            if not seq.prefilling:  # prompt done -> first generated token
-                self.sched.append_token(seq, self._sample(
-                    np.asarray(logits[0])))
-        else:
-            assert isinstance(decision, DecodeBatch)
-            bmax = self.ecfg.max_batch
-            token = np.zeros((bmax,), np.int32)
-            kvl = np.zeros((bmax,), np.int32)
-            active = np.zeros((bmax,), bool)
-            for seq in decision.seqs:
-                token[seq.slot] = seq.out_tokens[-1]
-                kvl[seq.slot] = seq.kv_len - 1  # context already written
-                active[seq.slot] = True
-            logits, self.cache = self._decode_fn(
-                self.params, token, self.cache,
-                self.kv.page_table_array(), kvl, active)
-            logits = np.asarray(logits)
-            for seq in decision.seqs:
-                self.sched.append_token(seq, self._sample(logits[seq.slot]))
-        return self._finish_retired()
+    def run(self, on_step=None) -> dict[int, Completion]:
+        """Drive until every submitted request reaches a terminal status.
 
-    def run(self) -> dict[int, Completion]:
-        """Drive until every submitted request completes."""
+        ``on_step(engine, step_index)``, when given, runs after every
+        engine step — the hook chaos tests and demos use to submit or
+        cancel mid-flight on a deterministic schedule."""
         t0 = time.time()
         while self.sched.has_work:
             self.step()
+            if on_step is not None:
+                on_step(self, self.stats.steps)
         jax.block_until_ready(self.cache)
         s, ss = self.stats, self.sched.stats
         s.wall_s = time.time() - t0
@@ -432,4 +556,15 @@ class ServeEngine:
         s.prefix_hit_tokens = ss.prefix_hit_tokens
         s.prefill_chunks_skipped = ss.prefill_chunks_skipped
         s.cached_page_evictions = self.kv.pool.cached_evictions
+        # request lifecycle (DESIGN.md §12)
+        s.cancelled, s.timeouts = ss.cancelled, ss.timeouts
+        s.rejected, s.failed = ss.rejected, ss.failed
+        s.quarantined = ss.quarantined
+        s.admission_deferrals = ss.admission_deferrals
+        s.p95_queue_wait_steps = ss.queue_wait_pct(95.0)
+        s.completed_ok = sum(1 for c in self.completions.values() if c.ok)
+        s.goodput_tokens = sum(len(c.tokens)
+                               for c in self.completions.values() if c.ok)
+        if self.injector is not None:
+            s.faults_injected = self.injector.total_injected
         return dict(self.completions)

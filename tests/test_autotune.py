@@ -56,6 +56,34 @@ def test_disk_cache_survives_process_state_reset(tmp_path):
     assert autotune.lookup(key) == autotune.TileConfig(bk=512)
 
 
+@pytest.mark.parametrize("payload", [
+    '{"half": {"tiles": {"bm": 64',       # truncated (interrupted writer)
+    "[1, 2, 3]",                          # parses, but root is not a dict
+    '{"key": 5}',                         # record is not an object
+    "\x00\xff garbage",                   # not JSON at all
+])
+def test_corrupt_disk_cache_quarantined_not_fatal(payload):
+    """A corrupt/truncated on-disk cache must never crash the kernels: it
+    is moved to ``.bak`` with a warning and tuning restarts empty."""
+    path = autotune.cache_path()
+    with open(path, "w") as f:
+        f.write(payload)
+    autotune.clear()
+    autotune._DISK_LOADED = False
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        assert autotune.lookup("whatever") is None  # triggers _load_disk
+    import os
+    assert not os.path.exists(path)        # bad file moved aside...
+    with open(path + ".bak") as f:
+        assert f.read() == payload         # ...preserved for post-mortem
+    # the cache is fully functional again: record writes a fresh file
+    key = autotune.make_key("op", rows=8, m=16, k=32)
+    autotune.record(key, autotune.TileConfig(bm=128), 1.0)
+    autotune.clear()
+    autotune._DISK_LOADED = False
+    assert autotune.lookup(key) == autotune.TileConfig(bm=128)
+
+
 def test_cache_disabled_with_empty_env(monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", "")
     assert autotune.cache_path() is None

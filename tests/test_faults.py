@@ -1,0 +1,419 @@
+"""Request-lifecycle robustness + deterministic fault injection
+(DESIGN.md §12).
+
+Three layers of coverage:
+
+* injector unit properties — schedules are pure functions of
+  ``(seed, site, occurrence)``, per-site independent, forceable;
+* host-only chaos property tests — random interleavings of
+  submit/cancel/timeout over injected alloc/COW failures with the
+  invariant watchdog on, asserting pool refcount conservation after
+  every decision, exactly one terminal status per request, and zero
+  leaked pages when the traffic drains;
+* model-backed parity — under injected faults, cancellations, poisoned
+  requests and recovered step retries, every request that finishes OK
+  emits the argmax-identical stream of the fault-free run, across the
+  paper's N-family and the int8/fp8 recipes; tp=2 subprocess runs replay
+  the identical fault schedule (host scheduling is shard-invariant) with
+  the prefix cache on and off.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from proptest import given, settings, strategies as st  # noqa: E402
+
+from repro.runtime import faults as fl
+from repro.runtime import scheduler as sch
+from repro.runtime.kv_cache import KVCacheManager, PagedKVConfig
+from repro.runtime.scheduler import (DecodeBatch, PrefillChunk, Request,
+                                     Scheduler)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ----------------------------------------------------------- injector
+def test_injector_schedule_is_deterministic_and_site_independent():
+    plan = fl.FaultPlan(seed=7, alloc_fail_rate=0.3, cow_fail_rate=0.2,
+                        step_error_rate=0.1)
+    a = fl.FaultInjector(plan)
+    b = fl.FaultInjector(plan)
+    # interleave sites differently in the two replays: per-site counters
+    # mean the alloc schedule cannot depend on fork/step traffic
+    sched_a = [a.fire("alloc") for _ in range(50)]
+    for _ in range(17):
+        b.fire("fork"), b.fire("step")
+    sched_b = [b.fire("alloc") for _ in range(50)]
+    assert sched_a == sched_b
+    assert any(sched_a) and not all(sched_a)  # rate is neither 0 nor 1
+    # a different seed produces a different schedule
+    c = fl.FaultInjector(dataclasses.replace(plan, seed=8))
+    assert [c.fire("alloc") for _ in range(50)] != sched_a
+
+
+def test_injector_forced_occurrences_and_poison():
+    inj = fl.FaultInjector(fl.FaultPlan(seed=0, alloc_fail_at=(0, 3),
+                                        poison_rids=(5,)))
+    assert [inj.fire("alloc") for _ in range(5)] == \
+        [True, False, False, True, False]
+    assert inj.injected["alloc"] == 2 and inj.total_injected == 2
+    assert inj.poisoned(5) and not inj.poisoned(6)
+    assert inj.poisoned_rids == {5}
+    assert "alloc=2/5" in inj.describe()
+    # poison_rate selects a deterministic rid subset
+    inj2 = fl.FaultInjector(fl.FaultPlan(seed=3, poison_rate=0.5))
+    picks = [inj2.poisoned(r) for r in range(40)]
+    assert picks == [fl.FaultInjector(fl.FaultPlan(seed=3, poison_rate=0.5))
+                     .poisoned(r) for r in range(40)]
+    assert any(picks) and not all(picks)
+
+
+def test_pool_alloc_injection_is_recoverable():
+    from repro.runtime.kv_cache import OutOfPages, PagePool
+
+    inj = fl.FaultInjector(fl.FaultPlan(seed=0, alloc_fail_at=(1,)))
+    pool = PagePool(4, injector=inj)
+    got = pool.alloc(2)
+    with pytest.raises(OutOfPages, match="injected"):
+        pool.alloc(1)
+    pool.check()                       # injection left the pool untouched
+    more = pool.alloc(2)               # retry succeeds (occurrence 2)
+    assert len(set(got) | set(more)) == 4
+    pool.free(got), pool.free(more)
+    pool.check()
+    assert pool.num_free == 4
+
+
+# --------------------------------------------------- host-only chaos
+def _chaos(seed: int, prefix_cache: bool) -> None:
+    """One randomized traffic storm: staggered submits with deadlines,
+    random cancels, injected alloc/COW failures, bounded queue, watchdog
+    on.  Asserts the §12 robustness contract end to end."""
+    rng = np.random.default_rng(seed)
+    plan = fl.FaultPlan(seed=seed, alloc_fail_rate=0.12,
+                        cow_fail_rate=0.10 if prefix_cache else 0.0)
+    inj = fl.FaultInjector(plan)
+    cfg = PagedKVConfig(page_size=4, num_pages=int(rng.integers(8, 14)),
+                        max_batch=int(rng.integers(2, 4)), max_seq_len=32)
+    kv = KVCacheManager(cfg, namespace="chaos", injector=inj)
+    sched = Scheduler(kv, prefill_chunk=int(rng.integers(4, 9)),
+                      prefix_cache=prefix_cache, max_queue=3, watchdog=True)
+
+    shared = rng.integers(0, 100, size=8).tolist()  # two full shared pages
+    n_req = int(rng.integers(4, 9))
+    rejected_at_submit = set()
+    for rid in range(n_req):
+        prompt = (shared if prefix_cache and rng.integers(0, 2) else []) \
+            + rng.integers(0, 100, size=int(rng.integers(1, 10))).tolist()
+        req = Request(rid=rid, prompt=prompt,
+                      max_new_tokens=int(rng.integers(1, 6)),
+                      arrival=int(rng.integers(0, 6)))
+        if rng.integers(0, 3) == 0:
+            req.deadline_step = req.arrival + int(rng.integers(1, 25))
+        if sched.submit(req) is not None:
+            rejected_at_submit.add(rid)
+
+    terminal: dict[int, str] = {}
+    guard = 0
+    while sched.has_work:
+        guard += 1
+        assert guard < 5000, "scheduler livelock under chaos"
+        d = sched.next_decision()
+        kv.check()  # refcount conservation after EVERY decision (§12)
+        if d is not None:
+            if isinstance(d, PrefillChunk):
+                sched.completed_prefill(d)
+                if not d.seq.prefilling:
+                    d.seq and sched.append_token(
+                        d.seq, int(rng.integers(0, 100)))
+            else:
+                assert isinstance(d, DecodeBatch) and d.seqs
+                for seq in d.seqs:
+                    sched.append_token(seq, int(rng.integers(0, 100)))
+        sched.retire_finished()
+        # client cancellation lands between steps (engine ``on_step``)
+        if rng.integers(0, 6) == 0:
+            live = [s.rid for s in sched.running] + \
+                [r.rid for r in sched.waiting]
+            if live:
+                sched.cancel(int(live[int(rng.integers(len(live)))]))
+                kv.check()
+        for fin in sched.take_finished():
+            assert fin.rid not in terminal, \
+                f"request r{fin.rid} finished twice"
+            terminal[fin.rid] = fin.status
+    # every submitted request reached exactly one terminal status
+    assert set(terminal) == set(range(n_req))
+    assert all(terminal[r] == sch.REJECTED for r in rejected_at_submit)
+    assert set(terminal.values()) <= {sch.OK, sch.TIMEOUT, sch.CANCELLED,
+                                      sch.REJECTED, sch.FAILED}
+    # no corruption was injected, so the watchdog quarantined nothing and
+    # every page returned to free/cached — zero leaks
+    kv.check()
+    assert sched.stats.quarantined == 0
+    assert kv.pool.num_free + kv.pool.num_cached == cfg.num_pages
+    for slot in range(cfg.max_batch):
+        assert not kv.slot_pages(slot)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.booleans())
+def test_chaos_interleavings_never_crash_or_leak(seed, prefix_cache):
+    _chaos(seed, prefix_cache)
+
+
+def test_deadline_taxonomy_wall_clock_and_steps():
+    cfg = PagedKVConfig(page_size=4, num_pages=16, max_batch=2,
+                        max_seq_len=32)
+    fake_now = [0.0]
+    sched = Scheduler(KVCacheManager(cfg), prefill_chunk=4,
+                      time_fn=lambda: fake_now[0])
+    sched.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8,
+                         deadline_step=2))
+    sched.submit(Request(rid=1, prompt=[4, 5, 6], max_new_tokens=8,
+                         deadline_t=5.0))
+    for _ in range(3):
+        d = sched.next_decision()
+        if isinstance(d, PrefillChunk):
+            sched.completed_prefill(d)
+            if not d.seq.prefilling:
+                sched.append_token(d.seq, 7)
+        elif isinstance(d, DecodeBatch):
+            for seq in d.seqs:
+                sched.append_token(seq, 7)
+    fake_now[0] = 10.0  # wall clock jumps past r1's deadline
+    while sched.has_work:
+        sched.next_decision()
+    fins = {f.rid: f for f in sched.take_finished()}
+    assert fins[0].status == sch.TIMEOUT
+    assert fins[0].reason == sch.REASON_MAX_STEPS
+    assert fins[1].status == sch.TIMEOUT
+    assert fins[1].reason == sch.REASON_DEADLINE
+    assert fins[0].tokens or fins[1].tokens, "partial streams were dropped"
+    assert sched.stats.timeouts == 2
+    sched.kv.check()
+    assert sched.kv.pool.num_free == cfg.num_pages
+
+
+def test_watchdog_quarantines_corrupt_slot_and_engine_survives():
+    """Deliberate bookkeeping corruption: the watchdog must attribute it,
+    quarantine the offending request's pages out of circulation, and keep
+    the check()-able invariant for the survivors."""
+    cfg = PagedKVConfig(page_size=4, num_pages=16, max_batch=2,
+                        max_seq_len=32)
+    kv = KVCacheManager(cfg)
+    sched = Scheduler(kv, prefill_chunk=8, watchdog=True)
+    sched.submit(Request(rid=0, prompt=[1] * 6, max_new_tokens=4))
+    sched.submit(Request(rid=1, prompt=[2] * 6, max_new_tokens=4))
+    while len(sched.running) < 2:
+        d = sched.next_decision()
+        if isinstance(d, PrefillChunk):
+            sched.completed_prefill(d)
+            if not d.seq.prefilling:
+                sched.append_token(d.seq, 3)
+    corrupt = next(s for s in sched.running if s.rid == 0)
+    kv.pool._ref[kv.slot_pages(corrupt.slot)[0]] += 1  # refcount drift
+    while sched.has_work:
+        d = sched.next_decision()   # watchdog fires here, nobody raises
+        kv.check()                  # invariants hold after containment
+        if isinstance(d, PrefillChunk):
+            sched.completed_prefill(d)
+            if not d.seq.prefilling:
+                sched.append_token(d.seq, 3)
+        elif isinstance(d, DecodeBatch):
+            for seq in d.seqs:
+                sched.append_token(seq, 3)
+        sched.retire_finished()
+    fins = {f.rid: f for f in sched.take_finished()}
+    assert fins[0].status == sch.FAILED
+    assert fins[0].reason == sch.REASON_INVARIANT
+    assert fins[1].status == sch.OK
+    assert sched.stats.quarantined == 1
+    assert kv.pool.num_quarantined >= 1
+    assert any("quarantine r0" in t for t in sched.trace)
+    # the innocent sibling still drained; pool partition holds with the
+    # quarantined pages permanently out of circulation
+    kv.check()
+    assert kv.pool.num_free + kv.pool.num_cached + \
+        kv.pool.num_quarantined == cfg.num_pages
+
+
+def test_bounded_queue_priority_shed():
+    cfg = PagedKVConfig(page_size=4, num_pages=16, max_batch=1,
+                        max_seq_len=32)
+    sched = Scheduler(KVCacheManager(cfg), prefill_chunk=4,
+                      policy=sch.PriorityPolicy(), max_queue=2)
+    assert sched.submit(Request(rid=0, prompt=[1], max_new_tokens=1,
+                                priority=1, arrival=99)) is None
+    assert sched.submit(Request(rid=1, prompt=[1], max_new_tokens=1,
+                                priority=5, arrival=99)) is None
+    # queue full: a high-priority newcomer sheds the lowest-priority
+    # queued request; a low-priority newcomer is rejected itself
+    assert sched.submit(Request(rid=2, prompt=[1], max_new_tokens=1,
+                                priority=3, arrival=99)) is None
+    assert sched.submit(Request(rid=3, prompt=[1], max_new_tokens=1,
+                                priority=0, arrival=99)) \
+        == sch.REASON_QUEUE_FULL
+    fins = {f.rid: f for f in sched.take_finished()}
+    assert fins[0].reason == sch.REASON_SHED      # rid0 (prio 1) shed
+    assert fins[3].reason == sch.REASON_QUEUE_FULL
+    assert {r.rid for r in sched.waiting} == {1, 2}
+    assert sched.stats.shed == 1 and sched.stats.rejected == 2
+
+
+# ------------------------------------------------- model-backed parity
+def _mini_cfg(n: int, recipe: str):
+    from repro.configs import registry
+    from repro.core.linear import SparsityConfig
+
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, d_model=48, num_heads=4,
+                               num_kv_heads=2, head_dim=12, num_layers=2)
+    z, l = 2 * n - 2, 2 * n
+    return base, dataclasses.replace(base, sparsity=SparsityConfig(
+        pattern=(z, l), mode="compressed", recipe=recipe))
+
+
+@pytest.mark.parametrize("n,recipe", [(2, "int8"), (3, "fp8"), (4, "int8")])
+def test_fault_parity_unaffected_requests_identical(n, recipe):
+    """Under injected alloc failures, a recovered step retry, one poisoned
+    request and a mid-flight cancellation, every request that still
+    finishes OK is argmax-identical to the fault-free run; terminal pages
+    balance."""
+    import jax
+    from repro.models import model as M
+    from repro.runtime import serve_loop
+
+    base, cfg = _mini_cfg(n, recipe)
+    params = serve_loop.pack_params(M.init(base, jax.random.PRNGKey(0)), cfg)
+    rng = np.random.default_rng(n)
+    prompts = [rng.integers(0, cfg.vocab_size, size=k).tolist()
+               for k in (5, 9, 7, 11)]
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=6)
+
+    def drive(plan, cancel_at):
+        eng = serve_loop.ServeEngine(
+            params, cfg, dataclasses.replace(ecfg, faults=plan))
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6, rid=i, arrival=i)
+
+        def on_step(e, k):
+            if k in cancel_at:
+                e.cancel(cancel_at[k])
+        return eng.run(on_step=on_step), eng
+
+    clean, _ = drive(None, {})
+    assert all(c.ok for c in clean.values())
+
+    plan = fl.FaultPlan(seed=n, alloc_fail_at=(2, 5),
+                        step_error_at=(4,),   # one retry recovers it
+                        poison_rids=(2,))
+    faulty, eng = drive(plan, {8: 1})         # cancel r1 mid-flight
+    assert set(faulty) == set(clean)
+    assert faulty[2].status == sch.FAILED
+    assert faulty[2].reason == sch.REASON_POISONED
+    assert faulty[1].status in (sch.CANCELLED, sch.OK)  # may finish first
+    assert eng.stats.step_retries == 1        # the step error recovered
+    assert eng.stats.faults_injected >= 3
+    for rid, comp in faulty.items():
+        if comp.ok:   # unaffected -> argmax-identical stream
+            assert comp.tokens == clean[rid].tokens, rid
+        else:         # affected -> a prefix of the fault-free stream
+            k = len(comp.tokens)
+            assert comp.tokens == clean[rid].tokens[:k], rid
+    # no page leaked despite faults, cancel and poison
+    eng.kv.check()
+    assert eng.kv.pool.num_free + eng.kv.pool.num_cached \
+        == ecfg.num_pages
+    assert eng.stats.failed >= 1
+
+
+def test_step_error_exhaustion_fails_request_not_engine():
+    import jax
+    from repro.models import model as M
+    from repro.runtime import serve_loop
+
+    base, cfg = _mini_cfg(2, "int8")
+    params = serve_loop.pack_params(M.init(base, jax.random.PRNGKey(0)), cfg)
+    rng = np.random.default_rng(0)
+    ecfg = serve_loop.EngineConfig(
+        max_batch=2, page_size=4, num_pages=24, max_seq_len=32,
+        prefill_chunk=6, step_retries=1,
+        faults=fl.FaultPlan(seed=0, step_error_at=(0, 1)))  # 1st step dies
+    eng = serve_loop.ServeEngine(params, cfg, ecfg)
+    eng.submit(rng.integers(0, cfg.vocab_size, size=5).tolist(), 4, rid=0)
+    eng.submit(rng.integers(0, cfg.vocab_size, size=5).tolist(), 4, rid=1)
+    out = eng.run()
+    assert out[0].status == sch.FAILED
+    assert out[0].reason == sch.REASON_STEP_ERROR
+    assert out[1].status == sch.OK and len(out[1].tokens) == 4
+    assert eng.stats.step_errors == 2
+    eng.kv.check()
+    assert eng.kv.pool.num_free == ecfg.num_pages
+
+
+# --------------------------------------------------- tp=2 subprocess
+def _run(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_tp2_fault_schedule_replicates_prefix_cache_on_and_off():
+    """Host-side scheduling (and therefore the deterministic fault
+    schedule) is identical at tp=1 and tp=2: same statuses, same reasons,
+    same token streams, with the prefix cache on and off."""
+    _run("""
+    import dataclasses, numpy as np, jax
+    from repro.configs import registry
+    from repro.core.linear import SparsityConfig
+    from repro.models import model as M
+    from repro.runtime import faults as fl
+    from repro.runtime import serve_loop
+
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, num_layers=2)
+    cfg = dataclasses.replace(base, sparsity=SparsityConfig(
+        pattern=(6, 8), mode="compressed"))
+    params = serve_loop.pack_params(M.init(base, jax.random.PRNGKey(0)), cfg)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    prompts = [shared + rng.integers(0, cfg.vocab_size, size=k).tolist()
+               for k in (3, 7, 5)]
+    plan = fl.FaultPlan(seed=11, alloc_fail_at=(3,), poison_rids=(2,))
+
+    def drive(tp, prefix):
+        ecfg = serve_loop.EngineConfig(
+            max_batch=2, page_size=4, num_pages=24, max_seq_len=32,
+            prefill_chunk=6, tp=tp, prefix_cache=prefix, faults=plan)
+        eng = serve_loop.ServeEngine(params, cfg, ecfg)
+        for i, p in enumerate(prompts):
+            eng.submit(p, 4, rid=i, arrival=i)
+
+        def on_step(e, k):
+            if k == 7:
+                e.cancel(1)
+        out = eng.run(on_step=on_step)
+        eng.kv.check()
+        return {i: (out[i].status, out[i].reason, tuple(out[i].tokens))
+                for i in out}
+
+    for prefix in (False, True):
+        o1 = drive(1, prefix)
+        o2 = drive(2, prefix)
+        assert o1 == o2, (prefix, o1, o2)
+        assert o1[2][:2] == ("FAILED", "poisoned"), o1
+        print("prefix_cache=%s OK %s" % (prefix, sorted(o1)))
+    """)

@@ -19,7 +19,7 @@ from proptest import given, settings, strategies as st
 from repro.configs import registry
 from repro.core.linear import SparsityConfig
 from repro.models import model as M
-from repro.runtime import serve_loop
+from repro.runtime import scheduler, serve_loop
 from repro.runtime.kv_cache import (KVCacheManager, OutOfPages,
                                     PagedKVConfig, PagePool)
 from repro.runtime.scheduler import (DecodeBatch, PrefillChunk, Request,
@@ -142,10 +142,27 @@ def test_scheduler_eviction_requeues_and_completes():
 
 
 def test_scheduler_rejects_oversized_request():
-    cfg = PagedKVConfig(page_size=4, num_pages=8, max_batch=2, max_seq_len=16)
-    sched = Scheduler(KVCacheManager(cfg))
-    with pytest.raises(ValueError):
-        sched.submit(Request(rid=0, prompt=[0] * 10, max_new_tokens=10))
+    # typed rejection, never an exception (DESIGN.md §12): both the
+    # max_seq_len cap and total-pool-capacity overflow reject up front
+    # (the latter used to spin the evict-retry path forever)
+    for cfg, prompt, mnt in [
+        # exceeds max_seq_len
+        (PagedKVConfig(page_size=4, num_pages=8, max_batch=2,
+                       max_seq_len=16), [0] * 10, 10),
+        # fits max_seq_len but demands 6 pages from a 4-page pool — used
+        # to spin the evict-retry path forever
+        (PagedKVConfig(page_size=4, num_pages=4, max_batch=2,
+                       max_seq_len=64), [0] * 20, 4),
+    ]:
+        sched = Scheduler(KVCacheManager(cfg))
+        reason = sched.submit(Request(rid=0, prompt=prompt,
+                                      max_new_tokens=mnt))
+        assert reason == scheduler.REASON_EXCEEDS_CAPACITY
+        assert not sched.has_work  # never enqueued — cannot wedge the loop
+        (fin,) = sched.take_finished()
+        assert fin.status == scheduler.REJECTED
+        assert fin.reason == scheduler.REASON_EXCEEDS_CAPACITY
+        assert sched.stats.rejected == 1
 
 
 @settings(max_examples=25, deadline=None)

@@ -17,8 +17,16 @@
 #    --tp 2 on 4 forced host devices — sharded weights, head-parallel
 #    pages — still parity-checked against the dense reference.
 # 5. Precision-recipe smokes ride step 3's engine path (fp8 + w4).
-# 6. API-docs drift check: docs/api.md must match what
+# 6. Fault-injection smoke (DESIGN.md §12): deterministic injected
+#    allocation failures + step errors + seeded cancellations with the
+#    invariant watchdog on — the engine must degrade per-request (typed
+#    statuses), keep page accounting exact, and every surviving stream
+#    stays parity-checked (OK exact, non-OK prefix of the reference).
+# 7. API-docs drift check: docs/api.md must match what
 #    tools/gen_api_docs.py generates from the live docstrings.
+#
+# The pytest run is wrapped in a hard timeout so a wedged scheduler (the
+# failure mode §12 exists to prevent) fails CI fast instead of hanging it.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -47,8 +55,17 @@ XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 timeout 300 python examples/serve_batched.py --engine --tp 2 --requests 3 \
     --batch 2 --prompt-len 16 --new-tokens 6
 
+# fault-injection smoke (DESIGN.md §12): seeded alloc failures + step
+# errors + a 20% cancellation schedule under the invariant watchdog;
+# the demo asserts kv.check() and status-typed parity with the dense
+# reference, so a crash, leak, or corrupted survivor fails CI here
+timeout 300 python examples/serve_batched.py --engine --inject-faults 1234 \
+    --cancel-frac 0.2 --watchdog --requests 5 --batch 2 --prompt-len 16 \
+    --new-tokens 6
+
 python tools/gen_api_docs.py --check
 
-python -m pytest -q
+# global timeout: a wedged scheduler must fail fast, not hang CI
+timeout 2400 python -m pytest -q
 
 echo "ci.sh: OK"
