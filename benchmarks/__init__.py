@@ -1,0 +1,3 @@
+"""Benchmark harness package (DESIGN.md §7/§13): ``run`` drives the
+paper-table benches and the perf diff gate; ``roofline`` prices each bench
+row's kernels analytically so every row carries roofline_us/efficiency."""

@@ -1,0 +1,55 @@
+"""Roofline pricing for the benchmark rows (DESIGN.md §13).
+
+Computes analytic bytes/flops per kernel from shapes + precision recipe —
+dense GEMM, compressed (decompress-once) GEMM, fused quant+slide, the
+single-pass fused GEMM vs its two-kernel baseline, paged-attention decode
+and COW page copies — with the 'w4' nibble-packed half-byte weight widths
+and the lifted-activation HBM savings of the single-pass kernel included.
+
+The per-kernel cost formulas live in :mod:`repro.kernels.roofline` (the
+autotuner prunes tile candidates with the same model); this module adds
+the harness-facing conveniences:
+
+* ``Cost``/``roofline_us``/``efficiency``/``peaks`` re-exports — every
+  BENCH row carries ``roofline_us`` (the machine-calibrated analytic
+  floor) and ``efficiency`` (floor / measured, in (0, 1]; > 1 flags a
+  broken model or a mis-measured kernel).
+* ``serve_decode_cost`` — the nominal per-decode-step bound for engine
+  rows: full weight streaming + paged K/V traffic of the active batch.
+
+``peaks()`` is calibrated once per process on the executing host and is
+persisted in each BENCH json's config block, so the diff gate
+(``benchmarks.run --diff``) can scale its tolerances when the baseline
+and the candidate ran on machines (or load levels) of different speed.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.roofline import (  # noqa: F401  (re-exported surface)
+    Cost, Peaks, compressed_k, compressed_matmul, cow_copy, dense_gemm,
+    efficiency, fused_quant_slide, fused_slided_matmul, itemsize, lifted_k,
+    measure_peaks, paged_attention_decode, peaks, quant_matmul, roofline_us,
+    two_kernel)
+
+
+def tree_bytes(tree) -> float:
+    """Total device bytes of a parameter / KV-cache pytree."""
+    return float(sum(x.size * x.dtype.itemsize
+                     for x in jax.tree_util.tree_leaves(tree)
+                     if hasattr(x, "size")))
+
+
+def serve_decode_cost(params, cache, batch: int, kv_len: int,
+                      num_pages: int, page_size: int) -> Cost:
+    """Nominal analytic floor of ONE engine decode step: every weight
+    byte streams once (memory-bound decode) plus the paged K/V bytes of
+    ``batch`` sequences at ``kv_len`` context.  Engine bench rows divide
+    wall clock by *all* steps (prefill chunks included), so their
+    efficiency is a nominal, trend-tracking number — not a per-kernel
+    bound (DESIGN.md §13)."""
+    pb = tree_bytes(params)
+    cb = tree_bytes(cache)
+    per_token = cb / max(num_pages * page_size, 1)
+    # ~2 flops per weight element (fp32 params) per sequence in the batch
+    return Cost(pb + batch * kv_len * per_token, 2.0 * (pb / 4.0) * batch)

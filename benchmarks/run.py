@@ -6,12 +6,32 @@ the *derived* column carries the paper-comparable quantity (expansion
 factor, theoretical/analytic speedup, byte ratios, roofline terms).  The
 DESIGN.md §7 experiment index maps each benchmark to its paper source.
 
-Run:  PYTHONPATH=src python -m benchmarks.run [filter_substring]
+Every row additionally carries ``roofline_us`` and ``efficiency``
+(DESIGN.md §13): the analytic bytes/flops floor of the row's kernel on the
+calibrated machine (``benchmarks.roofline``), and floor/measured.  Rows
+with no modeled kernel (pure-analytic tables) carry zeros.
+
+Timing discipline: ``_time`` blocks on the warmup call (compile AND
+first-execution one-time costs stay outside the window — an unblocked
+warmup once billed a ~35ms deferred fp8 first-exec cost into the fused
+kernel's reps and manufactured a 9x phantom regression) and reports
+best-of-reps, not mean (a single descheduling spike must not move a
+committed baseline).
+
+Run:   PYTHONPATH=src python -m benchmarks.run [filter ...]
+Diff:  PYTHONPATH=src python -m benchmarks.run [filter ...] --diff
+       compares the fresh rows against the newest committed BENCH_*.json
+       (or an explicit baseline path) and exits 1 on regressions beyond
+       tolerance — >20% kernel time, >10% decode tok/s — after scaling by
+       the two runs' machine-speed calibrations (DESIGN.md §13).
 """
 from __future__ import annotations
 
+import argparse
+import glob
 import json
 import os
+import re
 import sys
 import time
 
@@ -22,27 +42,56 @@ import jax.numpy as jnp
 from repro.core import (Pattern, SlideDecomposition, TWO_FOUR, family_table,
                         prune_to_pattern, pack_slided, compress,
                         quantize_int8, quantize_weight_int8_rowwise)
+from repro.core import precision as precision_mod
 from repro.core import slide
 from repro.kernels import ops, ref
 
-ROWS: list[tuple[str, float, str, str]] = []
+from benchmarks import roofline as rl
+
+ROWS: list[dict] = []
+
+# below this, a baseline row is launch/python jitter, not kernel time —
+# the diff gate does not compare it
+DIFF_US_FLOOR = 50.0
 
 
-def emit(name: str, us: float, derived: str, precision: str = "fp32"):
-    """``precision`` names the recipe (DESIGN.md §10) a row executed at
-    ('fp32' for float-math rows) — recorded in the BENCH_*.json rows so
-    the perf trajectory can be sliced per precision."""
-    ROWS.append((name, us, derived, precision))
+def emit(name: str, us: float, derived: str, precision: str | None = None,
+         cost: "rl.Cost | None" = None):
+    """Record one bench row.
+
+    ``precision`` is normalized through ``core.precision.resolve`` so
+    every BENCH row carries a RECIPES name (none/int8/fp8/w4/fp8w4) the
+    diff mode can key on — float-math rows pass None and record 'none'
+    (the registry's float recipe); an unknown label raises here, at the
+    bench, instead of corrupting the committed baseline.  ``cost`` is the
+    row's analytic roofline cost; when given the row carries the
+    machine-calibrated ``roofline_us`` floor and its ``efficiency``.
+    """
+    prec = precision_mod.resolve(precision if precision else None).name
+    roof_us = rl.roofline_us(cost) if cost is not None else 0.0
+    eff = roof_us / us if us > 0 and roof_us > 0 else 0.0
+    ROWS.append({"name": name, "us_per_call": us, "derived": derived,
+                 "precision": prec, "roofline_us": roof_us,
+                 "efficiency": eff})
     print(f"{name},{us:.2f},{derived}")
 
 
 def _time(fn, *args, reps=5, **kw):
-    fn(*args, **kw)  # compile/warmup
-    t0 = time.perf_counter()
+    """Best-of-``reps`` wall clock with a BLOCKED warmup call.
+
+    The warmup must block: jax dispatch is async, so an unblocked warmup
+    lets compile/first-execution one-time costs (XLA:CPU lazily finalizes
+    some codepaths — e4m3 notably — on the first run of a new executable)
+    land inside the measured window.  Best-of, not mean: one-time costs
+    and scheduler noise skew means; the minimum estimates the steady
+    state the roofline model prices."""
+    jax.block_until_ready(fn(*args, **kw))  # compile + first-exec warmup
+    best = float("inf")
     for _ in range(reps):
-        out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 # ---------------------------------------------------------------- tables
@@ -84,7 +133,10 @@ def bench_packer_throughput():
     packed = jax.jit(lambda a: pack_slided(a, dec))
     us = _time(packed, w)
     mbs = w.size * 4 / (us / 1e6) / 1e6
-    emit("packer_throughput[1024x4096]", us, f"MB/s={mbs:.0f}")
+    gamma = float(dec.gamma)
+    # read W fp32, write the gamma-expanded slided layout fp32
+    cost = rl.Cost(w.size * 4.0 * (1.0 + gamma), 2.0 * w.size)
+    emit("packer_throughput[1024x4096]", us, f"MB/s={mbs:.0f}", cost=cost)
 
 
 def bench_fused_pipeline():
@@ -92,16 +144,25 @@ def bench_fused_pipeline():
     prologue) vs the two-kernel fused_quant_slide -> quant_matmul pipeline,
     swept over the precision recipes (int8 / fp8 / w4).
 
-    The derived column carries the HBM-bytes model per call: the two-kernel
-    path round-trips the lifted gamma*K activations through HBM (one
-    write + one read) that the fused kernel eliminates entirely, and the
-    'w4' recipe additionally halves the weight bytes (nibble-packed int4).
-    Timings are interpret-mode (CPU) and exercise both kernel bodies.
+    The derived column carries the analytic HBM-bytes model per call
+    (``benchmarks.roofline``): the two-kernel path round-trips the lifted
+    gamma*K activations through HBM (one write + one read) that the fused
+    kernel eliminates entirely, and the 'w4' recipe additionally halves
+    the weight bytes (nibble-packed int4).  Timings are interpret-mode
+    (CPU) and exercise both kernel bodies.
+
+    Regression lock (ISSUE 7): at every swept shape the fused kernel must
+    run within 1.2x of its own two-kernel baseline — the committed
+    "fused fp8 9x slower at R=64" row was a harness artifact (an
+    unblocked warmup let a one-time ~35ms fp8 first-exec cost land in a
+    mean-of-3 window), and this assert keeps both the kernels and the
+    harness honest.
     """
     from repro.core.precision import RECIPES
     from repro.core.packer import pack_nibbles
 
     dec = SlideDecomposition(Pattern(6, 8), TWO_FOUR)
+    n_fam = dec.source.family_n
     gamma = float(dec.gamma)
     rng = np.random.default_rng(0)
     for rows, k, m in ((64, 256, 128), (256, 512, 512)):
@@ -133,21 +194,24 @@ def bench_fused_pipeline():
                                             use_pallas=True, interpret=True)
 
                 us_two = _time(two_kernel, x, reps=3)
-            wb = 0.5 if rec.packed_weights else 1.0  # bytes per weight elt
-            wbytes = m * gamma * k * wb + m * 4      # Phi(W) + s_w
-            ybytes = rows * m * 4
-            common = rows * k * 4 + wbytes + ybytes  # read X, W; write Y
-            lifted = rows * gamma * k + rows * 4     # Psi(q) 1B/elt + scale
-            bytes_two = common + 2 * lifted          # write + re-read
-            bytes_fused = common                     # lifted stays in VMEM
-            derived = (f"hbm_bytes_fused={bytes_fused:.0f};"
-                       f"hbm_bytes_two_kernel={bytes_two:.0f};"
-                       f"bytes_saved_ratio={bytes_two / bytes_fused:.3f};"
-                       f"weight_bytes={wbytes:.0f};gamma={gamma}")
+            cost_fused = rl.fused_slided_matmul(rows, k, m, n_fam, rec)
+            cost_two = rl.two_kernel(rows, k, m, n_fam, rec)
+            derived = (f"hbm_bytes_fused={cost_fused.bytes:.0f};"
+                       f"hbm_bytes_two_kernel={cost_two.bytes:.0f};"
+                       f"bytes_saved_ratio="
+                       f"{cost_two.bytes / cost_fused.bytes:.3f};"
+                       f"gamma={gamma}")
             if us_two is not None:
-                derived += f";us_two_kernel={us_two:.2f}"
+                derived += (f";us_two_kernel={us_two:.2f}"
+                            f";fused_vs_two={us_fused / us_two:.3f}")
+                if us_fused > 1.2 * us_two:
+                    raise AssertionError(
+                        f"fused_pipeline[R={rows},K={k},M={m},{name}]: "
+                        f"fused {us_fused:.0f}us > 1.2x two-kernel "
+                        f"{us_two:.0f}us — the single-pass kernel must not "
+                        "lose to the pipeline it exists to beat (ISSUE 7)")
             emit(f"fused_pipeline[R={rows},K={k},M={m},{name}]", us_fused,
-                 derived, precision=name)
+                 derived, precision=name, cost=cost_fused)
 
 
 def bench_fused_kernel_overhead():
@@ -155,6 +219,7 @@ def bench_fused_kernel_overhead():
     +29-53% store-overhead model.  Derived: bytes ratio (the model) and the
     measured interpret-mode ratio."""
     dec = SlideDecomposition(Pattern(6, 8), TWO_FOUR)
+    n_fam = dec.source.family_n
     for m in (256, 2048):
         k = 4096
         x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
@@ -167,7 +232,8 @@ def bench_fused_kernel_overhead():
         bytes_ratio = (k * 4 + gamma * k) / (k * 4 + k)
         emit(f"fused_quant_slide_overhead[M={m}]", us_qs,
              f"measured_ratio={us_qs / us_q:.3f};"
-             f"model_bytes_ratio={bytes_ratio:.3f};gamma={gamma}")
+             f"model_bytes_ratio={bytes_ratio:.3f};gamma={gamma}",
+             precision="int8", cost=rl.fused_quant_slide(m, k, n_fam))
 
 
 def bench_kernel_speedup_model(square_sizes=(512, 2048)):
@@ -178,6 +244,7 @@ def bench_kernel_speedup_model(square_sizes=(512, 2048)):
     compressed matmul vs dense."""
     for pat in ((4, 6), (6, 8), (8, 10)):
         dec = SlideDecomposition(Pattern(*pat), TWO_FOUR)
+        n_fam = dec.source.family_n
         z, l = pat
         for mm in square_sizes:
             k = mm - (mm % l) if mm % l else mm
@@ -191,13 +258,13 @@ def bench_kernel_speedup_model(square_sizes=(512, 2048)):
             us_dense = _time(dense, x, w)
             us_comp = _time(lambda a: ops.compressed_matmul(
                 a, c, use_pallas=False), x)
-            meta_ratio = 2 / 8 / 8  # 2 bits per int8 weight byte... per elem
             wbytes = float(dec.source.density) + 0.25 / 2  # values + 2-bit/bf16
             emit(f"kernel_speedup[{z}:{l},M={mm}]", us_comp,
                  f"gpu_theory_s_eff={float(dec.s_eff):.3f};"
                  f"tpu_flop_ratio=1.0;"
                  f"tpu_weight_bytes_ratio={wbytes:.3f};"
-                 f"cpu_measured_vs_dense={us_dense / us_comp:.3f}")
+                 f"cpu_measured_vs_dense={us_dense / us_comp:.3f}",
+                 cost=rl.compressed_matmul(mm, k, mm, n_fam))
 
 
 def bench_decode_memory_model():
@@ -241,7 +308,8 @@ def bench_algorithmic_efficiency():
         r_theory = 0.5 / float(dec.source.density)
         eff = (s_zl / s24) / r_theory
         emit(f"algorithmic_efficiency[{pat[0]}:{pat[1]}]", us,
-             f"R_theory={r_theory:.4f};cpu_efficiency={eff:.2f}")
+             f"R_theory={r_theory:.4f};cpu_efficiency={eff:.2f}",
+             cost=rl.compressed_matmul(mm, k, mm, dec.source.family_n))
 
 
 def bench_e2e_speedup_model():
@@ -302,9 +370,15 @@ def bench_serve():
     prefix_hit_rate / prefill_chunks_skipped economics.  Timings are CPU
     interpret-scale — the comparable quantities are occupancy (scheduler
     quality) and the token accounting.
-    """
-    import dataclasses as dc
 
+    Every engine is ``warmup()``-ed before its measured window: the step
+    functions are per-engine jit closures, so an unwarmed run bills ~1s
+    of compile into ``wall_s`` and decode_tok_s measures compile time —
+    the committed "prefix cache halves decode throughput" regression was
+    exactly this accounting bug (cow_copies was 0; no device work
+    differed).  The cache-on row must now hold >= 0.9x the cache-off
+    decode rate, asserted below (ISSUE 7).
+    """
     from repro.configs import registry
     from repro.models import model as M
     from repro.runtime import serve_loop
@@ -330,10 +404,14 @@ def bench_serve():
                 max_batch=max_batch, page_size=8, num_pages=32,
                 max_seq_len=32, prefill_chunk=8, tp=ntp)
             eng = serve_loop.ServeEngine(params, cfg, ecfg)
+            eng.warmup()
             for i, p in enumerate(prompts):
                 eng.submit(p, new_tokens, rid=i, arrival=i)
             eng.run()
             s = eng.stats
+            cost = rl.serve_decode_cost(eng.params, eng.cache, max_batch,
+                                        ecfg.max_seq_len, ecfg.num_pages,
+                                        ecfg.page_size)
             emit(f"serve_engine[b{max_batch}x{len(prompts)}req,tp{ntp}]",
                  s.wall_s / max(s.steps, 1) * 1e6,
                  f"tp={s.tp};"
@@ -344,9 +422,10 @@ def bench_serve():
                  f"decode_tokens={s.decode_tokens};"
                  f"prefill_tokens={s.prefill_tokens};"
                  f"evictions={s.evictions};"
+                 f"warmup_s={s.warmup_s:.2f};"
                  f"kv_tokens_per_shard="
                  f"{ecfg.kv_config().per_shard_page_tokens}",
-                 precision=s.precision)
+                 precision=s.precision, cost=cost)
 
     # shared-prefix workload (DESIGN.md §11): a common system prompt across
     # requests, engine run with the radix prefix cache off vs on — the
@@ -355,17 +434,23 @@ def bench_serve():
     sys_prompt = rng.integers(0, cfg.vocab_size, size=16).tolist()
     sprompts = [sys_prompt + rng.integers(0, cfg.vocab_size, size=6).tolist()
                 for _ in range(4)]
+    tok_s = {}
     for cache_on in (False, True):
         ecfg = serve_loop.EngineConfig(
             max_batch=4, page_size=8, num_pages=32, max_seq_len=40,
             prefill_chunk=8, prefix_cache=cache_on)
         eng = serve_loop.ServeEngine(params, cfg, ecfg)
+        eng.warmup()
         for i, p in enumerate(sprompts):
             eng.submit(p, new_tokens, rid=i, arrival=4 * i)
         eng.run()
         s, ss = eng.stats, eng.sched.stats
+        tok_s[cache_on] = s.decode_tok_s
         skip_frac = s.prefill_chunks_skipped / max(
             s.prefill_chunks_skipped + ss.prefill_chunks, 1)
+        cost = rl.serve_decode_cost(eng.params, eng.cache, 4,
+                                    ecfg.max_seq_len, ecfg.num_pages,
+                                    ecfg.page_size)
         emit(f"serve_prefix[{'on' if cache_on else 'off'},"
              f"shared16+4x6new]",
              s.wall_s / max(s.steps, 1) * 1e6,
@@ -377,7 +462,12 @@ def bench_serve():
              f"prefix_hit_tokens={s.prefix_hit_tokens};"
              f"cow_copies={s.cow_copies};"
              f"decode_tok_s={s.decode_tok_s:.1f}",
-             precision=s.precision)
+             precision=s.precision, cost=cost)
+    if tok_s[True] < 0.9 * tok_s[False]:
+        raise AssertionError(
+            f"serve_prefix: cache-on decode {tok_s[True]:.1f} tok/s < 0.9x "
+            f"cache-off {tok_s[False]:.1f} tok/s — the prefix cache skips "
+            "prefill chunks and must never cost decode throughput (ISSUE 7)")
 
     # overload workload (DESIGN.md §12): arrival rate > service capacity
     # with a bounded admission queue — degradation must be *measured*:
@@ -395,14 +485,7 @@ def bench_serve():
             max_batch=2, page_size=8, num_pages=16, max_seq_len=24,
             prefill_chunk=8, max_queue=max_queue)
         eng = serve_loop.ServeEngine(params, cfg, ecfg)
-        # warm the per-engine jitted steps, then zero the counters: the
-        # measured window must compare SERVICE rates, not compile time
-        eng.submit(oprompts[0], new_tokens, rid=999, arrival=0)
-        eng.run()
-        eng.stats = serve_loop.EngineStats(tp=eng.stats.tp,
-                                           precision=eng.stats.precision)
-        eng.sched.stats = type(eng.sched.stats)()
-        eng.completions.clear()
+        eng.warmup()
         incoming = list(enumerate(oprompts))
 
         def on_step(e, k, incoming=incoming, gap=gap):
@@ -415,6 +498,9 @@ def bench_serve():
         eng.submit(p0, new_tokens, rid=i0, arrival=eng.sched.clock)
         eng.run(on_step=on_step)
         s, ss = eng.stats, eng.sched.stats
+        cost = rl.serve_decode_cost(eng.params, eng.cache, 2,
+                                    ecfg.max_seq_len, ecfg.num_pages,
+                                    ecfg.page_size)
         emit(f"serve_overload[{mode},10req/b2,gap{gap},queue="
              f"{max_queue if max_queue is not None else 'inf'}]",
              s.wall_s / max(s.steps, 1) * 1e6,
@@ -426,10 +512,11 @@ def bench_serve():
              f"p50_queue_wait_steps={ss.queue_wait_pct(50):.0f};"
              f"p95_queue_wait_steps={ss.queue_wait_pct(95):.0f};"
              f"evictions={s.evictions}",
-             precision=s.precision)
+             precision=s.precision, cost=cost)
 
     # one-shot dense reference on the same traffic (batched, same prompts
     # padded to a rectangle is not apples-to-apples; serve one by one)
+    pb = rl.tree_bytes(params)
     t0 = time.perf_counter()
     dense_tok = 0
     for p in prompts:
@@ -437,8 +524,10 @@ def bench_serve():
             params, cfg, {"tokens": np.asarray([p], np.int32)}, new_tokens)
         dense_tok += st.tokens_generated
     us = (time.perf_counter() - t0) * 1e6
+    # per request: new_tokens decode steps, each streaming every weight
+    cost = rl.Cost(new_tokens * pb, new_tokens * 2.0 * (pb / 4.0))
     emit("serve_oneshot[sequential]", us / len(prompts),
-         f"decode_tok_s={dense_tok / (us / 1e6):.1f}")
+         f"decode_tok_s={dense_tok / (us / 1e6):.1f}", cost=cost)
 
 
 def _load_dryrun():
@@ -467,44 +556,176 @@ BENCHES = [
 ]
 
 
-def write_json(filt: str, out_dir: str | None = None) -> str:
-    """Persist the run as BENCH_<timestamp>.json (DESIGN.md §7): the perf
-    trajectory across PRs needs machine-readable rows, not just the CSV."""
-    out_dir = out_dir or os.path.join(os.path.dirname(__file__), "results")
-    os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(
-        out_dir, time.strftime("BENCH_%Y%m%d_%H%M%S.json", time.gmtime()))
-    payload = {
+def build_payload(filt: str) -> dict:
+    """The machine-readable run record (DESIGN.md §7/§13): config block
+    with the machine-speed calibration, then one dict per row."""
+    p = rl.peaks()
+    return {
         "config": {
             "filter": filt,
             "backend": jax.default_backend(),
             "jax_version": jax.__version__,
             "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ",
                                            time.gmtime()),
+            "peaks": {"bw_gbps": p.bw_gbps, "gflops": p.gflops},
         },
-        "rows": [{"name": n, "us_per_call": us, "derived": d,
-                  "precision": p}
-                 for n, us, d, p in ROWS],
+        "rows": list(ROWS),
     }
+
+
+def write_json(payload: dict, out_dir: str | None = None) -> str:
+    """Persist the run as BENCH_<timestamp>.json (DESIGN.md §7): the perf
+    trajectory across PRs needs machine-readable rows, not just the CSV."""
+    out_dir = out_dir or os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, time.strftime("BENCH_%Y%m%d_%H%M%S.json", time.gmtime()))
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path
 
 
-def main() -> None:
-    filt = sys.argv[1] if len(sys.argv) > 1 else ""
+# ------------------------------------------------------------- diff mode
+def _norm_precision(label) -> str:
+    """Normalize a row's precision label to a RECIPES name.  Legacy
+    baselines (pre-§13) carry 'fp32' or omit the field — both map to
+    'none' so old rows still key against fresh ones."""
+    try:
+        return precision_mod.resolve(label or None).name
+    except (ValueError, TypeError):
+        return "none"
+
+
+def _derived_float(derived: str, field: str) -> float | None:
+    m = re.search(rf"(?:^|;){field}=([-+0-9.e]+)", derived or "")
+    try:
+        return float(m.group(1)) if m else None
+    except ValueError:
+        return None
+
+
+def _index_rows(payload: dict) -> dict:
+    return {(r["name"], _norm_precision(r.get("precision"))): r
+            for r in payload.get("rows", [])}
+
+
+def latest_baseline(results_dir: str | None = None) -> str | None:
+    """Newest committed BENCH_*.json (timestamps sort lexically)."""
+    results_dir = results_dir or os.path.join(os.path.dirname(__file__),
+                                              "results")
+    files = sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json")))
+    return files[-1] if files else None
+
+
+def diff_payloads(base: dict, cur: dict, us_tol: float = 0.20,
+                  tok_tol: float = 0.10) -> tuple[list[str], list[str]]:
+    """Compare ``cur`` rows against ``base`` keyed on (name, precision).
+
+    Rows carrying ``decode_tok_s`` gate on throughput (>``tok_tol`` drop
+    fails); other timed rows gate on us_per_call (>``us_tol`` growth
+    fails).  Both tolerances are scaled by the runs' machine-speed
+    calibrations (``config.peaks``): a diff on a slower/loaded machine
+    loosens proportionally instead of false-failing.  Returns
+    (failures, notes)."""
+    bi, ci = _index_rows(base), _index_rows(cur)
+    shared = sorted(set(bi) & set(ci))
+    failures, notes = [], []
+    bp = (base.get("config") or {}).get("peaks")
+    cp = (cur.get("config") or {}).get("peaks")
+    slow = 1.0
+    if bp and cp:
+        slow = max(1.0, bp["bw_gbps"] / cp["bw_gbps"],
+                   bp["gflops"] / cp["gflops"])
+        if slow > 1.0:
+            notes.append(f"machine-speed scale {slow:.2f}x "
+                         "(this run calibrated slower than the baseline)")
+    for key in shared:
+        b, c = bi[key], ci[key]
+        name, prec = key
+        b_tok = _derived_float(b.get("derived"), "decode_tok_s")
+        c_tok = _derived_float(c.get("derived"), "decode_tok_s")
+        if b_tok is not None and c_tok is not None and b_tok > 0:
+            floor = b_tok * (1.0 - tok_tol) / slow
+            if c_tok < floor:
+                failures.append(
+                    f"{name} [{prec}]: decode_tok_s {c_tok:.1f} < "
+                    f"{floor:.1f} (baseline {b_tok:.1f}, -{tok_tol:.0%} "
+                    f"tolerance / {slow:.2f}x scale)")
+            continue
+        b_us, c_us = b.get("us_per_call", 0.0), c.get("us_per_call", 0.0)
+        if b_us < DIFF_US_FLOOR:
+            continue  # launch/python jitter, not kernel time
+        ceil = b_us * (1.0 + us_tol) * slow
+        if c_us > ceil:
+            failures.append(
+                f"{name} [{prec}]: us_per_call {c_us:.0f} > {ceil:.0f} "
+                f"(baseline {b_us:.0f}, +{us_tol:.0%} tolerance / "
+                f"{slow:.2f}x scale)")
+    notes.append(f"compared {len(shared)} shared rows "
+                 f"({len(ci) - len(shared)} new, "
+                 f"{len(bi) - len(shared)} baseline-only)")
+    return failures, notes
+
+
+def run_diff(payload: dict, baseline: str) -> int:
+    """Diff ``payload`` against the baseline file; print the report and
+    return the number of regressions (the CI perf gate, DESIGN.md §13)."""
+    with open(baseline) as f:
+        base = json.load(f)
+    failures, notes = diff_payloads(base, payload)
+    for n in notes:
+        print(f"# diff: {n}", file=sys.stderr)
+    for fmsg in failures:
+        print(f"# diff REGRESSION: {fmsg}", file=sys.stderr)
+    verdict = ("OK" if not failures
+               else f"{len(failures)} regression(s)")
+    print(f"# perf diff vs {os.path.basename(baseline)}: {verdict}",
+          file=sys.stderr)
+    return len(failures)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="SlideSparse benchmark harness + perf diff gate")
+    ap.add_argument("filters", nargs="*",
+                    help="run only benches whose name contains ANY filter")
+    ap.add_argument("--diff", nargs="?", const="latest", default=None,
+                    metavar="BASELINE",
+                    help="after the run, diff rows against BASELINE json "
+                         "(default: newest committed BENCH_*.json) and "
+                         "exit 1 on regressions beyond tolerance")
+    args = ap.parse_args(argv)
+    baseline = None
+    if args.diff is not None:
+        # resolve BEFORE writing this run's json, or we'd diff against
+        # ourselves
+        baseline = (args.diff if args.diff != "latest"
+                    else latest_baseline())
+        if args.diff != "latest" and not os.path.exists(args.diff):
+            print(f"# baseline {args.diff} not found", file=sys.stderr)
+            return 2
     print("name,us_per_call,derived")
     for bench in BENCHES:
-        if filt and filt not in bench.__name__:
+        if args.filters and not any(f in bench.__name__
+                                    for f in args.filters):
             continue
         bench()
-    if ROWS:
-        path = write_json(filt)
-        print(f"# wrote {path} ({len(ROWS)} rows)", file=sys.stderr)
-    else:
-        print(f"# no benchmarks matched filter {filt!r}; nothing written",
+    if not ROWS:
+        print(f"# no benchmarks matched filters {args.filters!r}; "
+              "nothing written", file=sys.stderr)
+        return 0
+    payload = build_payload(" ".join(args.filters))
+    path = write_json(payload)
+    print(f"# wrote {path} ({len(ROWS)} rows)", file=sys.stderr)
+    if args.diff is None:
+        return 0
+    if baseline is None:
+        print("# no committed baseline to diff against (first run)",
               file=sys.stderr)
+        return 0
+    return 1 if run_diff(payload, baseline) else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

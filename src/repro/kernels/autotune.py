@@ -18,6 +18,14 @@ Cache file format (DESIGN.md §2.4): ``{key: {"tiles": {bm, br, bk,
 block_rows}, "us": best_us, "backend": ...}}`` where ``key`` is
 ``op|param=value|...`` over the shape/dtype parameters, sorted by name.
 Null tile entries mean "kernel default".
+
+Roofline feedback (DESIGN.md §13): before timing, candidates whose modeled
+HBM traffic (``roofline.tile_traffic``) exceeds ``PRUNE_RATIO`` x the best
+candidate's are skipped — a tile that re-streams operands that many times
+cannot reach the bandwidth bound, so timing it is wasted work.  Tuned
+entries additionally record ``roofline_us`` (the analytic bound for the
+shape), ``efficiency`` (bound / achieved) and a human-readable ``why``
+explaining how the winner won.
 """
 from __future__ import annotations
 
@@ -31,7 +39,13 @@ from typing import Any, Callable, Iterable
 
 import jax
 
+from . import roofline
+
 _FIELDS = ("bm", "br", "bk", "block_rows")
+
+# candidates whose modeled HBM traffic exceeds this multiple of the best
+# candidate's cannot reach the bandwidth bound — skip timing them
+PRUNE_RATIO = 2.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -210,11 +224,24 @@ def lookup(key: str) -> TileConfig | None:
     return TileConfig(**{f: tiles.get(f) for f in _FIELDS})
 
 
-def record(key: str, tiles: TileConfig, us: float) -> None:
-    """Cache ``tiles`` as the winner for ``key`` (in-process + disk)."""
+def record(key: str, tiles: TileConfig, us: float, *,
+           roofline_us: float | None = None,
+           why: str | None = None) -> None:
+    """Cache ``tiles`` as the winner for ``key`` (in-process + disk).
+
+    ``roofline_us`` is the analytic bound for the tuned shape (DESIGN.md
+    §13); when given, the entry also records ``efficiency`` (bound /
+    achieved) and ``why`` — so a cache inspection explains each winner
+    instead of just asserting it."""
     _load_disk()
-    _MEM[key] = {"tiles": {f: getattr(tiles, f) for f in _FIELDS},
-                 "us": us, "backend": jax.default_backend()}
+    rec: dict[str, Any] = {"tiles": {f: getattr(tiles, f) for f in _FIELDS},
+                           "us": us, "backend": jax.default_backend()}
+    if roofline_us is not None:
+        rec["roofline_us"] = roofline_us
+        rec["efficiency"] = roofline_us / us if us > 0 else 0.0
+    if why is not None:
+        rec["why"] = why
+    _MEM[key] = rec
     _DIRTY.add(key)
     _save_disk()
 
@@ -253,18 +280,44 @@ def candidates(op: str, rows: int, m: int, k: int) -> list[TileConfig]:
 def autotune(op: str, run: Callable[[TileConfig], Any],
              cands: Iterable[TileConfig] | None = None, *,
              key: str | None = None, rows: int = 0, m: int = 0,
-             k: int = 0) -> TileConfig:
-    """Time every candidate with ``run`` and cache the fastest under ``key``."""
+             k: int = 0, params: dict[str, Any] | None = None) -> TileConfig:
+    """Time every candidate with ``run`` and cache the fastest under ``key``.
+
+    ``params`` carries the cache-key components (pattern/adt/wdt) so the
+    roofline traffic model can price each candidate: tiles whose modeled
+    HBM traffic exceeds ``PRUNE_RATIO`` x the best candidate's are pruned
+    without timing (they cannot reach the bandwidth bound)."""
+    cand_list = list(cands if cands is not None
+                     else candidates(op, rows, m, k))
+    traffic = {i: roofline.tile_traffic(op, rows=rows, m=m, k=k,
+                                        br=t.br, bm=t.bm, **(params or {}))
+               for i, t in enumerate(cand_list)}
+    known = [v for v in traffic.values() if v is not None]
+    floor = min(known) if known else None
     best_tiles, best_us = DEFAULT, float("inf")
-    for tiles in (cands if cands is not None else candidates(op, rows, m, k)):
+    pruned = timed = 0
+    for i, tiles in enumerate(cand_list):
+        tr = traffic[i]
+        if (floor is not None and tr is not None
+                and tr > PRUNE_RATIO * floor):
+            pruned += 1
+            continue
         try:
             us = _time(run, tiles)
         except Exception:
             continue  # candidate invalid for this shape (VMEM, divisibility)
+        timed += 1
         if us < best_us:
             best_tiles, best_us = tiles, us
     if key is not None and best_us != float("inf"):
-        record(key, best_tiles, best_us)
+        cost = roofline.op_cost(op, rows=rows, m=m, k=k, **(params or {}))
+        bound = roofline.roofline_us(cost) if cost is not None else None
+        why = (f"best of {timed} timed / {len(cand_list)} candidates"
+               f" ({pruned} roofline-pruned)")
+        if bound is not None:
+            why += (f"; achieved {best_us:.1f}us vs {bound:.1f}us bound"
+                    f" ({bound / best_us:.1%})")
+        record(key, best_tiles, best_us, roofline_us=bound, why=why)
     return best_tiles
 
 
@@ -297,5 +350,6 @@ def tiles_for(op: str, *, rows: int, m: int, k: int, tune: bool = False,
     if cached is not None:
         return cached
     if tune and run is not None and not tracing(*operands):
-        return autotune(op, run, key=key, rows=rows, m=m, k=k)
+        return autotune(op, run, key=key, rows=rows, m=m, k=k,
+                        params=key_params)
     return DEFAULT

@@ -102,14 +102,27 @@ def _kernel(x_ref, w_ref, sw_ref, b_ref, o_ref, q_scr, sx_scr, *,
 
 
 def default_tiles(m: int, k: int, gk: int,
-                  vmem_budget: int = 12 * 1024 * 1024) -> tuple[int, int]:
+                  vmem_budget: int = 12 * 1024 * 1024,
+                  fp8: bool = False, w4: bool = False) -> tuple[int, int]:
     """(br, bm) heuristic: largest power-of-two tiles whose fp32 input,
-    int8 lifted scratch, weight tile and int32 accumulator fit the budget."""
+    lifted scratch, weight tile and accumulator fit the budget.
+
+    The footprint is recipe-aware (DESIGN.md §13): e4m3 operands are
+    upcast to fp32 working copies for the MXU dot (both the lifted
+    scratch and the weight tile — 4 extra bytes per element each), and
+    'w4' weights unpack from nibbles to an int8 tile in the prologue.
+    The earlier model ignored the fp8 upcast, so large-K fp8 shapes
+    selected tiles whose real VMEM footprint overflowed the budget and
+    collapsed the grid on hardware."""
     bm = 256 if m >= 256 else max(8, 1 << max(0, (m - 1)).bit_length())
     br = 256
 
     def need(br_, bm_):
-        return br_ * k * 4 + br_ * gk + bm_ * gk + br_ * bm_ * 4 + br_ * 8
+        q_scr = br_ * gk * (5 if fp8 else 1)   # stored + fp32 upcast
+        w_tile = bm_ * (gk // 2 if w4 else gk)  # nibble-packed at half width
+        w_work = bm_ * gk * (4 if fp8 else (1 if w4 else 0))  # upcast/unpack
+        return (br_ * k * 4 + q_scr + w_tile + w_work
+                + br_ * bm_ * 4 + br_ * 8)
     while need(br, bm) > vmem_budget and br > 8:
         br //= 2
     while need(br, bm) > vmem_budget and bm > 8:
@@ -145,7 +158,7 @@ def fused_slided_matmul_pallas(x, w_slided_q, s_w, bias=None, *, n_fam: int,
         raise ValueError(
             f"w_slided_q has contraction {w_slided_q.shape[1]}, expected"
             f" {'packed ' if w4 else ''}gamma*K = {gkw} for K={k}, N={n_fam}")
-    dbr, dbm = default_tiles(m, k, gk)
+    dbr, dbm = default_tiles(m, k, gk, fp8=fp8, w4=w4)
     br, bm = br or dbr, bm or dbm
     br = clamp_rows(br, rows)
 

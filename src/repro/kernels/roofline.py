@@ -1,0 +1,296 @@
+"""Analytic roofline cost model for the SlideSparse kernels (DESIGN.md §13).
+
+Every kernel in this package has a closed-form HBM-byte and FLOP count as a
+function of its operand shapes and the precision recipe (DESIGN.md §10).
+This module is the single source of those formulas:
+
+* the benchmark harness (``benchmarks/roofline.py``) converts them into the
+  ``roofline_us`` / ``efficiency`` fields carried on every BENCH row, and
+* the tile autotuner (``autotune.py``) uses the per-tile traffic model to
+  prune candidate configurations that cannot reach the bandwidth bound,
+  and records achieved-vs-roofline in every cache entry.
+
+Modeling conventions:
+
+* Bytes are *minimal* HBM traffic: each operand read once, each output
+  written once.  Quantized operands count at their stored width — 1 byte
+  for int8/e4m3, 0.5 bytes for nibble-packed 'w4' — and the lifted
+  activations of the single-pass fused GEMM count ZERO bytes (they live
+  only in VMEM scratch; the two-kernel pipeline pays the write + re-read).
+* FLOPs are MXU-relevant multiply-adds (2 * contraction products); VPU
+  relayout work (quantize, lift, decompress) is counted at a few ops per
+  element so compute-bound shapes are not misclassified as free.
+* ``peaks()`` calibrates the executing machine once per process (or takes
+  ``REPRO_PEAK_BW_GBPS`` / ``REPRO_PEAK_GFLOPS`` overrides) so
+  ``roofline_us`` is a *machine-specific* bound: efficiency numbers
+  compare across rows of one run, and the calibration travels with the
+  BENCH json so the diff gate can scale tolerances across machines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import time
+
+
+@dataclasses.dataclass(frozen=True)
+class Cost:
+    """Analytic cost of one kernel call: minimal HBM bytes + FLOPs."""
+
+    bytes: float
+    flops: float = 0.0
+
+    def __add__(self, other: "Cost") -> "Cost":
+        return Cost(self.bytes + other.bytes, self.flops + other.flops)
+
+
+# itemsize (bytes per element) by precision-axis or dtype name
+_ITEMSIZE = {
+    "int8": 1.0, "uint8": 1.0, "fp8": 1.0, "float8_e4m3fn": 1.0,
+    "w4": 0.5, "int4": 0.5,
+    "bfloat16": 2.0, "float16": 2.0,
+    "float32": 4.0, "int32": 4.0,
+}
+
+
+def itemsize(name, default: float = 4.0) -> float:
+    """Bytes per element for a recipe axis ('fp8', 'w4') or dtype name."""
+    return _ITEMSIZE.get(str(name), default)
+
+
+def _resolve(recipe):
+    from repro.core import precision  # deferred: core imports first
+    return precision.resolve(recipe)
+
+
+def lifted_k(k: int, n_fam: int) -> int:
+    """gamma*K: the lifted contraction width of the (2N-2):2N family."""
+    return (k // (2 * n_fam)) * (n_fam - 1) * 4
+
+
+def compressed_k(k: int, n_fam: int) -> int:
+    """Compressed slot count: K * (2N-2)/2N values (+ as many 2-bit ids,
+    stored as int8 here)."""
+    return (k // (2 * n_fam)) * (2 * n_fam - 2)
+
+
+# ------------------------------------------------------------ kernel costs
+def dense_gemm(rows: int, k: int, m: int, x_itemsize: float = 4.0,
+               w_itemsize: float = 4.0, out_itemsize: float = 4.0) -> Cost:
+    """Plain dense GEMM y[R, M] = x[R, K] @ w[M, K]^T."""
+    return Cost(rows * k * x_itemsize + k * m * w_itemsize
+                + rows * m * out_itemsize, 2.0 * rows * k * m)
+
+
+def fused_quant_slide(rows: int, k: int, n_fam: int, recipe="int8") -> Cost:
+    """Alg. 1 fused quantize+lift: read X fp32, write Psi(q) + scales."""
+    rec = _resolve(recipe)
+    gk = lifted_k(k, n_fam)
+    ab = itemsize(rec.act or "float32")
+    # quantize = absmax + scale + clip/round + cast: ~4 VPU ops/elt, plus
+    # the lift relayout touching every lifted slot once
+    return Cost(rows * k * 4.0 + rows * gk * ab + rows * 4.0,
+                4.0 * rows * k + rows * gk)
+
+
+def quant_matmul(rows: int, k: int, m: int, x_itemsize: float = 1.0,
+                 w_itemsize: float = 1.0) -> Cost:
+    """Dense quantized GEMM on pre-quantized operands (+ scales, dequant)."""
+    return Cost(rows * k * x_itemsize + rows * 4.0
+                + k * m * w_itemsize + m * 4.0 + rows * m * 4.0,
+                2.0 * rows * k * m)
+
+
+def fused_slided_matmul(rows: int, k: int, m: int, n_fam: int,
+                        recipe="int8") -> Cost:
+    """Single-pass fused GEMM: quant+lift in the prologue; the lifted
+    gamma*K activations never touch HBM (the paper's §4.2 saving)."""
+    rec = _resolve(recipe)
+    gk = lifted_k(k, n_fam)
+    wb = itemsize(rec.weight or "float32")
+    return Cost(rows * k * 4.0 + m * gk * wb + m * 4.0 + rows * m * 4.0,
+                2.0 * rows * gk * m + 4.0 * rows * k)
+
+
+def two_kernel(rows: int, k: int, m: int, n_fam: int, recipe="int8") -> Cost:
+    """fused_quant_slide -> quant_matmul: the baseline the single-pass
+    kernel beats by exactly one HBM round-trip of the lifted activations."""
+    rec = _resolve(recipe)
+    gk = lifted_k(k, n_fam)
+    return (fused_quant_slide(rows, k, n_fam, rec)
+            + quant_matmul(rows, gk, m, itemsize(rec.act or "float32"),
+                           itemsize(rec.weight or "float32")))
+
+
+def compressed_matmul(rows: int, k: int, m: int, n_fam: int,
+                      recipe=None) -> Cost:
+    """Decompress-once compressed GEMM: weights stream at density bytes
+    (values + int8 position ids), MXU runs dense FLOPs in the original K
+    layout (unslide fusion, DESIGN.md §2)."""
+    kc = compressed_k(k, n_fam)
+    if recipe is None:
+        xb, wb = 4.0, 4.0  # float path
+    else:
+        rec = _resolve(recipe)
+        xb = itemsize(rec.act or "float32")
+        wb = itemsize(rec.weight or "float32")
+    return Cost(rows * k * xb + rows * 4.0 + m * kc * (wb + 1.0) + m * 4.0
+                + rows * m * 4.0,
+                2.0 * rows * k * m + 8.0 * m * kc)
+
+
+def paged_attention_decode(batch: int, kv_len: int, kv_heads: int,
+                           head_dim: int, q_heads: int | None = None,
+                           kv_itemsize: float = 4.0) -> Cost:
+    """One decode step of paged attention: the K/V pages of every active
+    sequence stream from HBM once; q/logits traffic is negligible."""
+    q_heads = q_heads or kv_heads
+    kv_bytes = 2.0 * batch * kv_len * kv_heads * head_dim * kv_itemsize
+    return Cost(kv_bytes + batch * q_heads * head_dim * 4.0 * 2.0,
+                4.0 * batch * q_heads * kv_len * head_dim)
+
+
+def cow_copy(pairs: int, page_size: int, kv_heads: int, head_dim: int,
+             layers: int, kv_itemsize: float = 4.0) -> Cost:
+    """Copy-on-write page forks (DESIGN.md §11): each pair reads + writes
+    one K and one V page per attention layer."""
+    per_pair = 2.0 * page_size * kv_heads * head_dim * kv_itemsize * layers
+    return Cost(2.0 * pairs * per_pair, 0.0)
+
+
+# ----------------------------------------------------------------- peaks
+@dataclasses.dataclass(frozen=True)
+class Peaks:
+    """Achievable peak rates of the executing machine (calibrated, not
+    datasheet): ``roofline_us`` divides the analytic cost by these."""
+
+    bw_gbps: float
+    gflops: float
+
+
+_PEAKS: Peaks | None = None
+
+
+def measure_peaks() -> Peaks:
+    """One-shot host calibration: best-of streaming copy (bandwidth) and
+    BLAS matmul (FLOPs) on numpy buffers.  Deliberately numpy, not jax —
+    the interpret-mode kernels execute on the host, and a fixed reference
+    workload doubles as the machine-speed scale for the perf diff gate."""
+    import numpy as np
+    src = np.ones(8 * 1024 * 1024, np.float32)  # 32 MB
+    dst = np.empty_like(src)
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        np.copyto(dst, src)
+        best = min(best, time.perf_counter() - t0)
+    bw = 2.0 * src.nbytes / best / 1e9  # read + write
+
+    n = 384
+    a = np.ones((n, n), np.float32)
+    b = np.ones((n, n), np.float32)
+    a @ b  # warm BLAS threads
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        a @ b
+        best = min(best, time.perf_counter() - t0)
+    gf = 2.0 * n ** 3 / best / 1e9
+    return Peaks(bw_gbps=bw, gflops=gf)
+
+
+def peaks(refresh: bool = False) -> Peaks:
+    """Cached machine peaks; ``REPRO_PEAK_BW_GBPS`` / ``REPRO_PEAK_GFLOPS``
+    pin them (e.g. to a TPU generation's datasheet numbers)."""
+    global _PEAKS
+    if _PEAKS is None or refresh:
+        env_bw = os.environ.get("REPRO_PEAK_BW_GBPS")
+        env_gf = os.environ.get("REPRO_PEAK_GFLOPS")
+        if env_bw and env_gf:
+            _PEAKS = Peaks(float(env_bw), float(env_gf))
+        else:
+            measured = measure_peaks()
+            _PEAKS = Peaks(float(env_bw) if env_bw else measured.bw_gbps,
+                           float(env_gf) if env_gf else measured.gflops)
+    return _PEAKS
+
+
+def roofline_us(cost: Cost, p: Peaks | None = None) -> float:
+    """max(bytes/peak_bw, flops/peak_flops) in microseconds — the no-
+    overhead floor for one call of the modeled kernel on this machine."""
+    p = p or peaks()
+    return max(cost.bytes / (p.bw_gbps * 1e9),
+               cost.flops / (p.gflops * 1e9)) * 1e6
+
+
+def efficiency(cost: Cost, measured_us: float, p: Peaks | None = None) -> float:
+    """roofline_us / measured_us in (0, 1]: 1.0 = at the bound; values
+    > 1 flag a broken model or a mis-measured kernel (DESIGN.md §13)."""
+    if measured_us <= 0:
+        return 0.0
+    return roofline_us(cost, p) / measured_us
+
+
+# ------------------------------------------------- autotune integration
+def _pattern_n(params) -> int | None:
+    pat = params.get("pattern")
+    if not pat:
+        return None
+    try:
+        _, l = str(pat).split(":")
+        return int(l) // 2
+    except ValueError:
+        return None
+
+
+def op_cost(op: str, rows: int, m: int, k: int, **params) -> Cost | None:
+    """Analytic :class:`Cost` for an autotune op key, or None when the op
+    (or its parameters) are not modeled.  ``params`` are the autotune
+    cache-key components (pattern / adt / wdt / dtype...)."""
+    n = _pattern_n(params)
+    adt, wdt = params.get("adt"), params.get("wdt")
+    if op == "fused_quant_slide" and n:
+        return fused_quant_slide(rows, k, n,
+                                 "fp8" if str(adt) == "fp8" else "int8")
+    if op == "quant_matmul":
+        return quant_matmul(rows, k, m, itemsize(adt), itemsize(wdt))
+    if op == "compressed_matmul" and n:
+        kc = compressed_k(k, n)
+        return Cost(rows * k * itemsize(adt) + rows * 4.0
+                    + m * kc * (itemsize(wdt) + 1.0) + m * 4.0
+                    + rows * m * 4.0, 2.0 * rows * k * m + 8.0 * m * kc)
+    if op == "fused_slided_matmul" and n:
+        gk = lifted_k(k, n)
+        return Cost(rows * k * 4.0 + m * gk * itemsize(wdt) + m * 4.0
+                    + rows * m * 4.0, 2.0 * rows * gk * m + 4.0 * rows * k)
+    return None
+
+
+def tile_traffic(op: str, rows: int, m: int, k: int,
+                 br: int | None, bm: int | None, **params) -> float | None:
+    """Modeled HBM traffic (bytes) of one call at a candidate (br, bm)
+    tiling — the quantity autotune prunes on.  Counts what each grid
+    order actually re-reads: a block whose index repeats on consecutive
+    grid steps is fetched once (Pallas skips same-block refetches).
+    Returns None for unknown ops or unspecified (kernel-default) tiles."""
+    adt, wdt = params.get("adt"), params.get("wdt")
+    n = _pattern_n(params)
+    out = rows * m * 4.0
+    if op == "quant_matmul" and br and bm:
+        # grid (R, M, K): x re-read per M tile, w re-read per R tile
+        return (rows * k * itemsize(adt) * math.ceil(m / bm)
+                + m * k * itemsize(wdt) * math.ceil(rows / br) + out)
+    if op == "compressed_matmul" and n and bm:
+        # grid (M, R) R-innermost: weights decompressed once per M tile,
+        # x re-read per M tile
+        kc = compressed_k(k, n)
+        return (rows * k * itemsize(adt) * math.ceil(m / bm)
+                + m * kc * (itemsize(wdt) + 1.0) + out)
+    if op == "fused_slided_matmul" and n and br:
+        # grid (R, M) M-innermost: x read once per R tile (same block
+        # across M steps), w re-read per R tile
+        gk = lifted_k(k, n)
+        return (rows * k * 4.0
+                + m * gk * itemsize(wdt) * math.ceil(rows / br) + out)
+    return None

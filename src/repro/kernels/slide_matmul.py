@@ -122,18 +122,24 @@ def choose_bk(l: int, target: int = 512) -> int:
 
 def default_tiles(m: int, k: int, kc: int, x_itemsize: int,
                   w_itemsize: int,
-                  vmem_budget: int = 12 * 1024 * 1024) -> tuple[int, int]:
+                  vmem_budget: int = 12 * 1024 * 1024,
+                  x_fp8: bool = False) -> tuple[int, int]:
     """(bm, br) heuristic: the full-K activation block, the full-K dense
     weight scratch, the compressed values+indices blocks and the output
     tile must all fit the VMEM budget (the R-innermost grid holds a whole
-    (bm, K) decompressed tile resident, so K enters the footprint)."""
+    (bm, K) decompressed tile resident, so K enters the footprint).
+    ``x_fp8`` adds the fp32 working copies the kernel materializes for an
+    e4m3 activation operand (both x and the dense scratch are upcast for
+    the MXU dot — DESIGN.md §13)."""
     bm = 256 if m >= 256 else max(8, 1 << max(0, m - 1).bit_length())
     br = 256
 
     def need(bm_, br_):
+        up = (br_ * k + bm_ * k) * 4 if x_fp8 else 0  # fp32 upcast copies
         return (br_ * k * x_itemsize          # x block
                 + bm_ * k * w_itemsize        # dense decompressed scratch
                 + bm_ * kc * (w_itemsize + 1)  # compressed values + int8 idx
+                + up
                 + br_ * bm_ * 4)              # accumulator / output tile
     while need(bm, br) > vmem_budget and br > 8:
         br //= 2                              # x block shrinks fastest
@@ -178,7 +184,8 @@ def compressed_matmul_pallas(x, values, indices, s_x, s_w, bias=None, *,
     bkc = bk * density_num // density_den
 
     dbm, dbr = default_tiles(m, k, indices.shape[1], x.dtype.itemsize,
-                             values.dtype.itemsize)
+                             values.dtype.itemsize,
+                             x_fp8=x.dtype == jnp.float8_e4m3fn)
     bm, br = bm or dbm, br or dbr
     br = clamp_rows(br, rows)
 

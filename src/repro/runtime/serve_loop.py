@@ -195,6 +195,7 @@ class EngineStats:
     denominators)."""
     steps: int = 0
     wall_s: float = 0.0
+    warmup_s: float = 0.0     # jit compile + first-exec time paid in warmup()
     decode_tokens: int = 0
     decode_steps: int = 0
     prefill_tokens: int = 0
@@ -369,6 +370,39 @@ class ServeEngine:
         self.completions: dict[int, Completion] = {}
         self._prompts: dict[int, list[int]] = {}
         self.stats = EngineStats(tp=ntp, precision=cfg.sparsity.recipe.name)
+
+    # ------------------------------------------------------------ warmup
+    def warmup(self) -> float:
+        """Compile + first-execute the engine's fixed-shape jitted steps
+        (prefill, decode, COW copy) outside any measured window.
+
+        The step functions are per-engine closures, so every new engine
+        pays jit compilation on its first real step — and ``run`` bills
+        that into ``wall_s``, which silently corrupted decode-throughput
+        comparisons (a cache-on vs cache-off serve bench measured mostly
+        compile time; DESIGN.md §13).  Dummy inputs run each function
+        once and every output is DISCARDED: the jitted steps are purely
+        functional and nothing is donated, so ``self.cache``, the page
+        accounting and the stats are untouched.  Returns the elapsed
+        seconds (also recorded as ``stats.warmup_s``)."""
+        ec = self.ecfg
+        t0 = time.time()
+        ptab = self.kv.page_table_array()
+        jax.block_until_ready(self._prefill_fn(
+            self.params, np.zeros((1, ec.prefill_chunk), np.int32),
+            self.cache, ptab[:1], np.int32(0), np.int32(ec.prefill_chunk),
+            np.int32(0), np.bool_(True)))
+        jax.block_until_ready(self._decode_fn(
+            self.params, np.zeros((ec.max_batch,), np.int32), self.cache,
+            ptab, np.zeros((ec.max_batch,), np.int32),
+            np.zeros((ec.max_batch,), bool)))
+        n = self._cow_lanes
+        # all lanes carry the out-of-bounds dst id: every write is dropped
+        jax.block_until_ready(self._cow_fn(
+            self.cache, np.zeros((n,), np.int32),
+            np.full((n,), ec.num_pages, np.int32)))
+        self.stats.warmup_s = time.time() - t0
+        return self.stats.warmup_s
 
     # ------------------------------------------------------------ intake
     def submit(self, prompt: list[int], max_new_tokens: int,

@@ -1,0 +1,304 @@
+"""Roofline cost model vs instrumented kernel reality (DESIGN.md §13).
+
+Three layers of coverage:
+
+* the analytic byte counts must match what the kernels *actually* move —
+  checked against the decompress-once chunk counter of the compressed
+  GEMM and the materialized outputs of the fused quantize+lift, for
+  N in {2, 3, 4} x the int8/fp8/w4 recipes;
+* the model's algebra must encode the paper's claims exactly (the
+  two-kernel pipeline pays two HBM trips of the lifted activations; 'w4'
+  halves the weight bytes);
+* the harness plumbing built on the model: autotune's traffic-based
+  candidate pruning, BENCH-row precision normalization, and the perf
+  diff gate's tolerance logic.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.patterns import Pattern, SlideDecomposition, TWO_FOUR
+from repro.core import compressed as comp, packer
+from repro.core.precision import RECIPES
+from repro.kernels import autotune, ops
+from repro.kernels import fused_slide_matmul as fsm
+from repro.kernels import roofline as rl
+from repro.kernels import slide_matmul as smm
+
+import benchmarks.run as bench
+from benchmarks import roofline as brl
+
+
+def _dec(n):
+    return SlideDecomposition(Pattern(2 * n - 2, 2 * n), TWO_FOUR)
+
+
+def _weights(rng, m, k, pat):
+    w = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    return packer.prune_to_pattern(w, pat)
+
+
+@pytest.fixture(autouse=True)
+def _isolated(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    # pinned peaks: tests must not depend on the host's calibration speed
+    monkeypatch.setenv("REPRO_PEAK_BW_GBPS", "10.0")
+    monkeypatch.setenv("REPRO_PEAK_GFLOPS", "100.0")
+    autotune.clear()
+    rl.peaks(refresh=True)
+    saved = list(bench.ROWS)
+    bench.ROWS.clear()
+    yield
+    bench.ROWS.clear()
+    bench.ROWS.extend(saved)
+    autotune.clear()
+
+
+# ------------------------------------------- model vs instrumented kernels
+@pytest.mark.parametrize("recipe", ["int8", "fp8", "w4"])
+@pytest.mark.parametrize("n_fam", [2, 3, 4])
+def test_compressed_weight_bytes_match_decompress_counter(recipe, n_fam):
+    """The model's weight-stream component equals the bytes the kernel's
+    decompress-once prologue actually touches: (chunks decompressed) x
+    (compressed values + int8 position ids per chunk) — exact, per recipe
+    (w4 counts nibble-packed values at half a byte)."""
+    dec = _dec(n_fam)
+    l = 2 * n_fam
+    bk = smm.choose_bk(l)
+    k, m, rows, bm = bk, 32, 8, 16  # 2 m-tiles x 1 k-chunk, no padding
+    rec = RECIPES[recipe]
+    rng = np.random.default_rng(n_fam)
+    w = _weights(rng, m, k, dec.source)
+    x = jnp.asarray(rng.standard_normal((rows, k)), jnp.float32)
+    qw = rec.quantize_weight(w)
+    c = comp.compress(packer.pack_slided(qw.q, dec), dec,
+                      pack_values=rec.packed_weights)
+    qx = rec.quantize_act(x)
+    smm.reset_decompress_count()
+    y = smm.compressed_matmul(qx.q, c, s_x=qx.scale, s_w=qw.scale,
+                              interpret=True, bm=bm, br=rows,
+                              instrument=True)
+    jax.block_until_ready(y)
+    chunks = smm.decompress_count()
+    assert chunks == (m // bm) * (k // bk)  # decompress-once grid order
+    bkc = bk * (2 * n_fam - 2) // (2 * n_fam)
+    wb = rl.itemsize(rec.weight)
+    instr_bytes = chunks * bm * bkc * (wb + 1.0)
+    model = rl.compressed_matmul(rows, k, m, n_fam, rec)
+    kc = rl.compressed_k(k, n_fam)
+    assert instr_bytes == m * kc * (wb + 1.0)  # the model's weight term
+    # and the full model is that term + activations/scales/output
+    xb = rl.itemsize(rec.act)
+    assert model.bytes == (rows * k * xb + rows * 4.0 + instr_bytes
+                           + m * 4.0 + rows * m * 4.0)
+
+
+@pytest.mark.parametrize("recipe", ["int8", "fp8"])
+@pytest.mark.parametrize("n_fam", [2, 3, 4])
+def test_fused_quant_slide_write_bytes_match_outputs(recipe, n_fam):
+    """The lift's modeled write traffic equals the bytes of the arrays the
+    kernel materializes: Psi(q) at the activation width + fp32 scales."""
+    dec = _dec(n_fam)
+    rows, k = 8, 8 * 2 * n_fam
+    rng = np.random.default_rng(n_fam)
+    x = jnp.asarray(rng.standard_normal((rows, k)), jnp.float32)
+    q, s = ops.fused_quant_slide(x, dec, use_pallas=True, interpret=True,
+                                 recipe=recipe)
+    gk = rl.lifted_k(k, n_fam)
+    assert q.shape == (rows, gk)
+    model = rl.fused_quant_slide(rows, k, n_fam, recipe)
+    write_bytes = model.bytes - rows * k * 4.0  # minus the fp32 read of x
+    assert write_bytes == q.size * q.dtype.itemsize + s.size * s.dtype.itemsize
+
+
+# ------------------------------------------------------------ cost algebra
+@pytest.mark.parametrize("recipe", ["int8", "fp8"])
+def test_two_kernel_pays_exactly_two_lifted_trips(recipe):
+    """The paper's §4.2 saving, as model algebra: the two-kernel pipeline's
+    extra HBM traffic over the single-pass kernel is exactly one write +
+    one re-read of the lifted activations (+ their scales)."""
+    rows, k, m, n = 64, 256, 128, 3
+    gk = rl.lifted_k(k, n)
+    ab = rl.itemsize(RECIPES[recipe].act)
+    extra = (rl.two_kernel(rows, k, m, n, recipe).bytes
+             - rl.fused_slided_matmul(rows, k, m, n, recipe).bytes)
+    assert extra == 2.0 * (rows * gk * ab + rows * 4.0)
+
+
+def test_w4_halves_weight_bytes():
+    rows, k, m, n = 64, 256, 128, 3
+    gk = rl.lifted_k(k, n)
+    d = (rl.fused_slided_matmul(rows, k, m, n, "int8").bytes
+         - rl.fused_slided_matmul(rows, k, m, n, "w4").bytes)
+    assert d == m * gk * 0.5
+
+
+def test_roofline_us_takes_binding_term():
+    p = rl.Peaks(bw_gbps=10.0, gflops=100.0)
+    assert rl.roofline_us(rl.Cost(bytes=1e9, flops=0.0), p) == 1e5
+    assert rl.roofline_us(rl.Cost(bytes=0.0, flops=1e11), p) == 1e6
+    assert rl.efficiency(rl.Cost(bytes=1e9, flops=0.0), 2e5, p) == 0.5
+
+
+def test_peaks_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PEAK_BW_GBPS", "123.0")
+    monkeypatch.setenv("REPRO_PEAK_GFLOPS", "456.0")
+    p = rl.peaks(refresh=True)
+    assert (p.bw_gbps, p.gflops) == (123.0, 456.0)
+    rl.peaks(refresh=True)  # restore from the fixture's env on next call
+
+
+# ---------------------------------------------------- autotune integration
+def test_autotune_prunes_bandwidth_hopeless_tiles():
+    """A candidate whose modeled traffic exceeds PRUNE_RATIO x the floor
+    is never timed; DEFAULT (kernel-heuristic tiles, unpriceable) always
+    is; and the cache entry explains the winner."""
+    good = autotune.TileConfig(bm=256, br=64)
+    bad = autotune.TileConfig(bm=8, br=8)  # re-streams both operands 8-32x
+    timed = []
+
+    def run(tiles):
+        timed.append((tiles.bm, tiles.br))
+        return np.zeros(1)
+
+    key = autotune.make_key("quant_matmul", rows=64, m=256, k=256,
+                            adt="int8", wdt="int8", interpret=True)
+    params = {"adt": "int8", "wdt": "int8", "interpret": True}
+    tr_good = rl.tile_traffic("quant_matmul", 64, 256, 256,
+                              br=good.br, bm=good.bm, **params)
+    tr_bad = rl.tile_traffic("quant_matmul", 64, 256, 256,
+                             br=bad.br, bm=bad.bm, **params)
+    assert tr_bad > autotune.PRUNE_RATIO * tr_good
+    autotune.autotune("quant_matmul", run,
+                      cands=[autotune.DEFAULT, good, bad],
+                      key=key, rows=64, m=256, k=256, params=params)
+    assert (bad.bm, bad.br) not in timed
+    assert (good.bm, good.br) in timed
+    assert (None, None) in timed  # DEFAULT has no priced traffic
+    entry = autotune._MEM[key]
+    assert "1 roofline-pruned" in entry["why"]
+    assert entry["roofline_us"] > 0
+    assert 0 < entry["efficiency"]
+
+
+def test_tile_traffic_unknown_op_or_default_tiles_is_none():
+    assert rl.tile_traffic("op", 8, 8, 8, br=8, bm=8) is None
+    assert rl.tile_traffic("quant_matmul", 8, 8, 8, br=None, bm=None,
+                           adt="int8", wdt="int8") is None
+
+
+def test_default_tiles_shrink_under_fp8_vmem_pressure():
+    """The recipe-aware VMEM models (the ISSUE 7 fused-fp8 fix site): the
+    fp32 upcast working copies an e4m3 operand costs in VMEM must shrink
+    the chosen tiles at large K, in both kernels' heuristics."""
+    m, k = 512, 4096
+    gk = rl.lifted_k(k, 4)
+    br8, bm8 = fsm.default_tiles(m, k, gk, fp8=True)
+    br1, bm1 = fsm.default_tiles(m, k, gk, fp8=False)
+    assert br8 < br1 and bm8 <= bm1
+    k = 8192  # the compressed kernel's int8 footprint is smaller; push K
+    kc = rl.compressed_k(k, 4)
+    bm8c, br8c = smm.default_tiles(m, k, kc, 1, 1, x_fp8=True)
+    bm1c, br1c = smm.default_tiles(m, k, kc, 1, 1, x_fp8=False)
+    assert br8c < br1c and bm8c <= bm1c
+
+
+# -------------------------------------------------------- harness plumbing
+def test_emit_normalizes_precision_labels():
+    """Every BENCH row's precision goes through core.precision.resolve
+    (ISSUE 7: rows used to carry a literal 'fp32' that names no recipe)."""
+    bench.emit("t1", 10.0, "d")
+    bench.emit("t2", 10.0, "d", precision="fp8")
+    assert bench.ROWS[-2]["precision"] == "none"
+    assert bench.ROWS[-1]["precision"] == "fp8"
+    with pytest.raises(ValueError):
+        bench.emit("t3", 10.0, "d", precision="fp32")
+
+
+def test_emit_prices_rows_with_costs():
+    p = rl.peaks()  # pinned by the fixture: 10 GB/s, 100 GFLOP/s
+    bench.emit("t", 200.0, "d", cost=rl.Cost(bytes=1e6, flops=0.0))
+    row = bench.ROWS[-1]
+    assert row["roofline_us"] == pytest.approx(1e6 / (p.bw_gbps * 1e9) * 1e6)
+    assert row["efficiency"] == pytest.approx(row["roofline_us"] / 200.0)
+    bench.emit("t0", 5.0, "d")  # un-modeled rows carry zeros
+    assert bench.ROWS[-1]["roofline_us"] == 0.0
+    assert bench.ROWS[-1]["efficiency"] == 0.0
+
+
+def _payload(rows, peaks=None):
+    cfg = {}
+    if peaks is not None:
+        cfg["peaks"] = {"bw_gbps": peaks[0], "gflops": peaks[1]}
+    return {"config": cfg, "rows": rows}
+
+
+def _row(name, us, derived="", precision="none"):
+    return {"name": name, "us_per_call": us, "derived": derived,
+            "precision": precision}
+
+
+def test_diff_flags_kernel_time_regression():
+    base = _payload([_row("k", 1000.0)])
+    ok = _payload([_row("k", 1150.0)])     # +15% < 20% tolerance
+    badp = _payload([_row("k", 1300.0)])   # +30%
+    assert bench.diff_payloads(base, ok)[0] == []
+    fails, _ = bench.diff_payloads(base, badp)
+    assert len(fails) == 1 and "k [none]" in fails[0]
+
+
+def test_diff_gates_throughput_rows_on_tok_s_not_us():
+    """Rows carrying decode_tok_s are judged on throughput (>10% drop
+    fails); their us_per_call — dominated by python step overhead — is
+    exempt even when it grows past the kernel tolerance."""
+    base = _payload([_row("s", 1000.0, "decode_tok_s=100.0")])
+    ok = _payload([_row("s", 5000.0, "decode_tok_s=95.0")])   # -5%
+    bad = _payload([_row("s", 1000.0, "decode_tok_s=80.0")])  # -20%
+    assert bench.diff_payloads(base, ok)[0] == []
+    fails, _ = bench.diff_payloads(base, bad)
+    assert len(fails) == 1 and "decode_tok_s" in fails[0]
+
+
+def test_diff_skips_sub_floor_rows_and_keys_on_precision():
+    base = _payload([_row("tiny", 10.0),                      # < 50us floor
+                     _row("k", 1000.0, precision="fp8"),
+                     _row("gone", 1000.0)])
+    cur = _payload([_row("tiny", 500.0),                      # 50x "worse"
+                    _row("k", 1000.0, precision="int8"),      # different key
+                    _row("new", 9999.0)])
+    fails, notes = bench.diff_payloads(base, cur)
+    assert fails == []
+    assert any("1 shared" in n for n in notes)
+
+
+def test_diff_tolerates_legacy_fp32_labels():
+    """Pre-§13 baselines label float rows 'fp32' (not a RECIPES name);
+    they must key against fresh 'none' rows instead of silently dropping
+    out of the comparison."""
+    base = _payload([_row("k", 1000.0, precision="fp32")])
+    cur = _payload([_row("k", 1300.0, precision="none")])
+    fails, _ = bench.diff_payloads(base, cur)
+    assert len(fails) == 1
+
+
+def test_diff_scales_tolerance_by_machine_peaks():
+    """A baseline committed from a 2x-faster machine must not fail the
+    gate on the slower one: tolerances scale by the calibration ratio."""
+    base = _payload([_row("k", 1000.0)], peaks=(20.0, 200.0))
+    cur_slow = _payload([_row("k", 2300.0)], peaks=(10.0, 100.0))
+    fails, notes = bench.diff_payloads(base, cur_slow)
+    assert fails == []
+    assert any("2.00x" in n for n in notes)
+    # same 2.3x wall-clock growth WITHOUT the speed excuse still fails
+    cur_same = _payload([_row("k", 2300.0)], peaks=(20.0, 200.0))
+    assert len(bench.diff_payloads(base, cur_same)[0]) == 1
+
+
+def test_serve_decode_cost_prices_params_and_kv():
+    params = {"w": np.zeros((4, 4), np.float32)}     # 64 bytes
+    cache = {"k": np.zeros((2, 8), np.float32)}      # 64 bytes, 16 tokens
+    c = brl.serve_decode_cost(params, cache, batch=2, kv_len=8,
+                              num_pages=4, page_size=4)
+    assert c.bytes == 64.0 + 2 * 8 * (64.0 / 16)
+    assert c.flops == 2.0 * (64.0 / 4.0) * 2

@@ -306,6 +306,37 @@ def test_pack_params_packs_stacked_unit_weights():
     assert set(packed["lm_head"]) == {"values", "indices", "s_w"}
 
 
+def test_engine_warmup_compiles_without_touching_state():
+    """Regression (ISSUE 7): warmup() pre-compiles the per-engine jitted
+    step closures outside any measured window and must be invisible to
+    the request path — zero counters, untouched KV pool, and a token
+    stream identical to an engine that never warmed (the 'prefix cache
+    halves decode tok/s' report was compile time billed into wall_s)."""
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=k).tolist()
+               for k in (10, 6)]
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=16,
+                                   max_seq_len=24, prefill_chunk=8)
+    cold = serve_loop.ServeEngine(params, cfg, ecfg)
+    for i, p in enumerate(prompts):
+        cold.submit(p, 4, rid=i, arrival=i)
+    ref = {i: c.tokens for i, c in cold.run().items()}
+
+    warm = serve_loop.ServeEngine(params, cfg, ecfg)
+    warm.warmup()
+    assert warm.stats.warmup_s > 0
+    assert warm.stats.steps == 0 and warm.stats.decode_tokens == 0
+    assert warm.kv.pool.num_free == ecfg.num_pages
+    np.testing.assert_array_equal(  # dummy-input calls left the KV alone
+        np.asarray(jax.tree_util.tree_leaves(warm.cache)[0]), 0)
+    for i, p in enumerate(prompts):
+        warm.submit(p, 4, rid=i, arrival=i)
+    got = {i: c.tokens for i, c in warm.run().items()}
+    assert got == ref
+
+
 def test_paged_engine_eviction_parity():
     """Under page pressure (forced recompute-preemption) the stream is
     still identical to the dense reference."""

@@ -5,8 +5,12 @@
 #    sweeps (fused single-pass GEMM, decompress-once compressed matmul,
 #    fp8 quant+lift) and the property tests, which run with or without
 #    hypothesis via tests/proptest.py — no silently-skipped modules.
-# 2. A ~30s benchmark smoke: the fused-pipeline comparison runs both GEMM
-#    pipelines end-to-end and emits a machine-readable BENCH_*.json.
+# 2. The perf gate (DESIGN.md §13): the fused-pipeline + serve benches run
+#    in --diff mode against the newest committed BENCH_*.json and fail on
+#    >20% kernel-time / >10% decode-tok/s regressions (tolerances scaled
+#    by the two runs' machine-speed calibrations); the benches also
+#    self-assert fused <= 1.2x two-kernel and prefix-cache-on decode
+#    >= 0.9x cache-off.
 # 3. Serve-engine smokes: a few requests with staggered arrivals join,
 #    decode, and retire through the continuous-batching paged-KV engine;
 #    every stream is checked against the one-shot dense-KV reference
@@ -31,7 +35,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-timeout 240 python -m benchmarks.run fused_pipeline
+# perf gate: rerun the kernel + serving benches and diff against the
+# newest committed baseline json (exit 1 on out-of-tolerance regressions)
+timeout 600 python -m benchmarks.run fused_pipeline bench_serve --diff
 
 timeout 300 python examples/serve_batched.py --engine --requests 3 \
     --batch 2 --prompt-len 16 --new-tokens 6
