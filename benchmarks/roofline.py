@@ -29,8 +29,8 @@ import jax
 from repro.kernels.roofline import (  # noqa: F401  (re-exported surface)
     Cost, Peaks, compressed_k, compressed_matmul, cow_copy, dense_gemm,
     efficiency, fused_quant_slide, fused_slided_matmul, itemsize, lifted_k,
-    measure_peaks, paged_attention_decode, peaks, quant_matmul, roofline_us,
-    two_kernel)
+    measure_peaks, paged_attention_decode, paged_attention_verify, peaks,
+    quant_matmul, roofline_us, two_kernel)
 
 
 def tree_bytes(tree) -> float:
@@ -53,3 +53,17 @@ def serve_decode_cost(params, cache, batch: int, kv_len: int,
     per_token = cb / max(num_pages * page_size, 1)
     # ~2 flops per weight element (fp32 params) per sequence in the batch
     return Cost(pb + batch * kv_len * per_token, 2.0 * (pb / 4.0) * batch)
+
+
+def serve_verify_cost(params, cache, batch: int, lanes: int, kv_len: int,
+                      num_pages: int, page_size: int) -> Cost:
+    """Nominal analytic floor of ONE speculative verify step (DESIGN.md
+    §14): the weight stream and paged-K/V traffic of ``serve_decode_cost``
+    are UNCHANGED — one batched pass reads each byte once no matter how
+    many lanes score against it — while the GEMM flops scale with
+    ``lanes = K+1``.  The per-*emitted-token* cost therefore drops by the
+    acceptance rate: this is the arithmetic-intensity lever that re-feeds
+    the paper's compute-bound fused GEMMs during decode."""
+    base = serve_decode_cost(params, cache, batch, kv_len, num_pages,
+                             page_size)
+    return Cost(base.bytes, base.flops * lanes)

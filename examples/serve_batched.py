@@ -42,7 +42,13 @@ def engine_demo(args, base, params):
     requests mid-flight.  The parity contract then becomes status-typed:
     OK streams must equal the dense reference exactly, CANCELLED/TIMEOUT/
     FAILED streams must be a *prefix* of it, REJECTED streams are empty —
-    injected chaos must never corrupt a surviving request."""
+    injected chaos must never corrupt a surviving request.
+
+    ``--speculate K`` turns on self-speculative decoding (DESIGN.md §14):
+    a prompt-lookup draft source proposes up to K tokens per sequence and
+    one fixed-shape [B, K+1] verify step scores them all; the longest
+    agreeing prefix is accepted, so the streams remain argmax-identical
+    to the K=0 run — the same dense-reference parity check applies."""
     z, l = args.pattern
     if args.shared_prefix >= args.prompt_len:
         raise SystemExit(f"--shared-prefix {args.shared_prefix} must be < "
@@ -80,7 +86,8 @@ def engine_demo(args, base, params):
         max_seq_len=args.prompt_len + args.new_tokens,
         prefill_chunk=max(8, args.prompt_len // 2), tp=args.tp,
         prefix_cache=args.prefix_cache, policy=args.policy,
-        watchdog=args.watchdog, faults=plan)
+        watchdog=args.watchdog, faults=plan,
+        speculate=args.speculate, draft_source=args.draft)
     eng = serve_loop.ServeEngine(packed, cfg, ecfg)
     for i, p in enumerate(prompts):
         eng.submit(p, args.new_tokens, rid=i, arrival=2 * i)
@@ -107,6 +114,12 @@ def engine_demo(args, base, params):
           f"({s.decode_tok_s_per_device:.1f}/device), "
           f"batch occupancy {s.mean_occupancy:.2f}, "
           f"evictions {s.evictions}")
+    if args.speculate > 0:
+        print(f"speculative decode (K={args.speculate}, "
+              f"source={args.draft}): {s.verify_steps} verify steps, "
+              f"{s.accepted_tokens}/{s.draft_tokens} drafts accepted "
+              f"(rate {s.acceptance_rate:.2f}) — streams below must STILL "
+              "match the dense reference token-for-token (DESIGN.md §14)")
     if plan is not None or cancel_at:
         print(f"lifecycle: ok={s.completed_ok} cancelled={s.cancelled} "
               f"timeouts={s.timeouts} rejected={s.rejected} "
@@ -194,6 +207,14 @@ def main():
     ap.add_argument("--watchdog", action="store_true",
                     help="engine mode: assert KV invariants after every "
                          "scheduler decision (quarantine on violation)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="engine mode: self-speculative decoding — draft "
+                         "up to K tokens per sequence and score them in "
+                         "one fixed-shape [B, K+1] verify step (DESIGN.md "
+                         "§14); output is argmax-identical to K=0")
+    ap.add_argument("--draft", default="ngram",
+                    help="engine mode: draft source for --speculate "
+                         "(registered: ngram, random)")
     args = ap.parse_args()
 
     base = registry.smoke_config(args.arch)

@@ -151,6 +151,23 @@ def paged_attention_decode(batch: int, kv_len: int, kv_heads: int,
                 4.0 * batch * q_heads * kv_len * head_dim)
 
 
+def paged_attention_verify(batch: int, kv_len: int, lanes: int,
+                           kv_heads: int, head_dim: int,
+                           q_heads: int | None = None,
+                           kv_itemsize: float = 4.0) -> Cost:
+    """One speculative verify step (DESIGN.md §14): identical K/V page
+    streaming to a decode step — the pages are read once regardless of
+    how many query lanes score against them, which is exactly why
+    verifying K drafts is nearly free on the memory side — plus
+    ``lanes = K+1`` query rows' worth of q/out traffic and attention
+    FLOPs.  At lanes == 1 this degenerates to ``paged_attention_decode``.
+    """
+    q_heads = q_heads or kv_heads
+    kv_bytes = 2.0 * batch * kv_len * kv_heads * head_dim * kv_itemsize
+    return Cost(kv_bytes + lanes * batch * q_heads * head_dim * 4.0 * 2.0,
+                lanes * 4.0 * batch * q_heads * kv_len * head_dim)
+
+
 def cow_copy(pairs: int, page_size: int, kv_heads: int, head_dim: int,
              layers: int, kv_itemsize: float = 4.0) -> Cost:
     """Copy-on-write page forks (DESIGN.md §11): each pair reads + writes

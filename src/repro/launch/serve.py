@@ -66,6 +66,14 @@ def main(argv=None):
                     help="--engine: per-request step budget; requests "
                          "exceeding it finish as TIMEOUT with their "
                          "partial stream")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="--engine: self-speculative decoding — draft up "
+                         "to K tokens per sequence, score them in one "
+                         "fixed-shape [B, K+1] verify step (DESIGN.md "
+                         "§14); streams are argmax-identical to K=0")
+    ap.add_argument("--draft", default="ngram",
+                    help="--engine: draft source for --speculate "
+                         "(registered: ngram, random)")
     args = ap.parse_args(argv)
     if args.tp > 1 and not args.engine:
         raise SystemExit("--tp requires --engine (the one-shot loop is "
@@ -100,7 +108,8 @@ def main(argv=None):
             max_seq_len=args.prompt_len + args.new_tokens,
             prefill_chunk=args.prefill_chunk, tp=args.tp,
             prefix_cache=args.prefix_cache, policy=args.policy,
-            max_queue=args.max_queue, watchdog=args.watchdog, faults=plan)
+            max_queue=args.max_queue, watchdog=args.watchdog, faults=plan,
+            speculate=args.speculate, draft_source=args.draft)
         eng = serve_loop.ServeEngine(params, cfg, ecfg)
         for i in range(args.batch):
             eng.submit(batch["tokens"][i].tolist(), args.new_tokens,
@@ -118,6 +127,11 @@ def main(argv=None):
             print(f"[launch.serve] prefix cache: hit_rate "
                   f"{s.prefix_hit_rate:.2f}; {s.prefill_chunks_skipped} "
                   f"chunks skipped; {s.cow_copies} COW copies")
+        if args.speculate > 0:
+            print(f"[launch.serve] speculative: K={args.speculate} "
+                  f"source={args.draft}; {s.verify_steps} verify steps; "
+                  f"accepted {s.accepted_tokens}/{s.draft_tokens} "
+                  f"(rate {s.acceptance_rate:.2f})")
         if plan is not None or args.watchdog or args.max_queue is not None \
                 or args.deadline_steps is not None:
             eng.kv.check()  # robustness run: prove pages balanced

@@ -193,6 +193,36 @@ def _decode_sdpa(spec: AttnSpec, q, k, v, kv_len):
     return out.reshape(b, 1, h, hd).astype(q.dtype)
 
 
+def _verify_sdpa(spec: AttnSpec, q, k, v, kv_len):
+    """C-query causal decode attention for the speculative verify step.
+    q: [B, C, H, hd] with query row i at absolute position
+    ``kv_len[b] - 1 + i``; k/v: [B, S_cache, KVH, hd]; kv_len: [B] valid
+    KV lengths *for query row 0* (same convention as ``_decode_sdpa``:
+    the caller passes pre-write length + 1).  Row i sees i extra
+    positions — the draft tokens written before it in this same step.
+
+    At C == 1 this computes exactly ``_decode_sdpa`` (same einsums, and
+    the mask degenerates to the same ``k_pos < kv_len`` / sliding-window
+    bounds) — the identity the spec-on ≡ spec-off parity suite rests on.
+    """
+    b, c, h, hd = q.shape
+    s = k.shape[1]
+    kvh = k.shape[2]
+    rep = h // kvh
+    q5 = (q * hd ** -0.5).reshape(b, c, kvh, rep, hd)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", q5, k).astype(jnp.float32)
+    k_pos = jnp.arange(s, dtype=jnp.int32)[None, None, :]      # [1, 1, S]
+    row_len = kv_len[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    valid = k_pos < row_len[:, :, None]                        # [B, C, S]
+    if spec.sliding_window is not None:
+        valid &= k_pos >= (row_len[:, :, None] - spec.sliding_window)
+    # valid is [B, q, S]; scores are [B, g, r, q, S]
+    scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v)
+    return out.reshape(b, c, h, hd).astype(q.dtype)
+
+
 def apply(params, spec: AttnSpec, x, positions, sp_cfg: SparsityConfig,
           cache=None, kv_len=None, cross_kv=None):
     """Returns (out [B, S, D], new_cache | None).
@@ -406,6 +436,54 @@ def paged_decode_step(params, spec: AttnSpec, x, sp_cfg: SparsityConfig,
     kd, vd = _pool_gather(pool, page_table, x.dtype)
     out = _decode_sdpa(spec, q, kd, vd, kv_len + 1)
     out = out.reshape(b, 1, spec.q_dim)
+    return sl.apply(params["wo"], out, sp_cfg, reduce_out=True), pool
+
+
+def paged_verify_step(params, spec: AttnSpec, x, sp_cfg: SparsityConfig,
+                      pool, page_table, kv_len, real_len, active,
+                      page_size: int):
+    """Speculative verify over the paged pool (DESIGN.md §14).
+
+    x: [B, C, D] — per slot, the last emitted token t0 followed by the
+    draft tokens d1..dn, right-padded to C = K+1 lanes.  kv_len: [B]
+    *pre-step* write positions (== seq.kv_len - 1: the slot's last
+    emitted token has no KV yet, exactly like a decode step).  real_len:
+    [B] number of real lanes (1 + n_draft).  active: [B] bool.
+
+    Row i is at absolute position kv_len + i; all C rows' K/V scatter
+    into the slot's pages first (pad lanes and inactive slots dropped via
+    the page_id == num_pages convention), then every row attends
+    causally over the pool — the multi-token write path chunked prefill
+    already exercises, at decode's fixed batch shape.  Logits of row i
+    predict the token after draft token i; the host applies the
+    longest-agreeing-prefix rule and *rolls back* rejected lanes by
+    simply not advancing kv_len past them — their writes are invisible
+    to every later mask and get overwritten in place.
+    Returns (out [B, C, D], new_pool)."""
+    b, c, _ = x.shape
+    num_pages = pool["k"].shape[0]
+    lane = jnp.arange(c, dtype=jnp.int32)
+    positions = kv_len[:, None] + lane[None, :]                  # [B, C]
+    q = _split_heads(sl.apply(params["wq"], x, sp_cfg), spec.num_heads,
+                     spec.head_dim)
+    q = _rope(spec, q, positions)
+    k_new = _split_heads(sl.apply(params["wk"], x, sp_cfg),
+                         spec.num_kv_heads, spec.head_dim)
+    v_new = _split_heads(sl.apply(params["wv"], x, sp_cfg),
+                         spec.num_kv_heads, spec.head_dim)
+    k_new = _rope(spec, k_new, positions)
+
+    page_ids = page_table[jnp.arange(b)[:, None], positions // page_size]
+    writable = (lane[None, :] < real_len[:, None]) & active[:, None]
+    page_ids = jnp.where(writable, page_ids, num_pages)          # drop pads
+    pool = _pool_scatter(pool, page_ids.reshape(-1),
+                         (positions % page_size).reshape(-1),
+                         k_new.reshape((b * c,) + k_new.shape[2:]),
+                         v_new.reshape((b * c,) + v_new.shape[2:]))
+
+    kd, vd = _pool_gather(pool, page_table, x.dtype)
+    out = _verify_sdpa(spec, q, kd, vd, kv_len + 1)
+    out = out.reshape(b, c, spec.q_dim)
     return sl.apply(params["wo"], out, sp_cfg, reduce_out=True), pool
 
 

@@ -85,6 +85,17 @@ def paged_decode_step(params, cfg: ModelConfig, token, cache, page_table,
         params, cfg, token, cache, page_table, kv_len, active, page_size)
 
 
+def paged_verify_step(params, cfg: ModelConfig, tokens, cache, page_table,
+                      kv_len, real_len, active, page_size: int):
+    """Speculative verify step: score [B, K+1] draft lanes per slot in
+    one batched pass (DESIGN.md §14); same tensor-parallel calling
+    convention as paged_prefill_chunk.  Decoder-only, attention-only —
+    SSM stacks are rejected at engine construction."""
+    return transformer.paged_verify_step(
+        params, cfg, tokens, cache, page_table, kv_len, real_len, active,
+        page_size)
+
+
 def paged_copy_pages(cfg: ModelConfig, cache, src_ids, dst_ids):
     """Copy-on-write page duplication across the whole stack (the data
     plane behind the prefix cache's shared pages, DESIGN.md §11); same

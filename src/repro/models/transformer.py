@@ -462,6 +462,52 @@ def paged_decode_step(params, cfg: ModelConfig, token, cache, page_table,
     return logits, new_cache
 
 
+def paged_verify_step(params, cfg: ModelConfig, tokens, cache, page_table,
+                      kv_len, real_len, active, page_size: int):
+    """Speculative verify step (DESIGN.md §14): score C = K+1 tokens per
+    slot in one batched pass.  tokens: [B, C] — per slot the last emitted
+    token followed by its draft tokens, right-padded; kv_len: [B] pre-step
+    *written* lengths (== seq.kv_len - 1, the decode convention);
+    real_len: [B] real lane counts (1 + n_draft); active: [B] bool.
+    Returns (logits [B, C, V], new_cache) — logits[:, i] predicts the
+    token following lane i; the host accepts the longest agreeing prefix.
+
+    SSM stacks are rejected at engine construction (the recurrent state
+    advances in place and cannot roll back a rejected suffix), so every
+    mixer here is paged attention."""
+    b, c = tokens.shape
+    x = layers.embed(params["embed"], tokens).astype(_dtype(cfg))
+    sp = cfg.sparsity
+
+    def unit_fn(carry, xs):
+        unit_params, unit_cache = xs
+        xx = carry
+        new_cache = {}
+        for i, (kind, is_moe) in enumerate(
+                zip(cfg.unit_pattern, cfg.moe_pattern)):
+            if kind == "ssm":
+                raise ValueError(
+                    "speculative verify_step does not support SSM layers "
+                    "(recurrent state cannot roll back rejected drafts)")
+            lp = unit_params[f"layer_{i}"]
+            lc = unit_cache[f"layer_{i}"]
+            hh = layers.rmsnorm(lp["pre_norm"], xx, cfg.norm_eps)
+            y, nc = attention.paged_verify_step(
+                lp["mixer"], attn_spec(cfg, kind), hh, sp, lc,
+                page_table, kv_len, real_len, active, page_size)
+            xx = xx + y
+            if cfg.d_ff > 0:
+                hh = layers.rmsnorm(lp["ffn_norm"], xx, cfg.norm_eps)
+                xx = xx + _ffn(lp, cfg, hh, sp, is_moe)
+            new_cache[f"layer_{i}"] = nc
+        return xx, new_cache
+
+    x, new_cache = jax.lax.scan(unit_fn, x, (params["units"], cache))
+    h = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, cfg, h)
+    return logits, new_cache
+
+
 def serve_step(params, cfg: ModelConfig, token, cache, kv_len):
     """One-token decode. token: [B] int32; cache: stacked unit cache;
     kv_len: [B] current lengths. Returns (logits [B, V], cache, kv_len+1)."""

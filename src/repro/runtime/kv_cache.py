@@ -367,6 +367,27 @@ class KVCacheManager:
         if pages:
             self.pool.release(pages)
 
+    def truncate(self, slot: int, num_tokens: int) -> list[int]:
+        """Shrink slot's table to exactly cover ``num_tokens`` tokens,
+        releasing the tail pages — the accounting half of speculative
+        KV *rollback* (DESIGN.md §14): pages allocated to hold rejected
+        draft tokens return to the pool, and because speculation only
+        ever writes past the fully-prefilled prompt, the released tail is
+        always exclusively owned (refcount 1) and unregistered — a
+        registered page would park in the prefix cache via ``release``,
+        preserving every ``check()`` invariant either way.  Device-side
+        the rejected rows need no erase: they sit at positions >= the
+        rolled-back ``kv_len``, which every later mask treats as unwritten
+        and the next step overwrites in place.  Returns the released
+        pages (for the decision trace)."""
+        table = self._tables.get(slot, [])
+        keep = self.cfg.pages_for(num_tokens)
+        tail = table[keep:]
+        if tail:
+            del table[keep:]
+            self.pool.release(tail)
+        return tail
+
     # ------------------------------------------------------ prefix cache
     def lookup_prefix(self, hashes) -> list[int]:
         """Longest cached chain for ``hashes``: pages for blocks

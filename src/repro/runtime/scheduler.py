@@ -171,7 +171,21 @@ class DecodeBatch:
     cow: tuple[tuple[int, int], ...] = ()   # (src, dst) page copies, pre-step
 
 
-Decision = PrefillChunk | DecodeBatch
+@dataclasses.dataclass(frozen=True)
+class VerifyBatch:
+    """Speculative decode step (DESIGN.md §14): for every running
+    sequence, feed its last emitted token plus ``drafts[i]`` proposed
+    tokens through the fixed-shape verify step; the engine accepts the
+    longest agreeing prefix and reports back via ``completed_verify``
+    (which appends tokens, rolls back rejected-suffix pages, and keeps
+    the draft/accept accounting).  ``drafts`` aligns with ``seqs``; an
+    empty draft degrades that lane to a plain decode."""
+    seqs: tuple[Sequence, ...]
+    drafts: tuple[tuple[int, ...], ...]
+    cow: tuple[tuple[int, int], ...] = ()   # (src, dst) page copies, pre-step
+
+
+Decision = PrefillChunk | DecodeBatch | VerifyBatch
 
 
 # ------------------------------------------------------------------ policy
@@ -295,6 +309,12 @@ class SchedStats:
     prefix_hit_tokens: int = 0      # prompt tokens skipped via cached pages
     prefill_chunks_skipped: int = 0  # chunk decisions avoided by hits
     cow_copies: int = 0             # copy-on-write page copies issued
+    # speculative decoding (DESIGN.md §14) — accepted draft tokens count
+    # as *decode_tokens* (they are generated output, not prefill work), so
+    # prefix_hit_rate / goodput stay truthful
+    verify_steps: int = 0           # VerifyBatch decisions executed
+    draft_tokens: int = 0           # draft tokens proposed to verify steps
+    accepted_tokens: int = 0        # draft tokens accepted (bonus excluded)
     # request lifecycle (DESIGN.md §12) — terminal-status counters
     cancelled: int = 0
     timeouts: int = 0
@@ -321,6 +341,11 @@ class SchedStats:
         return float(xs[i])
 
     @property
+    def acceptance_rate(self) -> float:
+        """Accepted fraction of proposed draft tokens (0 when no drafts)."""
+        return self.accepted_tokens / max(self.draft_tokens, 1)
+
+    @property
     def prefix_hit_rate(self) -> float:
         """Cached fraction of all prompt tokens that needed KV: hits over
         hits + actually-prefilled (first-pass and recomputed) tokens."""
@@ -345,12 +370,19 @@ class Scheduler:
                  max_queue: int | None = None,
                  watchdog: bool = False,
                  evict_retry_limit: int = 3,
+                 speculate: int = 0,
+                 draft_source=None,
                  time_fn=time.monotonic):
         self.kv = kv
         self.cfg: PagedKVConfig = kv.cfg
         self.prefill_chunk = prefill_chunk
         self.policy = policy or FCFSPolicy()
         self.prefix_cache = prefix_cache
+        # speculative decoding (§14): with speculate=K > 0, decode-shaped
+        # decisions become VerifyBatch — draft_source proposes <= K tokens
+        # per sequence and the engine verifies them in one batched pass
+        self.speculate = speculate
+        self.draft_source = draft_source
         self.max_queue = max_queue          # bounded admission queue (§12)
         self.watchdog = watchdog            # invariant check per decision
         self.evict_retry_limit = evict_retry_limit
@@ -656,6 +688,13 @@ class Scheduler:
         if isinstance(decision, DecodeBatch):
             keep = tuple(s for s in decision.seqs if s.rid not in qrids)
             return DecodeBatch(keep, decision.cow) if keep else None
+        if isinstance(decision, VerifyBatch):
+            kept = [(s, d) for s, d in zip(decision.seqs, decision.drafts)
+                    if s.rid not in qrids]
+            if not kept:
+                return None
+            return VerifyBatch(tuple(s for s, _ in kept),
+                               tuple(d for _, d in kept), decision.cow)
         return decision
 
     def _decide(self) -> Decision | None:
@@ -684,12 +723,21 @@ class Scheduler:
             self.trace.append(f"prefill r{seq.rid}[{start}:{start + length}]")
             return PrefillChunk(seq, start, length, self._record_cow(cow))
         if decoding:
+            speculating = self.speculate > 0 and self.draft_source is not None
+            drafts: dict[int, tuple[int, ...]] = {}
+            if speculating:
+                for seq in decoding:
+                    drafts[seq.rid] = self._propose(seq)
             per_seq: list[tuple[Sequence, list[tuple[int, int]]]] = []
             for seq in decoding:
                 if seq in self.running:  # an earlier ensure may have evicted it
                     try:
+                        # a verify step writes K/V for the feed token AND
+                        # its n draft tokens: positions kv_len-1 .. -1+n
+                        n_draft = len(drafts.get(seq.rid, ()))
                         per_seq.append((seq, self._ensure_or_evict(
-                            seq, seq.kv_len, write_start=seq.kv_len - 1)))
+                            seq, seq.kv_len + n_draft,
+                            write_start=seq.kv_len - 1)))
                     except ScheduleFailed as f:
                         # fail only the starved sequence; its pages are
                         # released, and its booked COW pairs are dropped
@@ -705,15 +753,41 @@ class Scheduler:
             if not decoding:  # everyone got evicted while making room
                 self._last_was_prefill = False
                 return None
-            self.stats.decode_tokens += len(decoding)
             self.stats.decode_steps += 1
             self.stats.occupancy_sum += len(decoding) / self.cfg.max_batch
             self._last_was_prefill = False
+            if speculating:
+                # decode_tokens/accepted accounting lands in
+                # completed_verify, once acceptance is known
+                dseq = tuple(drafts.get(s.rid, ()) for s in decoding)
+                self.stats.verify_steps += 1
+                self.stats.draft_tokens += sum(len(d) for d in dseq)
+                self.trace.append("verify " + ",".join(
+                    f"r{s.rid}+{len(d)}" for s, d in zip(decoding, dseq)))
+                return VerifyBatch(tuple(decoding), dseq,
+                                   self._record_cow(cow))
+            self.stats.decode_tokens += len(decoding)
             self.trace.append(
                 "decode " + ",".join(f"r{s.rid}" for s in decoding))
             return DecodeBatch(tuple(decoding), self._record_cow(cow))
         self._last_was_prefill = False
         return None  # only future arrivals remain — engine ticks the clock
+
+    def _propose(self, seq: Sequence) -> tuple[int, ...]:
+        """Draft tokens for one sequence, capped so the verify step can
+        never overrun max_seq_len, the request's token budget (emitting
+        n_draft + 1 tokens must fit max_new_tokens), or an eos already in
+        the draft (tokens after it could never be emitted)."""
+        cap = min(self.speculate,
+                  self.cfg.max_seq_len - seq.kv_len,
+                  seq.req.max_new_tokens - len(seq.out_tokens) - 1)
+        if cap <= 0:
+            return ()
+        d = [int(t) for t in
+             self.draft_source.propose(seq.prompt + seq.out_tokens, cap)][:cap]
+        if seq.req.eos_id is not None and seq.req.eos_id in d:
+            d = d[:d.index(seq.req.eos_id) + 1]
+        return tuple(d)
 
     # --------------------------------------------------------- feedback
     def completed_prefill(self, chunk: PrefillChunk) -> None:
@@ -731,6 +805,28 @@ class Scheduler:
 
     def append_token(self, seq: Sequence, token: int) -> None:
         seq.out_tokens.append(token)
+
+    def completed_verify(self, batch: VerifyBatch,
+                         results: list[tuple[int, list[int]]]) -> None:
+        """Feedback for one executed VerifyBatch.  ``results`` aligns with
+        ``batch.seqs``: per sequence, ``(n_accepted, emitted)`` from the
+        longest-agreeing-prefix rule (``draft.accept_drafts``, possibly
+        truncated at eos).  Appends the emitted tokens (they are decode
+        output — generated, never prefill), counts acceptance, and rolls
+        back the rejected suffix by truncating the page table to the
+        decode-step postcondition: coverage of ``kv_len - 1`` tokens, the
+        exact state a chain of plain decode steps would have left
+        (DESIGN.md §14)."""
+        for seq, drft, (n_acc, emitted) in zip(batch.seqs, batch.drafts,
+                                               results):
+            if seq not in self.running:   # quarantined/cancelled mid-step
+                continue
+            for t in emitted:
+                seq.out_tokens.append(int(t))
+            self.stats.decode_tokens += len(emitted)
+            self.stats.accepted_tokens += n_acc
+            self.kv.truncate(seq.slot, seq.kv_len - 1)
+            self.trace.append(f"accept r{seq.rid}:{n_acc}/{len(drft)}")
 
     def retire_finished(self) -> list[Sequence]:
         """Retire sequences that completed normally (terminal status OK,

@@ -33,11 +33,12 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.core import linear as sl
 from repro.models import model as M
+from repro.runtime import draft as draft_mod
 from repro.runtime import faults as fl
 from repro.runtime.kv_cache import KVCacheManager, PagedKVConfig
 from repro.runtime import scheduler as sch
 from repro.runtime.scheduler import (DecodeBatch, PrefillChunk, Request,
-                                     Scheduler, make_policy)
+                                     Scheduler, VerifyBatch, make_policy)
 from repro.sharding import tp as tpmod
 
 
@@ -135,6 +136,13 @@ class EngineConfig:
     prompt prefix with earlier traffic fork the cached pages and prefill
     only the uncached suffix.  ``policy`` names the admission/eviction
     policy (``fcfs`` | ``priority`` — ``scheduler.POLICIES``).
+
+    ``speculate=K > 0`` turns on self-speculative decoding (DESIGN.md
+    §14): the ``draft_source`` (``runtime.draft.DRAFT_SOURCES``) proposes
+    up to K tokens per running sequence and a fourth fixed-shape jitted
+    step — verify, ``[max_batch, K+1]`` — scores every draft in one
+    batched pass; the longest agreeing prefix is accepted, so greedy
+    streams are argmax-identical to ``speculate=0``.
     """
     max_batch: int = 4        # decode slots
     page_size: int = 8        # tokens per KV page
@@ -144,6 +152,8 @@ class EngineConfig:
     tp: int = 1               # tensor-parallel degree (devices in the mesh)
     prefix_cache: bool = False  # radix prefix cache + COW pages (§11)
     policy: str = "fcfs"      # scheduler policy name (fcfs | priority)
+    speculate: int = 0        # max draft tokens per verify step (0 = off)
+    draft_source: str = "ngram"  # draft source name (ngram | random)
     # request-lifecycle robustness (DESIGN.md §12)
     max_queue: int | None = None  # bounded admission queue; None = unbounded
     watchdog: bool = False    # assert kv invariants after every decision
@@ -204,6 +214,10 @@ class EngineStats:
     mean_occupancy: float = 0.0
     tp: int = 1               # tensor-parallel degree of the run
     precision: str = "none"   # precision-recipe name (DESIGN.md §10)
+    # speculative decoding (DESIGN.md §14)
+    verify_steps: int = 0     # VerifyBatch steps executed
+    draft_tokens: int = 0     # draft tokens proposed
+    accepted_tokens: int = 0  # draft tokens accepted (bonus tokens excluded)
     # prefix cache (DESIGN.md §11)
     prefix_cache: bool = False
     prefix_hit_tokens: int = 0       # prompt tokens served from cached pages
@@ -227,6 +241,11 @@ class EngineStats:
     @property
     def decode_tok_s(self) -> float:
         return self.decode_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted fraction of proposed draft tokens (0 when no drafts)."""
+        return self.accepted_tokens / max(self.draft_tokens, 1)
 
     @property
     def goodput_tok_s(self) -> float:
@@ -256,9 +275,12 @@ class ServeEngine:
     kernels, per ``cfg.sparsity`` — so the engine is the serving scenario
     wrapped around the same GEMM path the paper benchmarks.
 
-    Two jitted step functions with fixed shapes (no shape-polymorphic
-    retraces): a [1, prefill_chunk] prompt-chunk step and a [max_batch]
-    decode step.  Scheduling and page accounting stay on host.
+    Fixed-shape jitted step functions (no shape-polymorphic retraces): a
+    [1, prefill_chunk] prompt-chunk step, a [max_batch] decode step, a
+    [_cow_lanes] copy-on-write page-copy step, and — with
+    ``ecfg.speculate=K > 0`` — a [max_batch, K+1] speculative verify step
+    (DESIGN.md §14).  Scheduling, drafting, accept/reject, and page
+    accounting stay on host.
 
     With ``ecfg.tp > 1`` (DESIGN.md §9) both steps run under shard_map on
     a 1-D ``('tp',)`` mesh: attention/FFN/lm_head weights are Megatron
@@ -298,6 +320,13 @@ class ServeEngine:
                 "prefix_cache requires an attention-only stack: SSM layers "
                 "carry per-slot recurrent state that cached pages cannot "
                 "restore at the resume point (DESIGN.md §11)")
+        if self.ecfg.speculate > 0 and "ssm" in cfg.unit_pattern:
+            raise ValueError(
+                "speculate requires an attention-only stack: SSM layers "
+                "advance per-slot recurrent state in place, so a rejected "
+                "draft suffix cannot be rolled back (DESIGN.md §14)")
+        if self.ecfg.speculate < 0:
+            raise ValueError(f"speculate={self.ecfg.speculate} must be >= 0")
         self.params, self.cfg = params, cfg
         # hash namespace: cache entries are keyed to the exact serving
         # recipe — model, precision, KV dtype, mesh degree, page size —
@@ -309,11 +338,21 @@ class ServeEngine:
                          if self.ecfg.faults is not None else None)
         self.kv = KVCacheManager(self.ecfg.kv_config(), namespace=namespace,
                                  injector=self.injector)
+        # draft sources are pure host-side functions of the token context
+        # (runtime.draft): the scheduler proposes, the engine verifies
+        self.draft_source = None
+        if self.ecfg.speculate > 0:
+            kw = ({"vocab_size": cfg.vocab_size}
+                  if self.ecfg.draft_source == "random" else {})
+            self.draft_source = draft_mod.make_draft_source(
+                self.ecfg.draft_source, **kw)
         self.sched = Scheduler(self.kv, self.ecfg.prefill_chunk,
                                policy=make_policy(self.ecfg.policy),
                                prefix_cache=self.ecfg.prefix_cache,
                                max_queue=self.ecfg.max_queue,
-                               watchdog=self.ecfg.watchdog)
+                               watchdog=self.ecfg.watchdog,
+                               speculate=self.ecfg.speculate,
+                               draft_source=self.draft_source)
         self.cache = M.make_paged_cache(cfg, self.ecfg.num_pages,
                                         self.ecfg.page_size,
                                         self.ecfg.max_batch)
@@ -337,6 +376,14 @@ class ServeEngine:
             with tpmod.activate(ntp):
                 return M.paged_copy_pages(cfg, c, src, dst)
 
+        # verify lanes: the last emitted token + up to `speculate` drafts
+        self._verify_lanes = self.ecfg.speculate + 1
+
+        def verify_step(p, tok, c, pt, kvl, rlen, act):
+            with tpmod.activate(ntp):
+                return M.paged_verify_step(p, cfg, tok, c, pt, kvl, rlen,
+                                           act, ps)
+
         if ntp > 1:
             tpmod.validate(cfg, ntp)
             self.mesh = tpmod.make_serve_mesh(ntp)
@@ -357,6 +404,14 @@ class ServeEngine:
                 decode_step, mesh=self.mesh,
                 in_specs=(pspecs, rep, cspecs, rep, rep, rep),
                 out_specs=(logits_spec, cspecs), check_rep=False))
+            if self.ecfg.speculate > 0:
+                # verify logits are [B, K+1, V]: vocab still column-
+                # parallel, one extra replicated lane axis in the middle
+                self._verify_fn = jax.jit(shard_map(
+                    verify_step, mesh=self.mesh,
+                    in_specs=(pspecs, rep, cspecs, rep, rep, rep, rep),
+                    out_specs=(P(None, None, "tp"), cspecs),
+                    check_rep=False))
             # COW page copies are per-shard elementwise on the head-sharded
             # pools; the host-decided (src, dst) pairs replicate, so every
             # shard copies the same page structure (DESIGN.md §11)
@@ -367,6 +422,8 @@ class ServeEngine:
             self._prefill_fn = jax.jit(prefill_step)
             self._decode_fn = jax.jit(decode_step)
             self._cow_fn = jax.jit(copy_step)
+            if self.ecfg.speculate > 0:
+                self._verify_fn = jax.jit(verify_step)
         self.completions: dict[int, Completion] = {}
         self._prompts: dict[int, list[int]] = {}
         self.stats = EngineStats(tp=ntp, precision=cfg.sparsity.recipe.name)
@@ -374,7 +431,8 @@ class ServeEngine:
     # ------------------------------------------------------------ warmup
     def warmup(self) -> float:
         """Compile + first-execute the engine's fixed-shape jitted steps
-        (prefill, decode, COW copy) outside any measured window.
+        (prefill, decode, COW copy — plus verify when speculating)
+        outside any measured window.
 
         The step functions are per-engine closures, so every new engine
         pays jit compilation on its first real step — and ``run`` bills
@@ -401,6 +459,14 @@ class ServeEngine:
         jax.block_until_ready(self._cow_fn(
             self.cache, np.zeros((n,), np.int32),
             np.full((n,), ec.num_pages, np.int32)))
+        if ec.speculate > 0:
+            # inactive slots drop every write, so the dummy pass is pure
+            jax.block_until_ready(self._verify_fn(
+                self.params,
+                np.zeros((ec.max_batch, self._verify_lanes), np.int32),
+                self.cache, ptab, np.zeros((ec.max_batch,), np.int32),
+                np.ones((ec.max_batch,), np.int32),
+                np.zeros((ec.max_batch,), bool)))
         self.stats.warmup_s = time.time() - t0
         return self.stats.warmup_s
 
@@ -540,6 +606,40 @@ class ServeEngine:
                 if not seq.prefilling:  # prompt done -> first token
                     self.sched.append_token(seq, self._sample(
                         np.asarray(logits[0])))
+            elif isinstance(decision, VerifyBatch):
+                bmax, lanes = self.ecfg.max_batch, self._verify_lanes
+                token = np.zeros((bmax, lanes), np.int32)
+                kvl = np.zeros((bmax,), np.int32)
+                rlen = np.ones((bmax,), np.int32)
+                active = np.zeros((bmax,), bool)
+                for seq, drft in zip(decision.seqs, decision.drafts):
+                    token[seq.slot, 0] = seq.out_tokens[-1]
+                    token[seq.slot, 1:1 + len(drft)] = drft
+                    kvl[seq.slot] = seq.kv_len - 1  # context written
+                    rlen[seq.slot] = 1 + len(drft)
+                    active[seq.slot] = True
+                logits, self.cache = self._dispatch(
+                    self._verify_fn, self.params, token, self.cache,
+                    self.kv.page_table_array(), kvl, rlen, active)
+                logits = np.asarray(logits)       # [B, K+1, V]
+                results = []
+                for seq, drft in zip(decision.seqs, decision.drafts):
+                    # lane i's logits predict the token after lane i;
+                    # lanes past real_len are padding — never consulted
+                    argmax = [self._sample(logits[seq.slot, i])
+                              for i in range(1 + len(drft))]
+                    n_acc, emitted = draft_mod.accept_drafts(drft, argmax)
+                    eos = seq.req.eos_id
+                    if eos is not None and eos in emitted:
+                        # tokens after eos were never really generated;
+                        # if the cut drops the bonus token, every emitted
+                        # token is an accepted draft
+                        emitted = emitted[:emitted.index(eos) + 1]
+                        n_acc = min(n_acc, len(emitted))
+                    results.append((n_acc, emitted))
+                # appends tokens, counts accept stats, truncates rejected-
+                # suffix pages (KV rollback, DESIGN.md §14)
+                self.sched.completed_verify(decision, results)
             else:
                 assert isinstance(decision, DecodeBatch)
                 bmax = self.ecfg.max_batch
@@ -586,6 +686,9 @@ class ServeEngine:
         s.prefill_tokens, s.evictions = ss.prefill_tokens, ss.evicted
         s.recompute_tokens = ss.recompute_tokens
         s.mean_occupancy = ss.mean_occupancy
+        s.verify_steps = ss.verify_steps
+        s.draft_tokens = ss.draft_tokens
+        s.accepted_tokens = ss.accepted_tokens
         s.prefix_cache = self.ecfg.prefix_cache
         s.prefix_hit_tokens = ss.prefix_hit_tokens
         s.prefill_chunks_skipped = ss.prefill_chunks_skipped

@@ -302,3 +302,53 @@ def test_serve_decode_cost_prices_params_and_kv():
                               num_pages=4, page_size=4)
     assert c.bytes == 64.0 + 2 * 8 * (64.0 / 16)
     assert c.flops == 2.0 * (64.0 / 4.0) * 2
+
+
+def test_serve_verify_cost_scales_flops_not_bytes():
+    """DESIGN.md §14: the verify step streams the same weight/KV bytes
+    as one decode step — lanes ride the read for free — while the GEMM
+    flops scale with lanes = K+1.  That asymmetry is the whole economic
+    argument for speculation, so pin it."""
+    params = {"w": np.zeros((4, 4), np.float32)}
+    cache = {"k": np.zeros((2, 8), np.float32)}
+    base = brl.serve_decode_cost(params, cache, batch=2, kv_len=8,
+                                 num_pages=4, page_size=4)
+    for lanes in (1, 5):
+        v = brl.serve_verify_cost(params, cache, batch=2, lanes=lanes,
+                                  kv_len=8, num_pages=4, page_size=4)
+        assert v.bytes == base.bytes
+        assert v.flops == base.flops * lanes
+
+
+def test_serve_grid_and_spec_row_schema_is_diff_gateable():
+    """ISSUE 8 satellite: the batch x cache-size sweep and the spec-vs-
+    plain rows are only useful if ``--diff`` gates them on throughput.
+    Pin the schema at the source: the emit templates must produce the
+    committed row names and a ``decode_tok_s`` derived key, and rows in
+    that shape must route through the throughput gate (not us_per_call).
+    """
+    import inspect
+
+    src_grid = inspect.getsource(bench.bench_serve_grid)
+    src_spec = inspect.getsource(bench.bench_serve_spec)
+    # row-name templates (renaming a row orphans its committed baseline)
+    assert 'f"serve_grid[b{max_batch},kv{kv_tokens}]"' in src_grid
+    assert '"serve_spec[off,b4]"' in src_spec
+    assert 'f"serve_spec[on,K{speculate},b4]"' in src_spec
+    # every row leads its derived column with the gated throughput key
+    assert src_grid.count('f"decode_tok_s={s.decode_tok_s:.1f};"') == 1
+    for key in ("decode_tok_s=", "acceptance_rate=", "spec_speedup="):
+        assert key in src_spec
+    # and rows of exactly that shape gate on throughput, not wall time
+    mk = lambda tok: _payload(
+        [_row("serve_grid[b4,kv64]", 2000.0,
+              f"decode_tok_s={tok};occupancy=0.55;decode_tokens=42;"
+              "recompute_tokens=0;evictions=2;kv_capacity_tokens=64"),
+         _row("serve_spec[on,K4,b4]", 3700.0,
+              f"decode_tok_s={tok};decode_tokens=92;verify_steps=11;"
+              "draft_tokens=70;accepted_tokens=69;acceptance_rate=0.986;"
+              "spec_speedup=1.479")])
+    assert bench.diff_payloads(mk(700.0), mk(680.0))[0] == []   # -3%
+    fails, _ = bench.diff_payloads(mk(700.0), mk(500.0))        # -29%
+    assert len(fails) == 2
+    assert all("decode_tok_s" in f for f in fails)

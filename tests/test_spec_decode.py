@@ -1,0 +1,644 @@
+"""Self-speculative decoding inside the fixed-shape step contract
+(DESIGN.md §14), locked by a spec-on ≡ spec-off parity suite.
+
+Three layers of coverage:
+
+* host-only unit/property tests — draft sources are pure functions of
+  their arguments (same seed/context ⇒ same drafts), the
+  longest-agreeing-prefix rule of ``draft.accept_drafts`` holds for
+  random draft/argmax pairs, and ``KVCacheManager.truncate`` (the
+  rejected-suffix rollback primitive) conserves refcounts under random
+  ensure/truncate storms;
+* scheduler-level tests with a stub executor — speculation turns every
+  decode-shaped decision into a :class:`VerifyBatch`, emitted verify
+  tokens are counted as *decode* output (never prefill/recompute, the
+  PR-5 counter-split extended to verify steps), and the page table is
+  truncated back to the decode-step postcondition after every accept
+  decision so the rejected suffix is never visible;
+* model-backed engine parity — spec-on greedy decode is argmax-identical
+  to spec-off token-for-token, per precision recipe (none/int8/fp8/w4),
+  with the prefix cache on and off, under forced eviction, with garbage
+  (random) drafts, under fault injection (unaffected requests identical,
+  affected ones emit prefixes), and at tp=2 in a subprocess where all
+  FOUR fixed-shape jitted steps compile exactly once.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from proptest import given, settings, strategies as st  # noqa: E402
+
+from repro.runtime import draft as dr
+from repro.runtime import faults as fl
+from repro.runtime import scheduler as sch
+from repro.runtime.kv_cache import KVCacheManager, PagedKVConfig
+from repro.runtime.scheduler import (PrefillChunk, Request, Scheduler,
+                                     VerifyBatch)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# --------------------------------------------------------- draft sources
+def test_ngram_draft_prompt_lookup_and_recency():
+    src = dr.NgramDraftSource(max_ngram=3)
+    # trigram [1,2,3] recurs; propose the tokens that followed it
+    assert src.propose([5, 1, 2, 3, 9, 8, 1, 2, 3], 2) == [9, 8]
+    # no 3-gram match -> falls back to the bigram [1,2]; among its two
+    # earlier occurrences the NEWEST one (followed by 8) wins
+    assert src.propose([1, 2, 7, 1, 2, 8, 1, 2], 1) == [8]
+    # nothing recurs -> no draft; tiny context -> no draft
+    assert src.propose([1, 2, 3, 4], 4) == []
+    assert src.propose([7], 4) == []
+    assert src.propose([1, 2, 1, 2], 0) == []
+    with pytest.raises(ValueError, match="min_ngram"):
+        dr.NgramDraftSource(max_ngram=1, min_ngram=2)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 3), max_size=24), st.integers(0, 6))
+def test_ngram_draft_is_pure_capped_and_grounded(ctx, k):
+    """Purity (same args ⇒ same draft), the length cap, and grounding:
+    every proposed continuation literally follows some earlier occurrence
+    of a matching tail n-gram in the context."""
+    src = dr.NgramDraftSource(max_ngram=3)
+    d = src.propose(ctx, k)
+    assert d == src.propose(ctx, k) == dr.NgramDraftSource(3).propose(ctx, k)
+    assert len(d) <= k
+    if d:
+        assert any(
+            ctx[s:s + n] == ctx[len(ctx) - n:]
+            and d == ctx[s + n:s + n + k]
+            for n in range(1, min(3, len(ctx) - 1) + 1)
+            for s in range(len(ctx) - n))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 99), max_size=12), st.integers(0, 2 ** 30))
+def test_random_draft_seeded_determinism(ctx, seed):
+    a = dr.RandomDraftSource(seed=seed, vocab_size=64)
+    d = a.propose(ctx, 4)
+    assert d == dr.RandomDraftSource(seed=seed, vocab_size=64).propose(ctx, 4)
+    assert len(d) == 4 and all(0 <= t < 64 for t in d)
+    assert dr.RandomDraftSource(seed=seed + 1, vocab_size=64) \
+        .propose(ctx, 4) != d or True  # different seed MAY collide ...
+    # ... but not everywhere: across a few contexts the streams diverge
+    b = dr.RandomDraftSource(seed=seed + 1, vocab_size=64)
+    assert any(a.propose(ctx + [i], 4) != b.propose(ctx + [i], 4)
+               for i in range(8))
+
+
+def test_draft_registry():
+    assert isinstance(dr.make_draft_source("ngram"), dr.NgramDraftSource)
+    assert isinstance(dr.make_draft_source("random", seed=3, vocab_size=7),
+                      dr.RandomDraftSource)
+    with pytest.raises(ValueError, match="unknown draft source"):
+        dr.make_draft_source("oracle")
+
+
+# ------------------------------------------------------- acceptance rule
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(0, 2), max_size=6), st.integers(0, 2 ** 31 - 1))
+def test_accept_drafts_longest_agreeing_prefix(draft, seed):
+    """For random draft/argmax pairs over a tiny vocab (forcing frequent
+    partial agreement): n_accepted is EXACTLY the longest agreeing
+    prefix, emitted is that prefix plus the model's own next token, and
+    a verify step always emits n_accepted + 1 tokens."""
+    rng = np.random.default_rng(seed)
+    argmax = rng.integers(0, 3, size=len(draft) + 1).tolist()
+    n, emitted = dr.accept_drafts(draft, argmax)
+    assert 0 <= n <= len(draft)
+    assert all(draft[i] == argmax[i] for i in range(n))
+    assert n == len(draft) or draft[n] != argmax[n]
+    assert emitted == list(draft[:n]) + [argmax[n]]
+    assert len(emitted) == n + 1
+
+
+def test_accept_drafts_requires_bonus_row():
+    assert dr.accept_drafts([], [7]) == (0, [7])
+    assert dr.accept_drafts([4, 5], [4, 5, 6]) == (2, [4, 5, 6])
+    assert dr.accept_drafts([4, 9], [4, 5, 6]) == (1, [4, 5])
+    with pytest.raises(ValueError, match="argmax rows"):
+        dr.accept_drafts([1, 2], [1, 2])
+
+
+# -------------------------------------------------- rollback primitive
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_truncate_random_storm_conserves_refcounts(pages_scale, seed):
+    """Random ensure/truncate/free sequences: truncate releases exactly
+    the tail beyond pages_for(num_tokens), check() never trips, and the
+    pool balances when every slot drains."""
+    rng = np.random.default_rng(seed)
+    cfg = PagedKVConfig(page_size=4, num_pages=4 * pages_scale, max_batch=3,
+                        max_seq_len=4 * pages_scale * 4)
+    kv = KVCacheManager(cfg, namespace="trunc")
+    hi: dict[int, int] = {}
+    for _ in range(60):
+        slot = int(rng.integers(0, 3))
+        op = rng.integers(0, 3)
+        if op == 0:
+            want = int(rng.integers(1, cfg.max_seq_len + 1))
+            try:
+                kv.ensure(slot, want)
+                hi[slot] = max(hi.get(slot, 0), want)
+            except Exception:
+                pass
+        elif op == 1 and hi.get(slot):
+            keep_tok = int(rng.integers(0, hi[slot] + 1))
+            before = len(kv.slot_pages(slot))
+            released = kv.truncate(slot, keep_tok)
+            assert len(kv.slot_pages(slot)) == \
+                min(before, cfg.pages_for(keep_tok))
+            assert len(released) == before - len(kv.slot_pages(slot))
+            hi[slot] = min(hi[slot], keep_tok)
+        else:
+            kv.free_slot(slot)
+            hi.pop(slot, None)
+        kv.check()
+    for s in range(3):
+        kv.free_slot(s)
+    kv.check()
+    assert kv.pool.num_reclaimable == cfg.num_pages
+
+
+def test_truncate_releases_only_the_exclusive_tail():
+    cfg = PagedKVConfig(page_size=4, num_pages=8, max_batch=2,
+                        max_seq_len=32)
+    kv = KVCacheManager(cfg, namespace="t")
+    kv.ensure(0, 12)                       # 3 pages
+    pages = list(kv.slot_pages(0))
+    kv.adopt_cached(1, pages[:1])          # sibling shares the FIRST page
+    assert kv.truncate(0, 8) == pages[2:]  # drop 1 page, keep 2
+    assert kv.truncate(0, 8) == []         # idempotent at the boundary
+    assert kv.slot_pages(0) == pages[:2]
+    assert kv.slot_pages(1) == pages[:1]   # sibling untouched
+    assert kv.pool.refcount(pages[0]) == 2
+    kv.check()
+    assert kv.truncate(0, 0) == pages[:2]  # full rollback drops the rest
+    kv.free_slot(1)
+    kv.check()
+    assert kv.pool.num_reclaimable == cfg.num_pages
+
+
+# ------------------------------------------------- scheduler-level (stub)
+class _StubOracleDraft:
+    """Perfect drafts against the stub executor's deterministic
+    ``rid*1000 + i`` streams: once a sequence has emitted its first
+    token, the continuation is always ``last + 1``."""
+
+    def propose(self, context, max_tokens):
+        last = context[-1] if context else 0
+        if last < 1000:
+            return []                      # still at the prompt: no signal
+        return [last + 1 + i for i in range(max_tokens)]
+
+
+def _drive_stub_spec(sched: Scheduler, requests):
+    """Stub executor that understands VerifyBatch: the 'model' greedily
+    continues rid*1000 + len(stream), so acceptance follows the
+    longest-agreeing-prefix rule exactly as on device."""
+    for r in requests:
+        sched.submit(r)
+    outputs: dict[int, list[int]] = {}
+    prefill_emits = 0   # tokens emitted off a completing prefill's logits
+    guard = 0
+    while sched.has_work:
+        guard += 1
+        assert guard < 20000, "scheduler livelock"
+        d = sched.next_decision()
+        sched.kv.check()
+        if d is None:
+            continue
+        if isinstance(d, PrefillChunk):
+            sched.completed_prefill(d)
+            if not d.seq.prefilling:
+                sched.append_token(
+                    d.seq, d.seq.rid * 1000 + len(sched.full_output(d.seq)))
+                prefill_emits += 1
+        elif isinstance(d, VerifyBatch):
+            results = []
+            for seq, drft in zip(d.seqs, d.drafts):
+                nxt = seq.rid * 1000 + len(sched.full_output(seq))
+                argmax = [nxt + i for i in range(len(drft) + 1)]
+                results.append(dr.accept_drafts(drft, argmax))
+            sched.completed_verify(d, results)
+            # rollback postcondition: table covers kv_len - 1 tokens, the
+            # exact state a chain of plain decode steps leaves behind
+            for seq in d.seqs:
+                if seq in sched.running or seq.done:
+                    assert len(sched.kv.slot_pages(seq.slot)) == \
+                        sched.kv.cfg.pages_for(seq.kv_len - 1), seq.rid
+        else:
+            for seq in d.seqs:
+                sched.append_token(
+                    seq, seq.rid * 1000 + len(sched.full_output(seq)))
+        for seq in sched.retire_finished():
+            outputs[seq.rid] = sched.full_output(seq)
+    return outputs, prefill_emits
+
+
+@pytest.mark.parametrize("speculate", [1, 3])
+def test_scheduler_speculative_stub_streams_and_accounting(speculate):
+    """Speculation at the scheduler level: streams identical to the
+    non-speculative stub drive, every decode-shaped decision is a
+    VerifyBatch, and the draft/accept counters balance."""
+    cfg = PagedKVConfig(page_size=4, num_pages=16, max_batch=2,
+                        max_seq_len=32)
+    sched = Scheduler(KVCacheManager(cfg), prefill_chunk=8,
+                      speculate=speculate, draft_source=_StubOracleDraft())
+    reqs = [Request(rid=i, prompt=[0] * 6, max_new_tokens=8)
+            for i in range(3)]
+    outs, pre = _drive_stub_spec(sched, reqs)
+    for r in reqs:
+        assert outs[r.rid] == [r.rid * 1000 + i for i in range(8)]
+    s = sched.stats
+    assert s.verify_steps > 0 and s.verify_steps == s.decode_steps
+    assert not any(t.startswith("decode ") for t in sched.trace)
+    assert any(t.startswith("verify ") for t in sched.trace)
+    assert any(t.startswith("accept ") for t in sched.trace)
+    # oracle drafts: everything proposed is accepted, fewer steps than
+    # tokens; emitted tokens are decode output exactly once each (the
+    # token off each completing prefill's logits is neither)
+    assert s.draft_tokens == s.accepted_tokens > 0
+    assert s.acceptance_rate == 1.0
+    assert s.decode_tokens == 3 * 8 - pre
+    assert s.verify_steps < s.decode_tokens
+    sched.kv.check()
+    assert sched.kv.pool.num_reclaimable == cfg.num_pages
+
+
+def test_verify_tokens_counted_as_decode_not_prefill_or_recompute():
+    """Satellite bugfix regression: the PR-5 prefill/recompute counter
+    split extends to verify steps — under forced eviction WITH
+    speculation, prefill_tokens is still exactly the first-pass prompt
+    tokens, eviction re-prefill lands in recompute_tokens, and every
+    emitted verify token is counted as decode output exactly once."""
+    cfg = PagedKVConfig(page_size=4, num_pages=6, max_batch=3,
+                        max_seq_len=24)
+    sched = Scheduler(KVCacheManager(cfg), prefill_chunk=8,
+                      speculate=2, draft_source=_StubOracleDraft())
+    reqs = [Request(rid=i, prompt=[0] * 8, max_new_tokens=8)
+            for i in range(3)]
+    outs, pre = _drive_stub_spec(sched, reqs)
+    assert sched.stats.evicted > 0, "test needs page pressure"
+    for r in reqs:
+        assert outs[r.rid] == [r.rid * 1000 + i for i in range(8)]
+    s = sched.stats
+    assert s.prefill_tokens == 3 * 8   # first-pass prompts only
+    assert s.recompute_tokens > 0      # eviction re-prefill, split out
+    assert s.decode_tokens == 3 * 8 - pre  # emitted once, never prefill
+    assert s.accepted_tokens > 0
+
+
+def test_rejected_suffix_rolled_back_with_garbage_drafts():
+    """All-reject path: a garbage draft source still drives correct
+    streams (the bonus token keeps forward progress), and after every
+    accept decision the page table never covers a rejected position."""
+    cfg = PagedKVConfig(page_size=2, num_pages=16, max_batch=2,
+                        max_seq_len=32)
+    sched = Scheduler(KVCacheManager(cfg), prefill_chunk=8, speculate=3,
+                      draft_source=dr.RandomDraftSource(seed=1, vocab_size=9))
+    # rids >= 1 so the stub streams (rid*1000 + i) are disjoint from the
+    # draft vocab [0, 9): every draft token is rejected
+    reqs = [Request(rid=i + 1, prompt=[0] * 5, max_new_tokens=6)
+            for i in range(2)]
+    outs, pre = _drive_stub_spec(sched, reqs)
+    for r in reqs:
+        assert outs[r.rid] == [r.rid * 1000 + i for i in range(6)]
+    s = sched.stats
+    assert s.draft_tokens > 0 and s.accepted_tokens == 0
+    assert s.acceptance_rate == 0.0
+    assert s.decode_tokens == 2 * 6 - pre  # one token per lane: no speedup
+    sched.kv.check()
+    assert sched.kv.pool.num_reclaimable == cfg.num_pages
+
+
+def test_draft_cap_respects_budget_seq_len_and_eos():
+    """_propose caps: never draft past max_seq_len, never propose more
+    than the request could still emit, and truncate at a drafted eos."""
+    cfg = PagedKVConfig(page_size=4, num_pages=16, max_batch=1,
+                        max_seq_len=12)
+
+    class Fixed:
+        def propose(self, context, max_tokens):
+            return [7, 8, 9, 7][:max_tokens]
+
+    sched = Scheduler(KVCacheManager(cfg), prefill_chunk=8, speculate=4,
+                      draft_source=Fixed())
+    sched.submit(Request(rid=0, prompt=[1] * 8, max_new_tokens=3))
+    seq = None
+    while seq is None or seq.prefilling:
+        d = sched.next_decision()
+        if isinstance(d, PrefillChunk):
+            sched.completed_prefill(d)
+            seq = d.seq
+    sched.append_token(seq, 5)          # kv_len = 9, 2 tokens of budget left
+    # budget cap: may emit 2 more -> at most 1 draft (n_draft + 1 <= 2)
+    assert sched._propose(seq) == (7,)
+    seq.req.max_new_tokens = 99         # lift budget: seq-len cap binds
+    assert sched._propose(seq) == (7, 8, 9)   # kv_len 9 + 3 == max_seq_len
+    seq.req.eos_id = 8                  # drafted eos truncates the tail
+    assert sched._propose(seq) == (7, 8)
+
+
+# ----------------------------------------------- model-backed parity
+def _toy(recipe):
+    import jax
+    from repro.configs import registry
+    from repro.core.linear import SparsityConfig
+    from repro.models import model as M
+    from repro.runtime import serve_loop
+
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, d_model=48, num_heads=4, num_kv_heads=2,
+                               head_dim=12, d_ff=96, num_layers=2)
+    if recipe is None:
+        return base, M.init(base, jax.random.PRNGKey(0))
+    cfg = dataclasses.replace(base, sparsity=SparsityConfig(
+        pattern=(6, 8), mode="compressed", recipe=recipe, use_pallas=False))
+    return cfg, serve_loop.pack_params(M.init(base, jax.random.PRNGKey(0)),
+                                       cfg)
+
+
+def _spec_prompts(cfg, n=3, seed=0):
+    """Deterministic prompts with a repeated chunk: n-gram friendly, so
+    the ngram source actually accepts drafts on the toy model."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        chunk = rng.integers(0, cfg.vocab_size,
+                             size=int(rng.integers(4, 9))).tolist()
+        out.append(chunk + chunk)
+    return out
+
+
+def _run_engine(params, cfg, prompts, max_new, ecfg, check_every=False):
+    from repro.runtime import serve_loop
+
+    eng = serve_loop.ServeEngine(params, cfg, ecfg)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new, rid=i, arrival=i)
+    on_step = (lambda e, k: e.kv.check()) if check_every else None
+    out = eng.run(on_step=on_step)
+    eng.kv.check()
+    return {i: tuple(out[i].tokens) for i in out}, eng
+
+
+@pytest.mark.parametrize("recipe", [None, "int8", "fp8", "w4"])
+def test_spec_parity_per_recipe(recipe):
+    """Acceptance: spec-on greedy decode is argmax-identical to spec-off,
+    token-for-token, for the dense stack and every quantized recipe —
+    while verify steps actually execute and page accounting balances."""
+    from repro.runtime import serve_loop
+
+    cfg, params = _toy(recipe)
+    prompts = _spec_prompts(cfg)
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=48, prefill_chunk=8)
+    ref, _ = _run_engine(params, cfg, prompts, 8, ecfg)
+    got, eng = _run_engine(params, cfg, prompts, 8,
+                           dataclasses.replace(ecfg, speculate=3))
+    assert got == ref, f"spec-on diverged from spec-off for {recipe}"
+    s = eng.stats
+    assert s.verify_steps > 0 and s.draft_tokens > 0
+    assert 0.0 <= s.acceptance_rate <= 1.0
+    # every generated token is decode output exactly once, except the one
+    # emitted off each request's completing prefill logits
+    assert s.decode_tokens == sum(len(t) for t in got.values()) - len(got)
+    assert eng._verify_fn._cache_size() == 1, "verify step retraced"
+    assert eng.kv.pool.num_reclaimable == ecfg.num_pages
+
+
+def test_spec_parity_prefix_cache_on_and_off():
+    """Speculation composes with the radix prefix cache: all four
+    {spec, cache} corners produce the same streams on shared-prefix
+    prompts, and cache hits still happen with speculation on."""
+    from repro.runtime import serve_loop
+
+    cfg, params = _toy(None)
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    prompts = [shared + shared[:4], shared + shared[:6], list(shared)]
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=48, prefill_chunk=8)
+    corners = {}
+    for spec in (0, 3):
+        for cacheon in (False, True):
+            corners[(spec, cacheon)], eng = _run_engine(
+                params, cfg, prompts, 6,
+                dataclasses.replace(ecfg, speculate=spec,
+                                    prefix_cache=cacheon))
+            if cacheon:
+                assert eng.stats.prefix_hit_tokens > 0
+            if spec:
+                assert eng.stats.verify_steps > 0
+    ref = corners[(0, False)]
+    assert all(v == ref for v in corners.values()), corners
+
+
+def test_spec_parity_under_forced_eviction():
+    """Page pressure: pool small enough to force recompute-preemption
+    mid-speculation; spec-on still matches spec-off and the pool
+    balances (free + cached == total) after the run."""
+    from repro.runtime import serve_loop
+
+    cfg, params = _toy(None)
+    prompts = _spec_prompts(cfg, seed=1)
+    ecfg = serve_loop.EngineConfig(max_batch=3, page_size=4, num_pages=7,
+                                   max_seq_len=24, prefill_chunk=8)
+    ref, _ = _run_engine(params, cfg, prompts, 8, ecfg)
+    got, eng = _run_engine(params, cfg, prompts, 8,
+                           dataclasses.replace(ecfg, speculate=2),
+                           check_every=True)
+    assert got == ref
+    assert eng.stats.evictions > 0, "test needs page pressure"
+    assert eng.stats.verify_steps > 0
+    assert eng.kv.pool.num_reclaimable == ecfg.num_pages
+
+
+def test_spec_parity_random_drafts_all_reject():
+    """Garbage drafts on the real model: acceptance ~0, every verify
+    step rolls back its whole draft, streams still match spec-off with
+    the KV invariant checked after every engine step."""
+    from repro.runtime import serve_loop
+
+    cfg, params = _toy(None)
+    prompts = _spec_prompts(cfg, n=2, seed=2)
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=48, prefill_chunk=8)
+    ref, _ = _run_engine(params, cfg, prompts, 6, ecfg)
+    got, eng = _run_engine(
+        params, cfg, prompts, 6,
+        dataclasses.replace(ecfg, speculate=3, draft_source="random"),
+        check_every=True)
+    assert got == ref
+    s = eng.stats
+    assert s.draft_tokens > 0
+    assert s.acceptance_rate <= 0.2      # garbage drafts barely accept
+    assert eng.kv.pool.num_reclaimable == ecfg.num_pages
+
+
+def test_spec_parity_eos_mid_stream():
+    """An eos that lands inside an accepted draft window truncates the
+    stream at exactly the same token as the spec-off run."""
+    from repro.runtime import serve_loop
+
+    cfg, params = _toy(None)
+    prompts = _spec_prompts(cfg, n=2, seed=4)
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=48, prefill_chunk=8)
+    ref, _ = _run_engine(params, cfg, prompts, 8, ecfg)
+    eos = ref[0][3]                     # a token the model WILL emit
+
+    def run(spec):
+        eng = serve_loop.ServeEngine(
+            params, cfg, dataclasses.replace(ecfg, speculate=spec))
+        for i, p in enumerate(prompts):
+            eng.submit(p, 8, rid=i, arrival=i, eos_id=eos)
+        out = eng.run()
+        eng.kv.check()
+        return {i: tuple(out[i].tokens) for i in out}, eng
+
+    off, _ = run(0)
+    on, eng = run(3)
+    assert on == off
+    assert off[0][-1] == eos and len(off[0]) <= 4  # actually truncated
+    assert eng.kv.pool.num_reclaimable == ecfg.num_pages
+
+
+def test_spec_fault_injection_parity():
+    """Injected alloc failures, a recovered step retry, one poisoned
+    request and a mid-flight cancel, WITH speculation on: unaffected
+    requests are argmax-identical to the fault-free spec-off run,
+    affected ones emit prefixes of it, and no page leaks."""
+    from repro.runtime import serve_loop
+
+    cfg, params = _toy("int8")
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=k).tolist() * 2
+               for k in (4, 6, 5, 7)]
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=48, prefill_chunk=6)
+
+    def drive(spec, plan, cancel_at):
+        eng = serve_loop.ServeEngine(params, cfg, dataclasses.replace(
+            ecfg, speculate=spec, faults=plan))
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6, rid=i, arrival=i)
+
+        def on_step(e, k):
+            if k in cancel_at:
+                e.cancel(cancel_at[k])
+        return eng.run(on_step=on_step), eng
+
+    clean, _ = drive(0, None, {})
+    assert all(c.ok for c in clean.values())
+    plan = fl.FaultPlan(seed=5, alloc_fail_at=(2, 5), step_error_at=(4,),
+                        poison_rids=(2,))
+    faulty, eng = drive(3, plan, {8: 1})
+    assert set(faulty) == set(clean)
+    assert faulty[2].status == sch.FAILED
+    assert faulty[2].reason == sch.REASON_POISONED
+    assert eng.stats.step_retries == 1
+    for rid, comp in faulty.items():
+        if comp.ok:
+            assert comp.tokens == clean[rid].tokens, rid
+        else:
+            k = len(comp.tokens)
+            assert comp.tokens == clean[rid].tokens[:k], rid
+    eng.kv.check()
+    assert eng.kv.pool.num_free + eng.kv.pool.num_cached == ecfg.num_pages
+
+
+def test_spec_rejects_ssm_stacks_and_negative_k():
+    from repro.configs import registry
+    from repro.runtime import serve_loop
+
+    cfg = registry.smoke_config("mamba2-780m")
+    with pytest.raises(ValueError, match="attention-only"):
+        serve_loop.ServeEngine({}, cfg,
+                               serve_loop.EngineConfig(speculate=2))
+    dense, params = _toy(None)
+    with pytest.raises(ValueError, match="speculate"):
+        serve_loop.ServeEngine(params, dense,
+                               serve_loop.EngineConfig(speculate=-1))
+    with pytest.raises(ValueError, match="unknown draft source"):
+        serve_loop.ServeEngine(params, dense, serve_loop.EngineConfig(
+            speculate=2, draft_source="oracle"))
+
+
+# --------------------------------------------------- tp=2 subprocess
+def test_spec_tp2_subprocess_parity_and_compile_once():
+    """tp=2 speculative decode matches tp=1 spec-on AND tp=1 spec-off
+    streams, replays the identical scheduler decision trace (drafting is
+    host-side, shard-invariant), and all FOUR fixed-shape jitted steps
+    compile exactly once."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = textwrap.dedent("""
+    import dataclasses, numpy as np, jax
+    from repro.configs import registry
+    from repro.core.linear import SparsityConfig
+    from repro.models import model as M
+    from repro.runtime import serve_loop
+
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, num_layers=2)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, base.vocab_size, size=k).tolist() * 2
+               for k in (5, 7, 4)]
+
+    def run(tp, spec, cfg, params):
+        eng = serve_loop.ServeEngine(params, cfg, serve_loop.EngineConfig(
+            max_batch=2, page_size=4, num_pages=24, max_seq_len=48,
+            prefill_chunk=8, tp=tp, speculate=spec))
+        eng.warmup()  # compiles all four fixed-shape steps exactly once
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6, rid=i, arrival=i)
+        out = eng.run()
+        eng.kv.check()
+        return {i: tuple(out[i].tokens) for i in out}, eng
+
+    # dense stack: spec-off reference, then spec-on at tp=1 and tp=2
+    params = M.init(base, jax.random.PRNGKey(0))
+    ref, _ = run(1, 0, base, params)
+    o1, eng1 = run(1, 3, base, params)
+    o2, eng2 = run(2, 3, base, params)
+    assert o1 == ref and o2 == ref, (ref, o1, o2)
+    assert eng1.stats.verify_steps > 0
+    assert eng1.sched.trace == eng2.sched.trace
+    assert (eng1.stats.draft_tokens, eng1.stats.accepted_tokens) == \\
+        (eng2.stats.draft_tokens, eng2.stats.accepted_tokens)
+    for fn in (eng2._prefill_fn, eng2._decode_fn, eng2._cow_fn,
+               eng2._verify_fn):
+        assert fn._cache_size() == 1, "a jitted step retraced"
+    print("tp2 spec parity OK", eng2.stats.acceptance_rate)
+
+    # quantized recipe through the packed compressed pipeline
+    narrow = dataclasses.replace(base, d_model=48, num_heads=4,
+                                 num_kv_heads=2, head_dim=12, d_ff=96)
+    qcfg = dataclasses.replace(narrow, sparsity=SparsityConfig(
+        pattern=(6, 8), mode="compressed", recipe="fp8", use_pallas=False))
+    qparams = serve_loop.pack_params(
+        M.init(narrow, jax.random.PRNGKey(0)), qcfg)
+    qref, _ = run(1, 0, qcfg, qparams)
+    q1, _ = run(1, 3, qcfg, qparams)
+    q2, engq = run(2, 3, qcfg, qparams)
+    assert q1 == qref and q2 == qref, (qref, q1, q2)
+    assert engq.stats.precision == "fp8"
+    assert engq._verify_fn._cache_size() == 1
+    print("tp2 fp8 spec parity OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, \
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "tp2 spec parity OK" in out.stdout
+    assert "tp2 fp8 spec parity OK" in out.stdout

@@ -26,7 +26,15 @@
 #    invariant watchdog on — the engine must degrade per-request (typed
 #    statuses), keep page accounting exact, and every surviving stream
 #    stays parity-checked (OK exact, non-OK prefix of the reference).
-# 7. API-docs drift check: docs/api.md must match what
+# 7. Speculative-decode smoke (DESIGN.md §14): the engine demo under
+#    --speculate K — drafts scored by the fixed-shape [B, K+1] verify
+#    step, rejected suffixes rolled back — must stream argmax-identical
+#    tokens to the dense reference (the demo's parity check covers it).
+#    The acceptance-rate/speedup side is gated by step 2: the
+#    bench_serve filter picks up bench_serve_spec, whose in-bench
+#    asserts fail the run on spec-on/spec-off divergence or < 1.3x
+#    decode throughput on the n-gram-friendly workload.
+# 8. API-docs drift check: docs/api.md must match what
 #    tools/gen_api_docs.py generates from the live docstrings.
 #
 # The pytest run is wrapped in a hard timeout so a wedged scheduler (the
@@ -36,8 +44,11 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 # perf gate: rerun the kernel + serving benches and diff against the
-# newest committed baseline json (exit 1 on out-of-tolerance regressions)
-timeout 600 python -m benchmarks.run fused_pipeline bench_serve --diff
+# newest committed baseline json (exit 1 on out-of-tolerance regressions).
+# bench_serve matches bench_serve_grid and bench_serve_spec too — the
+# batch x cache-size sweep cells and the speculative-decode rows are
+# diff-gated on decode_tok_s like every throughput row.
+timeout 900 python -m benchmarks.run fused_pipeline bench_serve --diff
 
 timeout 300 python examples/serve_batched.py --engine --requests 3 \
     --batch 2 --prompt-len 16 --new-tokens 6
@@ -68,6 +79,13 @@ timeout 300 python examples/serve_batched.py --engine --tp 2 --requests 3 \
 timeout 300 python examples/serve_batched.py --engine --inject-faults 1234 \
     --cancel-frac 0.2 --watchdog --requests 5 --batch 2 --prompt-len 16 \
     --new-tokens 6
+
+# speculative-decode smoke (DESIGN.md §14): K=3 drafts through the
+# fixed-shape verify step; the demo asserts every stream still matches
+# the dense one-shot reference token-for-token, so an acceptance bug or
+# a bad KV rollback fails CI here
+timeout 300 python examples/serve_batched.py --engine --speculate 3 \
+    --requests 3 --batch 2 --prompt-len 16 --new-tokens 6
 
 python tools/gen_api_docs.py --check
 
