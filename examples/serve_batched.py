@@ -87,7 +87,8 @@ def engine_demo(args, base, params):
         prefill_chunk=max(8, args.prompt_len // 2), tp=args.tp,
         prefix_cache=args.prefix_cache, policy=args.policy,
         watchdog=args.watchdog, faults=plan,
-        speculate=args.speculate, draft_source=args.draft)
+        speculate=args.speculate, draft_source=args.draft,
+        async_loop=args.async_loop)
     eng = serve_loop.ServeEngine(packed, cfg, ecfg)
     for i, p in enumerate(prompts):
         eng.submit(p, args.new_tokens, rid=i, arrival=2 * i)
@@ -114,6 +115,11 @@ def engine_demo(args, base, params):
           f"({s.decode_tok_s_per_device:.1f}/device), "
           f"batch occupancy {s.mean_occupancy:.2f}, "
           f"evictions {s.evictions}")
+    if args.async_loop:
+        print(f"async loop (DESIGN.md §15): {s.lookahead_steps} lookahead "
+              f"dispatches, host gap {s.host_gap_s * 1e3:.1f}ms, overlap "
+              f"{s.overlap_frac:.2f}, d2h {s.d2h_bytes}B — streams below "
+              "must STILL match the dense reference token-for-token")
     if args.speculate > 0:
         print(f"speculative decode (K={args.speculate}, "
               f"source={args.draft}): {s.verify_steps} verify steps, "
@@ -215,6 +221,11 @@ def main():
     ap.add_argument("--draft", default="ngram",
                     help="engine mode: draft source for --speculate "
                          "(registered: ngram, random)")
+    ap.add_argument("--async", dest="async_loop", action="store_true",
+                    help="engine mode: overlapped host/device loop "
+                         "(DESIGN.md §15) — on-device sampling, device-"
+                         "resident token threading, lookahead scheduling; "
+                         "streams stay argmax-identical to the sync loop")
     args = ap.parse_args()
 
     base = registry.smoke_config(args.arch)

@@ -74,6 +74,10 @@ def main(argv=None):
     ap.add_argument("--draft", default="ngram",
                     help="--engine: draft source for --speculate "
                          "(registered: ngram, random)")
+    ap.add_argument("--async", dest="async_loop", action="store_true",
+                    help="--engine: overlapped host/device loop (DESIGN.md "
+                         "§15) — on-device sampling + token threading + "
+                         "lookahead scheduling; argmax-identical streams")
     args = ap.parse_args(argv)
     if args.tp > 1 and not args.engine:
         raise SystemExit("--tp requires --engine (the one-shot loop is "
@@ -109,7 +113,8 @@ def main(argv=None):
             prefill_chunk=args.prefill_chunk, tp=args.tp,
             prefix_cache=args.prefix_cache, policy=args.policy,
             max_queue=args.max_queue, watchdog=args.watchdog, faults=plan,
-            speculate=args.speculate, draft_source=args.draft)
+            speculate=args.speculate, draft_source=args.draft,
+            async_loop=args.async_loop)
         eng = serve_loop.ServeEngine(params, cfg, ecfg)
         for i in range(args.batch):
             eng.submit(batch["tokens"][i].tolist(), args.new_tokens,
@@ -132,6 +137,10 @@ def main(argv=None):
                   f"source={args.draft}; {s.verify_steps} verify steps; "
                   f"accepted {s.accepted_tokens}/{s.draft_tokens} "
                   f"(rate {s.acceptance_rate:.2f})")
+        if args.async_loop:
+            print(f"[launch.serve] async loop: {s.lookahead_steps} "
+                  f"lookahead dispatches; host gap {s.host_gap_s * 1e3:.1f}"
+                  f"ms; overlap {s.overlap_frac:.2f}; d2h {s.d2h_bytes}B")
         if plan is not None or args.watchdog or args.max_queue is not None \
                 or args.deadline_steps is not None:
             eng.kv.check()  # robustness run: prove pages balanced

@@ -80,7 +80,14 @@ def paged_prefill_chunk(params, cfg: ModelConfig, tokens, cache, page_table,
 def paged_decode_step(params, cfg: ModelConfig, token, cache, page_table,
                       kv_len, active, page_size: int):
     """One decode token for every slot (see paged_prefill_chunk for the
-    tensor-parallel calling convention)."""
+    tensor-parallel calling convention).
+
+    The model contract ends at logits: sampling lives ABOVE this call,
+    in the engine's jitted step closures (`serve_loop`), which argmax
+    in-step for the overlapped loop's on-device sampling (DESIGN.md
+    §15) or hand the logits to the host fallback — either way this
+    function stays sampling-agnostic, so train, one-shot serve and the
+    paged engine share one forward definition."""
     return transformer.paged_decode_step(
         params, cfg, token, cache, page_table, kv_len, active, page_size)
 

@@ -18,6 +18,15 @@ arguments (context tokens + the source's construction-time config).  The
 engine calls it once per sequence per verify step from the host
 scheduler loop; a source that consults wall clock, shared mutable state,
 or an unseeded RNG breaks replayability of the scheduler decision trace.
+
+Speculation and the overlapped loop (DESIGN.md §15): drafting is a HOST
+function of the emitted token stream, so a verify step for position N+1
+cannot be proposed until step N's sampled token has crossed back to the
+host — speculation therefore always rides the engine's synchronous slow
+path, and ``Scheduler.lookahead_decode`` bails whenever
+``speculate > 0``.  The two optimizations compose per-workload, not
+per-step: async overlap pays on stable decode-bound stretches, drafts
+pay on self-repetitive content.
 Correctness never depends on draft *quality* — a garbage draft just
 yields zero accepted tokens and the verify step degrades to a decode
 step (the bonus token keeps forward progress) — so the chaos-friendly

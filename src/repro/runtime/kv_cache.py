@@ -330,6 +330,10 @@ class KVCacheManager:
         self.injector = injector
         self.pool = PagePool(cfg.num_pages, injector=injector)
         self._tables: dict[int, list[int]] = {}
+        # dense device mirror, maintained incrementally at every table
+        # mutation (dirty-slot writes, not an O(B*P) rebuild per decision)
+        self._mirror = np.zeros((cfg.max_batch, cfg.max_pages_per_seq),
+                                np.int32)
 
     # ------------------------------------------------------------ queries
     def slot_pages(self, slot: int) -> list[int]:
@@ -360,12 +364,15 @@ class KVCacheManager:
         table = self._tables.setdefault(slot, [])
         need = self.cfg.pages_for(num_tokens) - len(table)
         if need > 0:
-            table.extend(self.pool.alloc(need))
+            fresh = self.pool.alloc(need)
+            self._mirror[slot, len(table):len(table) + need] = fresh
+            table.extend(fresh)
 
     def free_slot(self, slot: int) -> None:
         pages = self._tables.pop(slot, [])
         if pages:
             self.pool.release(pages)
+            self._mirror[slot, :] = 0
 
     def truncate(self, slot: int, num_tokens: int) -> list[int]:
         """Shrink slot's table to exactly cover ``num_tokens`` tokens,
@@ -386,6 +393,7 @@ class KVCacheManager:
         if tail:
             del table[keep:]
             self.pool.release(tail)
+            self._mirror[slot, keep:keep + len(tail)] = 0
         return tail
 
     # ------------------------------------------------------ prefix cache
@@ -408,6 +416,7 @@ class KVCacheManager:
             raise ValueError(f"slot {slot} already holds pages")
         self.pool.fork(pages)
         self._tables[slot] = list(pages)
+        self._mirror[slot, :len(pages)] = pages
 
     def register_block(self, slot: int, block_idx: int,
                        chain_hash: bytes) -> bool:
@@ -441,6 +450,7 @@ class KVCacheManager:
                 dst = self.pool.alloc(1)[0]   # may raise OutOfPages
                 self.pool.release([src])      # siblings keep their refs
                 table[bi] = dst
+                self._mirror[slot, bi] = dst
                 pairs.append((src, dst))
 
     # -------------------------------------------------------- containment
@@ -467,6 +477,7 @@ class KVCacheManager:
         the true count; orphaned pages are quarantined (retired from
         circulation).  Returns the quarantined page list."""
         table = self._tables.pop(slot, [])
+        self._mirror[slot, :] = 0
         owned = Counter(p for t in self._tables.values() for p in t)
         gone = []
         for p in set(table):
@@ -478,7 +489,27 @@ class KVCacheManager:
 
     # ----------------------------------------------------- device mirror
     def page_table_array(self) -> np.ndarray:
-        """Dense [max_batch, max_pages_per_seq] int32 mirror (unused -> 0)."""
+        """Dense [max_batch, max_pages_per_seq] int32 mirror (unused -> 0).
+
+        Maintained *incrementally*: every table mutation (``ensure`` /
+        ``free_slot`` / ``truncate`` / ``adopt_cached`` / ``cow_range`` /
+        ``quarantine_slot``) writes only the dirty cells, so fetching the
+        mirror before a step dispatch is one C-level memcpy instead of
+        the former O(max_batch * max_pages_per_seq) Python rebuild — one
+        of the host-side costs the overlapped engine loop (DESIGN.md §15)
+        removes from the decode gap.  Returns a *snapshot* copy: the
+        engine hands the array to asynchronously-dispatched jitted steps,
+        and on CPU backends JAX may alias numpy buffers zero-copy, so an
+        in-flight step must never observe a later in-place mirror update.
+        ``check()`` asserts the live mirror stays bitwise equal to a
+        from-scratch rebuild.
+        """
+        return self._mirror.copy()
+
+    def rebuild_page_table(self) -> np.ndarray:
+        """From-scratch dense mirror (the pre-incremental construction);
+        kept as the oracle the regression tests and ``check()`` compare
+        the maintained ``page_table_array()`` against."""
         out = np.zeros((self.cfg.max_batch, self.cfg.max_pages_per_seq),
                        np.int32)
         for slot, pages in self._tables.items():
@@ -503,4 +534,6 @@ class KVCacheManager:
             assert 0 <= slot < self.cfg.max_batch
             assert len(t) <= self.cfg.max_pages_per_seq
             assert len(t) == len(set(t)), "page twice in one table"
+        assert np.array_equal(self._mirror, self.rebuild_page_table()), \
+            "incremental page-table mirror drifted from tables"
         self.pool.check()

@@ -773,6 +773,71 @@ class Scheduler:
         self._last_was_prefill = False
         return None  # only future arrivals remain — engine ticks the clock
 
+    def lookahead_decode(self, pending: DecodeBatch) -> DecodeBatch | None:
+        """Overlapped-loop fast path (DESIGN.md §15): the decision for step
+        N+1 computed *before* step N's sampled tokens are applied, so the
+        host schedules while the device computes.  Safe only when the next
+        decision is provably the same decode batch regardless of what step
+        N sampled — membership identical to ``pending`` and nothing host-
+        visible can change it: no waiting request (admission could join),
+        no eos / exhausted token budget (a lane could retire), no deadline
+        (expiry could time a lane out), no speculation (drafts need step
+        N's token on host), and watchdog off (its per-decision check must
+        observe post-apply state).  Any violated condition returns None
+        with *zero* scheduler mutation — the caller applies the pending
+        tokens and falls back to :meth:`next_decision`, which then sees
+        exactly the state the synchronous loop would have seen; likewise
+        page pressure (OutOfPages) bails out rather than evicting, because
+        preempting a sequence with an unapplied in-flight token would drop
+        that token from its recompute prompt.  On success the clock,
+        stats, and trace advance bitwise-identically to the synchronous
+        ``next_decision`` for the same step, which is what keeps the
+        async ≡ sync trace contract checkable."""
+        if self.waiting or self.speculate > 0 or self.watchdog:
+            return None
+        decoding = [s for s in self.running if not s.prefilling]
+        if (len(decoding) != len(self.running)
+                or len(decoding) != len(pending.seqs)
+                or any(a is not b for a, b in zip(decoding, pending.seqs))):
+            return None
+        for s in decoding:
+            r = s.req
+            if (r.eos_id is not None or r.deadline_step is not None
+                    or r.deadline_t is not None
+                    or len(s.out_tokens) + 1 >= r.max_new_tokens):
+                return None
+        pairs: list[tuple[int, int]] = []
+        try:
+            for s in decoding:
+                # post-apply kv_len is kv_len + 1: the write page at the
+                # new position is either step N's (already exclusive) or
+                # freshly allocated here (refcount 1), so cow stays empty;
+                # cow_range is still consulted for defense in depth
+                self.kv.ensure(s.slot, s.kv_len + 1)
+                self.kv.cow_range(s.slot, s.kv_len, s.kv_len + 1, pairs)
+        except OutOfPages:
+            return None  # eviction is the slow path's job (see docstring)
+        self.clock += 1
+        self.stats.decode_steps += 1
+        self.stats.occupancy_sum += len(decoding) / self.cfg.max_batch
+        self.stats.decode_tokens += len(decoding)
+        self._last_was_prefill = False
+        self.trace.append(
+            "decode " + ",".join(f"r{s.rid}" for s in decoding))
+        return DecodeBatch(tuple(decoding), self._record_cow(pairs))
+
+    def completed_decode(self, batch: DecodeBatch, tokens) -> None:
+        """Deferred feedback for one executed DecodeBatch: append each
+        lane's sampled token.  ``tokens`` aligns with ``batch.seqs``.
+        Sequences that left ``running`` between dispatch and apply
+        (cancelled or quarantined — the §15 voiding rule) are skipped,
+        mirroring :meth:`completed_verify`; their terminal record already
+        carries the tokens they had when they left."""
+        for seq, tok in zip(batch.seqs, tokens):
+            if seq not in self.running:
+                continue
+            seq.out_tokens.append(int(tok))
+
     def _propose(self, seq: Sequence) -> tuple[int, ...]:
         """Draft tokens for one sequence, capped so the verify step can
         never overrun max_seq_len, the request's token budget (emitting

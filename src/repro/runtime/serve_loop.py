@@ -21,6 +21,7 @@ to fp32 reassociation of the post-epilogue psum (DESIGN.md §9/§10).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Any
 
@@ -143,6 +144,20 @@ class EngineConfig:
     step — verify, ``[max_batch, K+1]`` — scores every draft in one
     batched pass; the longest agreeing prefix is accepted, so greedy
     streams are argmax-identical to ``speculate=0``.
+
+    ``device_sample`` (DESIGN.md §15) fetches the on-device argmax ids
+    the jitted steps now return — ``[B]`` / ``[B, K+1]`` int32 — instead
+    of the ``[B, vocab]`` float32 logits; False selects the host-side
+    logits fallback (the pre-§15 transfer, with batched host argmax).
+    Either way the steps compute and return both outputs, so the flag
+    never changes what compiles — only what the host fetches.
+
+    ``async_loop`` turns on the overlapped engine loop (DESIGN.md §15):
+    decode dispatch is decoupled from result application, so the host
+    applies step N's tokens while the device runs step N+1, and — on the
+    lookahead fast path — step N's device-resident token array feeds
+    step N+1's dispatch with no host round-trip.  Greedy streams, traces
+    and terminal statuses stay identical to ``async_loop=False``.
     """
     max_batch: int = 4        # decode slots
     page_size: int = 8        # tokens per KV page
@@ -154,6 +169,9 @@ class EngineConfig:
     policy: str = "fcfs"      # scheduler policy name (fcfs | priority)
     speculate: int = 0        # max draft tokens per verify step (0 = off)
     draft_source: str = "ngram"  # draft source name (ngram | random)
+    # overlapped host/device loop (DESIGN.md §15)
+    device_sample: bool = True  # fetch on-device argmax ids, not logits
+    async_loop: bool = False    # overlap host scheduling with device steps
     # request-lifecycle robustness (DESIGN.md §12)
     max_queue: int | None = None  # bounded admission queue; None = unbounded
     watchdog: bool = False    # assert kv invariants after every decision
@@ -237,6 +255,11 @@ class EngineStats:
     faults_injected: int = 0         # injector-fired faults (all sites)
     goodput_tokens: int = 0          # decode tokens of OK completions only
     p95_queue_wait_steps: float = 0.0
+    # overlapped loop instrumentation (DESIGN.md §15)
+    host_gap_s: float = 0.0     # device-idle time: step ready -> next dispatch
+    overlap_frac: float = 0.0   # 1 - host_gap_s/wall_s (device-busy fraction)
+    d2h_bytes: int = 0          # step-output bytes fetched device -> host
+    lookahead_steps: int = 0    # decode steps dispatched via the fast path
 
     @property
     def decode_tok_s(self) -> float:
@@ -363,14 +386,24 @@ class ServeEngine:
         self._cow_lanes = max(self.ecfg.max_batch,
                               -(-self.ecfg.prefill_chunk // ps) + 1)
 
+        # every model-evaluating step returns (ids, logits, cache): the
+        # greedy argmax runs ON DEVICE (tp.argmax_tokens — TP-global with
+        # jnp.argmax tie-breaking), so the host may fetch a few int32 ids
+        # instead of [B, vocab] float32 logits, or thread the device-
+        # resident ids straight into the next decode dispatch (DESIGN.md
+        # §15).  Both outputs always exist — ``device_sample`` only picks
+        # which one the host fetches, so the flag never retraces.
         def prefill_step(p, tok, c, pt, start, rlen, slot, reset):
             with tpmod.activate(ntp):
-                return M.paged_prefill_chunk(p, cfg, tok, c, pt, start,
-                                             rlen, slot, reset, ps)
+                logits, c = M.paged_prefill_chunk(p, cfg, tok, c, pt, start,
+                                                  rlen, slot, reset, ps)
+                return tpmod.argmax_tokens(logits), logits, c
 
         def decode_step(p, tok, c, pt, kvl, act):
             with tpmod.activate(ntp):
-                return M.paged_decode_step(p, cfg, tok, c, pt, kvl, act, ps)
+                logits, c = M.paged_decode_step(p, cfg, tok, c, pt, kvl,
+                                                act, ps)
+                return tpmod.argmax_tokens(logits), logits, c
 
         def copy_step(c, src, dst):
             with tpmod.activate(ntp):
@@ -381,8 +414,9 @@ class ServeEngine:
 
         def verify_step(p, tok, c, pt, kvl, rlen, act):
             with tpmod.activate(ntp):
-                return M.paged_verify_step(p, cfg, tok, c, pt, kvl, rlen,
-                                           act, ps)
+                logits, c = M.paged_verify_step(p, cfg, tok, c, pt, kvl,
+                                                rlen, act, ps)
+                return tpmod.argmax_tokens(logits), logits, c
 
         if ntp > 1:
             tpmod.validate(cfg, ntp)
@@ -396,21 +430,23 @@ class ServeEngine:
                 self.cache, tpmod.named_shardings(cspecs, self.mesh))
             rep = P()
             logits_spec = P(None, "tp")  # lm_head column-parallel on vocab
+            # sampled ids are replicated (argmax_tokens all-gathers the
+            # per-shard winners), so their out-spec is P() like any scalar
             self._prefill_fn = jax.jit(shard_map(
                 prefill_step, mesh=self.mesh,
                 in_specs=(pspecs, rep, cspecs, rep, rep, rep, rep, rep),
-                out_specs=(logits_spec, cspecs), check_rep=False))
+                out_specs=(rep, logits_spec, cspecs), check_rep=False))
             self._decode_fn = jax.jit(shard_map(
                 decode_step, mesh=self.mesh,
                 in_specs=(pspecs, rep, cspecs, rep, rep, rep),
-                out_specs=(logits_spec, cspecs), check_rep=False))
+                out_specs=(rep, logits_spec, cspecs), check_rep=False))
             if self.ecfg.speculate > 0:
                 # verify logits are [B, K+1, V]: vocab still column-
                 # parallel, one extra replicated lane axis in the middle
                 self._verify_fn = jax.jit(shard_map(
                     verify_step, mesh=self.mesh,
                     in_specs=(pspecs, rep, cspecs, rep, rep, rep, rep),
-                    out_specs=(P(None, None, "tp"), cspecs),
+                    out_specs=(rep, P(None, None, "tp"), cspecs),
                     check_rep=False))
             # COW page copies are per-shard elementwise on the head-sharded
             # pools; the host-decided (src, dst) pairs replicate, so every
@@ -424,9 +460,35 @@ class ServeEngine:
             self._cow_fn = jax.jit(copy_step)
             if self.ecfg.speculate > 0:
                 self._verify_fn = jax.jit(verify_step)
+            # commit params + cache to the device up front: committedness
+            # is part of the jit cache key and it propagates — once the
+            # async loop feeds a committed token array (see _put_tok), the
+            # step outputs turn committed, and an uncommitted initial
+            # cache would make the NEXT prefill/decode a second trace
+            self.params = jax.device_put(self.params, jax.devices()[0])
+            self.cache = jax.device_put(self.cache, jax.devices()[0])
         self.completions: dict[int, Completion] = {}
         self._prompts: dict[int, list[int]] = {}
         self.stats = EngineStats(tp=ntp, precision=cfg.sparsity.recipe.name)
+        # overlapped-loop state (DESIGN.md §15): the dispatched-but-not-
+        # applied decode step (decision + device-resident sampled ids),
+        # the instant the last fetched step output became ready (host-gap
+        # accounting), and the backoff occurrence counter (jitter)
+        self._pending: tuple[DecodeBatch, jax.Array] | None = None
+        self._t_ready: float | None = None
+        self._backoff_n = 0
+        # decode token inputs are committed to the sharding the step
+        # OUTPUTS its sampled ids with (replicated under tp): the jit
+        # cache keys on input shardings, so an uncommitted numpy token
+        # array and a threaded device-resident id array would otherwise
+        # be two cache entries — breaking the compile-once contract the
+        # moment the fast path fires
+        mesh = getattr(self, "mesh", None)
+        self._tok_sharding = (jax.sharding.NamedSharding(mesh, P())
+                              if mesh is not None else jax.devices()[0])
+
+    def _put_tok(self, arr: np.ndarray) -> jax.Array:
+        return jax.device_put(arr, self._tok_sharding)
 
     # ------------------------------------------------------------ warmup
     def warmup(self) -> float:
@@ -441,8 +503,12 @@ class ServeEngine:
         compile time; DESIGN.md §13).  Dummy inputs run each function
         once and every output is DISCARDED: the jitted steps are purely
         functional and nothing is donated, so ``self.cache``, the page
-        accounting and the stats are untouched.  Returns the elapsed
-        seconds (also recorded as ``stats.warmup_s``)."""
+        accounting and the stats are untouched.  After the dummy passes
+        each live step function is asserted to hold exactly ONE compiled
+        entry — the compile-once contract the fixed shapes exist for
+        (DESIGN.md §15); a second trace here means a shape or sharding
+        leaked into the cache key.  Returns the elapsed seconds (also
+        recorded as ``stats.warmup_s``)."""
         ec = self.ecfg
         t0 = time.time()
         ptab = self.kv.page_table_array()
@@ -451,8 +517,8 @@ class ServeEngine:
             self.cache, ptab[:1], np.int32(0), np.int32(ec.prefill_chunk),
             np.int32(0), np.bool_(True)))
         jax.block_until_ready(self._decode_fn(
-            self.params, np.zeros((ec.max_batch,), np.int32), self.cache,
-            ptab, np.zeros((ec.max_batch,), np.int32),
+            self.params, self._put_tok(np.zeros((ec.max_batch,), np.int32)),
+            self.cache, ptab, np.zeros((ec.max_batch,), np.int32),
             np.zeros((ec.max_batch,), bool)))
         n = self._cow_lanes
         # all lanes carry the out-of-bounds dst id: every write is dropped
@@ -467,6 +533,12 @@ class ServeEngine:
                 self.cache, ptab, np.zeros((ec.max_batch,), np.int32),
                 np.ones((ec.max_batch,), np.int32),
                 np.zeros((ec.max_batch,), bool)))
+        for name, fn in (("prefill", self._prefill_fn),
+                         ("decode", self._decode_fn),
+                         ("cow", self._cow_fn),
+                         ("verify", getattr(self, "_verify_fn", None))):
+            assert fn is None or fn._cache_size() == 1, \
+                f"{name} step compiled {fn._cache_size()} times in warmup"
         self.stats.warmup_s = time.time() - t0
         return self.stats.warmup_s
 
@@ -511,7 +583,16 @@ class ServeEngine:
         """Client-initiated cancellation: drop the request whether it is
         waiting or mid-flight (pages/COW refcounts released) and emit a
         CANCELLED completion carrying tokens generated so far.  Returns
-        False when ``rid`` is unknown or already terminal."""
+        False when ``rid`` is unknown or already terminal.
+
+        With ``async_loop`` a dispatched-but-unapplied decode step may be
+        in flight; its tokens are applied FIRST, so cancellation keeps
+        exactly the step-boundary semantics of the synchronous loop (the
+        cancelled stream includes the token the device already computed,
+        and a sequence the in-flight step finished retires as OK rather
+        than CANCELLED — DESIGN.md §15 voiding rules)."""
+        self._apply_pending()
+        self.sched.retire_finished()
         hit = self.sched.cancel(rid)
         self._drain_finished()
         return hit
@@ -519,6 +600,39 @@ class ServeEngine:
     # -------------------------------------------------------------- step
     def _sample(self, logits_row: np.ndarray) -> int:
         return int(np.argmax(logits_row))  # greedy (parity with generate)
+
+    def _fetch(self, x) -> np.ndarray:
+        """Materialize one step output on host — the engine's ONLY
+        device->host synchronization point.  Accounts the payload in
+        ``stats.d2h_bytes`` (the §15 decode fast path moves ``[B]`` int32
+        per step; the logits fallback moves ``[B, vocab]`` float32) and
+        stamps ``_t_ready``: the fetch returning means the device has
+        drained its queue, so host time from here to the next dispatch is
+        device-idle gap (``stats.host_gap_s``)."""
+        arr = np.asarray(x)
+        self.stats.d2h_bytes += arr.nbytes
+        self._t_ready = time.time()
+        return arr
+
+    def _note_dispatch(self) -> None:
+        """Called immediately before handing the device new step work:
+        closes the host-gap window opened by the last ``_fetch``."""
+        if self._t_ready is not None:
+            self.stats.host_gap_s += max(0.0, time.time() - self._t_ready)
+            self._t_ready = None
+
+    def _apply_pending(self) -> None:
+        """Land the in-flight decode step (async loop): fetch its sampled
+        ids — blocking until the device finishes it — and append them via
+        ``Scheduler.completed_decode``, which skips lanes whose sequence
+        left ``running`` between dispatch and apply (§15 voiding)."""
+        if self._pending is None:
+            return
+        batch, ids_dev = self._pending
+        self._pending = None
+        ids = self._fetch(ids_dev)
+        self.sched.completed_decode(
+            batch, [int(ids[s.slot]) for s in batch.seqs])
 
     def _drain_finished(self) -> list[Completion]:
         """Convert the scheduler's terminal :class:`~repro.runtime.
@@ -532,6 +646,31 @@ class ServeEngine:
             out.append(comp)
         return out
 
+    def _backoff_wait(self, attempt: int) -> None:
+        """Backoff between step retries: exponential base with
+        deterministic jitter, non-blocking for the overlapped loop.
+
+        Jitter (0.5x–1.5x, blake2b of the fault seed and the backoff
+        occurrence number) decorrelates retry storms without breaking
+        fault-schedule replay — the delay is a pure function of run
+        config, never of wall clock.  Non-blocking: any deferred decode
+        apply is drained FIRST (host work the engine would otherwise do
+        after the sleep), and only the remainder of the delay is slept;
+        the device keeps draining already-dispatched work throughout
+        either way, because JAX dispatch is asynchronous and nothing
+        here blocks on device results."""
+        base = self.ecfg.retry_backoff_s * (2 ** attempt)
+        seed = self.ecfg.faults.seed if self.ecfg.faults is not None else 0
+        h = hashlib.blake2b(f"backoff|{seed}|{self._backoff_n}".encode(),
+                            digest_size=8).digest()
+        self._backoff_n += 1
+        delay = base * (0.5 + int.from_bytes(h, "big") / 2.0 ** 64)
+        t0 = time.time()
+        self._apply_pending()
+        remaining = delay - (time.time() - t0)
+        if remaining > 0:
+            time.sleep(remaining)
+
     def _dispatch(self, fn, *args):
         """Run a jitted step through the fault injector's ``step`` site
         with bounded retry/backoff: a :class:`~repro.runtime.faults.
@@ -539,6 +678,7 @@ class ServeEngine:
         retrying is always safe.  Exhausting ``step_retries`` re-raises
         for the caller to fail the decision's requests."""
         if self.injector is None:
+            self._note_dispatch()
             return fn(*args)
         attempts = self.ecfg.step_retries + 1
         for attempt in range(attempts):
@@ -550,8 +690,9 @@ class ServeEngine:
                         f"{self.ecfg.step_retries} retries")
                 self.stats.step_retries += 1
                 if self.ecfg.retry_backoff_s:
-                    time.sleep(self.ecfg.retry_backoff_s * (2 ** attempt))
+                    self._backoff_wait(attempt)
                 continue
+            self._note_dispatch()
             return fn(*args)
 
     def _run_cow(self, pairs) -> None:
@@ -561,6 +702,7 @@ class ServeEngine:
         ``num_pages`` (dropped writes), so the copy fn compiles once."""
         if not pairs:
             return
+        self._note_dispatch()
         n = self._cow_lanes
         for i in range(0, len(pairs), n):
             src = np.zeros((n,), np.int32)
@@ -572,8 +714,69 @@ class ServeEngine:
 
     def step(self) -> list[Completion]:
         """Execute one scheduler decision; returns newly finished requests
-        (any terminal status — OK completions and failures alike)."""
+        (any terminal status — OK completions and failures alike).
+
+        With ``async_loop`` (DESIGN.md §15) a decode step may still be in
+        flight from the previous call.  The fast path asks the scheduler
+        for a *lookahead* decode decision — provably the same batch
+        regardless of what the in-flight step sampled — and dispatches it
+        immediately, threading the device-resident sampled ids of step N
+        in as step N+1's token input (no host round-trip); only then does
+        the host land step N's tokens, overlapped with the device running
+        step N+1.  When no safe lookahead exists (membership could
+        change, deadlines, speculation, faults, page pressure) the
+        pending step is applied first and the decision falls through to
+        the synchronous path below, which then observes exactly the state
+        the synchronous loop would have — that equivalence is what keeps
+        async-on traces bitwise identical to async-off.  Fault injection
+        disables the fast path outright (``injector`` is not None): the
+        lookahead's allocation calls would otherwise shift the
+        deterministic per-site fault schedule."""
         self.stats.steps += 1
+        if self.ecfg.async_loop and self._pending is not None:
+            la = (self.sched.lookahead_decode(self._pending[0])
+                  if self.injector is None else None)
+            if la is not None:
+                return self._threaded_decode(la)
+            # slow path: land the in-flight tokens first so next_decision
+            # sees the post-step state (retire what the step finished)
+            self._apply_pending()
+            self.sched.retire_finished()
+        return self._sync_step()
+
+    def _threaded_decode(self, la: DecodeBatch) -> list[Completion]:
+        """Fast-path decode dispatch (DESIGN.md §15): step N+1 starts from
+        step N's on-device token array before step N's results ever reach
+        the host."""
+        batch, ids_dev = self._pending
+        self._run_cow(la.cow)  # provably empty on this path (lookahead
+        #                        write pages are already exclusive)
+        bmax = self.ecfg.max_batch
+        kvl = np.zeros((bmax,), np.int32)
+        active = np.zeros((bmax,), bool)
+        for seq in la.seqs:
+            # tokens are not applied yet, so seq.kv_len is the PRE-apply
+            # length == post-apply kv_len - 1, the context-written count
+            # the decode step wants; inactive lanes of ids_dev carry
+            # whatever lane garbage step N computed — rows are batch-
+            # independent and masked writes drop them, same as the zero
+            # padding the synchronous path feeds
+            kvl[seq.slot] = seq.kv_len
+            active[seq.slot] = True
+        self._note_dispatch()
+        ids2, _logits, self.cache = self._decode_fn(
+            self.params, ids_dev, self.cache, self.kv.page_table_array(),
+            kvl, active)
+        self.stats.lookahead_steps += 1
+        # overlap window: the device is running step N+1 while the host
+        # fetches and applies step N here
+        self._apply_pending()
+        self._t_ready = None  # device holds queued work — not idle
+        self._pending = (la, ids2)
+        self.sched.retire_finished()  # no-op by lookahead precondition
+        return self._drain_finished()
+
+    def _sync_step(self) -> list[Completion]:
         decision = self.sched.next_decision()
         if decision is None:
             # no executable work this tick (future arrivals, a voided
@@ -597,15 +800,21 @@ class ServeEngine:
                 chunk = seq.prompt[start:start + length]
                 chunk = chunk + [0] * (self.ecfg.prefill_chunk - length)
                 pt = self.kv.page_table_array()[seq.slot:seq.slot + 1]
-                logits, self.cache = self._dispatch(
+                ids, logits, self.cache = self._dispatch(
                     self._prefill_fn, self.params,
                     np.asarray([chunk], np.int32), self.cache,
                     pt, np.int32(start), np.int32(length),
                     np.int32(seq.slot), np.bool_(start == seq.resume_pos))
                 self.sched.completed_prefill(decision)
                 if not seq.prefilling:  # prompt done -> first token
-                    self.sched.append_token(seq, self._sample(
-                        np.asarray(logits[0])))
+                    # mid-prompt chunks fetch NOTHING (pure dispatch);
+                    # the final chunk fetches [1] int32 — or the logits
+                    # row on the fallback path
+                    if self.ecfg.device_sample:
+                        tok = int(self._fetch(ids)[0])
+                    else:
+                        tok = self._sample(self._fetch(logits[0]))
+                    self.sched.append_token(seq, tok)
             elif isinstance(decision, VerifyBatch):
                 bmax, lanes = self.ecfg.max_batch, self._verify_lanes
                 token = np.zeros((bmax, lanes), np.int32)
@@ -618,16 +827,22 @@ class ServeEngine:
                     kvl[seq.slot] = seq.kv_len - 1  # context written
                     rlen[seq.slot] = 1 + len(drft)
                     active[seq.slot] = True
-                logits, self.cache = self._dispatch(
+                ids, logits, self.cache = self._dispatch(
                     self._verify_fn, self.params, token, self.cache,
                     self.kv.page_table_array(), kvl, rlen, active)
-                logits = np.asarray(logits)       # [B, K+1, V]
+                if self.ecfg.device_sample:
+                    argmax_all = self._fetch(ids)     # [B, K+1] int32
+                else:
+                    # logits fallback: one batched argmax over the whole
+                    # [B, K+1, V] block (the former per-lane Python loop,
+                    # vectorized — same first-occurrence tie-breaking)
+                    argmax_all = np.argmax(self._fetch(logits), axis=-1)
                 results = []
                 for seq, drft in zip(decision.seqs, decision.drafts):
                     # lane i's logits predict the token after lane i;
                     # lanes past real_len are padding — never consulted
-                    argmax = [self._sample(logits[seq.slot, i])
-                              for i in range(1 + len(drft))]
+                    argmax = [int(t) for t in
+                              argmax_all[seq.slot, :1 + len(drft)]]
                     n_acc, emitted = draft_mod.accept_drafts(drft, argmax)
                     eos = seq.req.eos_id
                     if eos is not None and eos in emitted:
@@ -650,13 +865,21 @@ class ServeEngine:
                     token[seq.slot] = seq.out_tokens[-1]
                     kvl[seq.slot] = seq.kv_len - 1  # context written
                     active[seq.slot] = True
-                logits, self.cache = self._dispatch(
-                    self._decode_fn, self.params, token, self.cache,
-                    self.kv.page_table_array(), kvl, active)
-                logits = np.asarray(logits)
+                ids, logits, self.cache = self._dispatch(
+                    self._decode_fn, self.params, self._put_tok(token),
+                    self.cache, self.kv.page_table_array(), kvl, active)
+                if self.ecfg.async_loop:
+                    # defer the apply: tokens land at the next step() /
+                    # cancel() boundary, overlapped with host scheduling
+                    # (and possibly a threaded next dispatch) — §15
+                    self._pending = (decision, ids)
+                    return self._drain_finished()
+                if self.ecfg.device_sample:
+                    toks = self._fetch(ids)           # [B] int32
+                else:
+                    toks = np.argmax(self._fetch(logits), axis=-1)
                 for seq in decision.seqs:
-                    self.sched.append_token(
-                        seq, self._sample(logits[seq.slot]))
+                    self.sched.append_token(seq, int(toks[seq.slot]))
         except fl.TransientStepError:
             # retries exhausted: the device function never ran (injection
             # precedes dispatch), so page state is consistent — fail the
@@ -679,9 +902,14 @@ class ServeEngine:
             self.step()
             if on_step is not None:
                 on_step(self, self.stats.steps)
+        self._apply_pending()  # async: nothing may stay in flight past run
+        self.sched.retire_finished()
+        self._drain_finished()
         jax.block_until_ready(self.cache)
         s, ss = self.stats, self.sched.stats
         s.wall_s = time.time() - t0
+        s.overlap_frac = max(0.0, min(1.0, 1.0 - s.host_gap_s
+                                      / max(s.wall_s, 1e-9)))
         s.decode_tokens, s.decode_steps = ss.decode_tokens, ss.decode_steps
         s.prefill_tokens, s.evictions = ss.prefill_tokens, ss.evicted
         s.recompute_tokens = ss.recompute_tokens

@@ -116,6 +116,36 @@ def reduce_max(x: jax.Array) -> jax.Array:
     return jax.lax.pmax(x, ctx.axis)
 
 
+def argmax_tokens(logits: jax.Array) -> jax.Array:
+    """Greedy token ids from (possibly vocab-sharded) logits, on device.
+
+    ``lm_head`` is column-parallel, so inside shard_map each shard holds a
+    contiguous ``[..., V/tp]`` vocab slice of the logits.  The global
+    argmax is two local reductions plus one all-gather of scalars per
+    lane: per-shard argmax/max, then an argmax across the gathered shard
+    axis.  Tie-breaking matches ``jnp.argmax`` on the unsharded logits
+    exactly — first occurrence, i.e. the *lowest global vocab index*:
+    within a shard the local argmax already picks the lowest local index,
+    and across shards ``all_gather`` stacks shards in axis-index order so
+    the outer argmax picks the lowest shard among equal maxima.  The
+    returned ids are replicated across shards (out-spec ``P()``), which is
+    what lets the engine fetch a ``[B]`` int32 array — or feed it straight
+    back into the next step — instead of ``[B, V]`` float32 logits
+    (DESIGN.md §15).  Works for any leading shape: ``[B, V/tp]`` decode
+    logits and ``[B, K+1, V/tp]`` verify logits alike."""
+    ctx = current()
+    if ctx is None or ctx.size == 1:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    vloc = logits.shape[-1]
+    loc = jnp.argmax(logits, axis=-1)
+    best = jnp.take_along_axis(logits, loc[..., None], axis=-1)[..., 0]
+    gidx = (loc + jax.lax.axis_index(ctx.axis) * vloc).astype(jnp.int32)
+    allv = jax.lax.all_gather(best, ctx.axis)   # [tp, ...] shard maxima
+    alli = jax.lax.all_gather(gidx, ctx.axis)   # [tp, ...] global indices
+    shard = jnp.argmax(allv, axis=0)            # ties -> lowest shard
+    return jnp.take_along_axis(alli, shard[None], axis=0)[0]
+
+
 def rmsnorm(params, x, eps: float = 1e-6):
     """RMSNorm over a feature axis that is *sharded* across TP shards
     (the SSM gated norm over d_inner): the mean of squares is the global

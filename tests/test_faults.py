@@ -91,19 +91,38 @@ def test_pool_alloc_injection_is_recoverable():
 
 
 # --------------------------------------------------- host-only chaos
-def _chaos(seed: int, prefix_cache: bool) -> None:
+def _chaos(seed: int, prefix_cache: bool, async_mode: bool = False,
+           faults: bool = True, raw_cancels: bool = False):
     """One randomized traffic storm: staggered submits with deadlines,
     random cancels, injected alloc/COW failures, bounded queue, watchdog
-    on.  Asserts the §12 robustness contract end to end."""
+    on.  Asserts the §12 robustness contract end to end.
+
+    ``async_mode`` replays the storm through the overlapped-loop
+    scheduler surface (DESIGN.md §15): decode feedback is DEFERRED —
+    held pending like an in-flight device step and landed via
+    ``completed_decode`` one iteration later — and, when no injector is
+    armed (the engine's own gate: lookahead shifts the per-site fault
+    schedule), the next decision is taken through ``lookahead_decode``
+    before the pending tokens apply.  Cancels mirror the engine's
+    ``cancel()``: pending feedback lands first, so decision traces stay
+    comparable to the synchronous storm.  ``raw_cancels`` instead lands
+    cancels INSIDE the dispatch-apply window — the voiding rule — so
+    ``completed_decode`` must skip the departed sequences.
+
+    Returns ``(terminal_status_by_rid, voided_applies)``."""
     rng = np.random.default_rng(seed)
-    plan = fl.FaultPlan(seed=seed, alloc_fail_rate=0.12,
-                        cow_fail_rate=0.10 if prefix_cache else 0.0)
-    inj = fl.FaultInjector(plan)
+    plan = (fl.FaultPlan(seed=seed, alloc_fail_rate=0.12,
+                         cow_fail_rate=0.10 if prefix_cache else 0.0)
+            if faults else None)
+    inj = fl.FaultInjector(plan) if plan else None
     cfg = PagedKVConfig(page_size=4, num_pages=int(rng.integers(8, 14)),
                         max_batch=int(rng.integers(2, 4)), max_seq_len=32)
     kv = KVCacheManager(cfg, namespace="chaos", injector=inj)
+    # the watchdog disables lookahead wholesale (it audits post-apply
+    # state), so the fault-free storms drop it to let the fast path fire
     sched = Scheduler(kv, prefill_chunk=int(rng.integers(4, 9)),
-                      prefix_cache=prefix_cache, max_queue=3, watchdog=True)
+                      prefix_cache=prefix_cache, max_queue=3,
+                      watchdog=faults)
 
     shared = rng.integers(0, 100, size=8).tolist()  # two full shared pages
     n_req = int(rng.integers(4, 9))
@@ -120,34 +139,78 @@ def _chaos(seed: int, prefix_cache: bool) -> None:
             rejected_at_submit.add(rid)
 
     terminal: dict[int, str] = {}
+    pending = None            # (DecodeBatch, tokens) awaiting apply
+    voided = 0
+
+    def apply_pending():
+        nonlocal pending, voided
+        if pending is None:
+            return
+        batch, toks = pending
+        pending = None
+        voided += sum(1 for s in batch.seqs if s not in sched.running)
+        sched.completed_decode(batch, toks)
+        kv.check()  # conservation after every APPLIED decision too
+
     guard = 0
     while sched.has_work:
         guard += 1
         assert guard < 5000, "scheduler livelock under chaos"
-        d = sched.next_decision()
-        kv.check()  # refcount conservation after EVERY decision (§12)
-        if d is not None:
-            if isinstance(d, PrefillChunk):
-                sched.completed_prefill(d)
-                if not d.seq.prefilling:
-                    d.seq and sched.append_token(
-                        d.seq, int(rng.integers(0, 100)))
+        d = None
+        if pending is not None:
+            # the engine's fast-path gate: lookahead only without an
+            # injector, and only when the scheduler can prove the batch
+            d = (sched.lookahead_decode(pending[0])
+                 if async_mode and inj is None else None)
+            if d is not None:
+                toks = [int(rng.integers(0, 100)) for _ in d.seqs]
+                apply_pending()
+                pending = (d, toks)
             else:
-                assert isinstance(d, DecodeBatch) and d.seqs
-                for seq in d.seqs:
-                    sched.append_token(seq, int(rng.integers(0, 100)))
+                # the engine's slow path: land the in-flight tokens and
+                # retire BEFORE the next decision, so next_decision sees
+                # exactly the synchronous state
+                apply_pending()
+                sched.retire_finished()
+        if pending is None:
+            d = sched.next_decision()
+            kv.check()  # refcount conservation after EVERY decision (§12)
+            if d is not None:
+                if isinstance(d, PrefillChunk):
+                    sched.completed_prefill(d)
+                    if not d.seq.prefilling:
+                        d.seq and sched.append_token(
+                            d.seq, int(rng.integers(0, 100)))
+                else:
+                    assert isinstance(d, DecodeBatch) and d.seqs
+                    toks = [int(rng.integers(0, 100)) for _ in d.seqs]
+                    if async_mode:
+                        pending = (d, toks)  # in flight until next iter
+                    else:
+                        sched.completed_decode(d, toks)
         sched.retire_finished()
         # client cancellation lands between steps (engine ``on_step``)
         if rng.integers(0, 6) == 0:
+            if not raw_cancels:
+                # engine.cancel() semantics: land in-flight tokens first
+                apply_pending()
+                sched.retire_finished()
             live = [s.rid for s in sched.running] + \
                 [r.rid for r in sched.waiting]
             if live:
+                # raw_cancels: the victim may sit in the pending batch —
+                # the §15 voiding window completed_decode must survive
                 sched.cancel(int(live[int(rng.integers(len(live)))]))
                 kv.check()
         for fin in sched.take_finished():
             assert fin.rid not in terminal, \
                 f"request r{fin.rid} finished twice"
             terminal[fin.rid] = fin.status
+    apply_pending()
+    sched.retire_finished()
+    for fin in sched.take_finished():
+        assert fin.rid not in terminal, f"request r{fin.rid} finished twice"
+        terminal[fin.rid] = fin.status
     # every submitted request reached exactly one terminal status
     assert set(terminal) == set(range(n_req))
     assert all(terminal[r] == sch.REJECTED for r in rejected_at_submit)
@@ -160,12 +223,43 @@ def _chaos(seed: int, prefix_cache: bool) -> None:
     assert kv.pool.num_free + kv.pool.num_cached == cfg.num_pages
     for slot in range(cfg.max_batch):
         assert not kv.slot_pages(slot)
+    return terminal, voided
 
 
 @settings(max_examples=40, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1), st.booleans())
 def test_chaos_interleavings_never_crash_or_leak(seed, prefix_cache):
     _chaos(seed, prefix_cache)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.booleans(), st.booleans())
+def test_chaos_async_matches_sync_terminal_taxonomy(seed, prefix_cache,
+                                                    faults):
+    """The overlapped loop is a scheduling transformation, not a policy
+    change: replaying the SAME storm (same seed, same fault schedule)
+    through the deferred-apply/lookahead surface must reach the exact
+    same terminal status for every request."""
+    t_sync, _ = _chaos(seed, prefix_cache, async_mode=False, faults=faults)
+    t_async, _ = _chaos(seed, prefix_cache, async_mode=True, faults=faults)
+    assert t_async == t_sync
+
+
+def test_chaos_async_voiding_window_conserves_refcounts():
+    """Cancels landing INSIDE the dispatch-apply window: the pending
+    batch still names the departed sequence, so ``completed_decode``
+    must skip it (the §15 voiding rule) without dropping a refcount or
+    double-finishing the request.  Swept over seeds until the window is
+    actually hit a healthy number of times — a storm that never voids
+    proves nothing."""
+    voided_total = 0
+    for seed in range(60):
+        _, voided = _chaos(seed, prefix_cache=bool(seed % 2),
+                           async_mode=True, faults=bool(seed % 3 == 0),
+                           raw_cancels=True)
+        voided_total += voided
+    assert voided_total >= 5, \
+        f"voiding window hit only {voided_total} times across the sweep"
 
 
 def test_deadline_taxonomy_wall_clock_and_steps():

@@ -34,7 +34,16 @@
 #    bench_serve filter picks up bench_serve_spec, whose in-bench
 #    asserts fail the run on spec-on/spec-off divergence or < 1.3x
 #    decode throughput on the n-gram-friendly workload.
-# 8. API-docs drift check: docs/api.md must match what
+# 8. Async engine smoke (DESIGN.md §15): the overlapped host/device loop
+#    (--async: on-device sampling + device-resident token threading +
+#    lookahead scheduling) through the same demo — its built-in parity
+#    check against the dense one-shot reference IS the async-on ==
+#    async-off contract, since the sync loop is already parity-gated in
+#    step 3; a tp=2 variant covers the sharded global-argmax sampling.
+#    The overlap economics are gated by step 2: the bench_serve filter
+#    picks up bench_serve_async, whose in-bench asserts fail the run on
+#    async/sync stream divergence or < 1.15x decode throughput.
+# 9. API-docs drift check: docs/api.md must match what
 #    tools/gen_api_docs.py generates from the live docstrings.
 #
 # The pytest run is wrapped in a hard timeout so a wedged scheduler (the
@@ -45,9 +54,10 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 # perf gate: rerun the kernel + serving benches and diff against the
 # newest committed baseline json (exit 1 on out-of-tolerance regressions).
-# bench_serve matches bench_serve_grid and bench_serve_spec too — the
-# batch x cache-size sweep cells and the speculative-decode rows are
-# diff-gated on decode_tok_s like every throughput row.
+# bench_serve matches bench_serve_grid, bench_serve_spec and
+# bench_serve_async too — the batch x cache-size sweep cells, the
+# speculative-decode rows and the overlapped-loop rows are diff-gated on
+# decode_tok_s like every throughput row.
 timeout 900 python -m benchmarks.run fused_pipeline bench_serve --diff
 
 timeout 300 python examples/serve_batched.py --engine --requests 3 \
@@ -86,6 +96,20 @@ timeout 300 python examples/serve_batched.py --engine --inject-faults 1234 \
 # a bad KV rollback fails CI here
 timeout 300 python examples/serve_batched.py --engine --speculate 3 \
     --requests 3 --batch 2 --prompt-len 16 --new-tokens 6
+
+# async engine smoke (DESIGN.md §15): overlapped loop, on-device sampling
+# and token threading — streams must still match the dense reference
+# exactly (the demo asserts it), and a decode-heavy shape makes the
+# lookahead fast path actually fire
+timeout 300 python examples/serve_batched.py --engine --async --requests 3 \
+    --batch 3 --prompt-len 16 --new-tokens 12
+
+# async + tp=2: sampled ids come from the sharded global argmax (all-
+# gathered shard winners, lowest-index tie-break) and thread between
+# steps as replicated device arrays
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+timeout 300 python examples/serve_batched.py --engine --async --tp 2 \
+    --requests 3 --batch 2 --prompt-len 16 --new-tokens 8
 
 python tools/gen_api_docs.py --check
 
