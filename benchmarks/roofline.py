@@ -30,7 +30,7 @@ from repro.kernels.roofline import (  # noqa: F401  (re-exported surface)
     Cost, Peaks, compressed_k, compressed_matmul, cow_copy, dense_gemm,
     efficiency, fused_quant_slide, fused_slided_matmul, itemsize, lifted_k,
     measure_peaks, paged_attention_decode, paged_attention_verify, peaks,
-    quant_matmul, roofline_us, two_kernel)
+    pool_gather, quant_matmul, roofline_us, two_kernel)
 
 
 def tree_bytes(tree) -> float:
@@ -53,6 +53,24 @@ def serve_decode_cost(params, cache, batch: int, kv_len: int,
     per_token = cb / max(num_pages * page_size, 1)
     # ~2 flops per weight element (fp32 params) per sequence in the batch
     return Cost(pb + batch * kv_len * per_token, 2.0 * (pb / 4.0) * batch)
+
+
+def serve_gather_overhead(cache, batch: int, max_seq_len: int,
+                          num_pages: int, page_size: int) -> Cost:
+    """Per-step rearrange tax the gather oracle adds on top of
+    ``serve_decode_cost``: every attention layer reads the K/V (+ scale)
+    pages of every page-table slot — ``batch * ceil(max_seq_len /
+    page_size)`` pages, allocated or not — and writes the gathered
+    contiguous copy back to HBM.  Computed from the live cache pytree as
+    the table-capacity fraction of the pool, read + written once (exact
+    for fp32 pools; ``kernels.roofline.pool_gather`` is the precise
+    per-layer model).  The fused flash-decode path (DESIGN.md §16)
+    deletes exactly this term — the long-context ``serve_grid`` cells
+    measure the deletion and this prices it."""
+    cb = tree_bytes(cache)
+    maxp = -(-max_seq_len // page_size)
+    frac = batch * maxp / max(num_pages, 1)
+    return Cost(2.0 * cb * frac, 0.0)
 
 
 def serve_verify_cost(params, cache, batch: int, lanes: int, kv_len: int,

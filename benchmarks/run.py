@@ -531,15 +531,32 @@ def bench_serve():
 
 
 def bench_serve_grid():
-    """ROADMAP item 3: batch x KV-cache-size decode sweep (maxtext-style
-    grid) over the serve engine.  One row per (max_batch, num_pages)
+    """ROADMAP item 3 + DESIGN.md §16: batch x KV-cache-size decode sweep
+    (maxtext-style grid) over the serve engine, plus a long-context
+    fused-vs-gather attention column.  One row per (max_batch, num_pages)
     cell, named ``serve_grid[b{B},kv{tokens}]``, carrying per-cell
     ``decode_tok_s`` (so ``--diff`` gates each cell on throughput) plus
     the cell's roofline efficiency — the analytic floor scales with the
     cache footprint, so efficiency is comparable ACROSS cells.  The
     small-cache column runs under genuine page pressure (evictions > 0
     at b4): the grid prices what recompute-preemption costs in decode
-    throughput, not just the happy path."""
+    throughput, not just the happy path.
+
+    The long-context cells (>= 1024 valid KV tokens per sequence, page
+    table sized ~2x that — the regime where the gather oracle's
+    table-capacity-proportional rearrange dominates) serve the SAME
+    workload through both attention paths as
+    ``serve_grid[b{B},kv{tokens},gather|fused]`` rows, interleaved
+    best-of-reps.  Both rows are priced with the same valid-token
+    ``serve_decode_cost`` floor, so the acceptance contract — identical
+    token streams, fused decode tok/s >= 1.2x gather, fused efficiency
+    strictly above gather — is asserted in-bench, and the committed rows
+    let ``--diff`` gate every cell of the win.  The gather row's derived
+    column additionally carries the modeled per-step rearrange bytes
+    (``roofline.serve_gather_overhead``) so the measured delta ships with
+    its analytic explanation."""
+    import dataclasses
+
     from repro.configs import registry
     from repro.models import model as M
     from repro.runtime import serve_loop
@@ -547,6 +564,29 @@ def bench_serve_grid():
     cfg = registry.smoke_config("h2o-danube-3-4b")
     params = M.init(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
+
+    def run_once(run_cfg, ecfg, prompts, new_tokens):
+        eng = serve_loop.ServeEngine(params, run_cfg, ecfg)
+        eng.warmup()
+        for i, p in enumerate(prompts):
+            eng.submit(p, new_tokens, rid=i, arrival=i)
+        out = eng.run()
+        return eng, {i: c.tokens for i, c in out.items()}
+
+    def emit_cell(name, s, kv_tokens, cost, extra=""):
+        # the single row emitter: every grid cell (small and long-context)
+        # goes through here so the committed schema — gated decode_tok_s
+        # first — cannot fork between columns (pinned by
+        # tests/test_roofline.py)
+        emit(name, s.wall_s / max(s.steps, 1) * 1e6,
+             f"decode_tok_s={s.decode_tok_s:.1f};"
+             f"occupancy={s.mean_occupancy:.3f};"
+             f"decode_tokens={s.decode_tokens};"
+             f"recompute_tokens={s.recompute_tokens};"
+             f"evictions={s.evictions};"
+             f"kv_capacity_tokens={kv_tokens}" + extra,
+             precision=s.precision, cost=cost)
+
     prompts = [rng.integers(0, cfg.vocab_size,
                             size=int(rng.integers(8, 15))).tolist()
                for _ in range(8)]
@@ -556,33 +596,80 @@ def bench_serve_grid():
             # best-of-reps per cell (DESIGN.md §13 timing discipline):
             # a cell's measured window is small enough that a single
             # sample's tok/s is host jitter, and --diff gates each cell
+            ecfg = serve_loop.EngineConfig(
+                max_batch=max_batch, page_size=8, num_pages=num_pages,
+                max_seq_len=32, prefill_chunk=8)
             best = None
             for _rep in range(3):
-                ecfg = serve_loop.EngineConfig(
-                    max_batch=max_batch, page_size=8, num_pages=num_pages,
-                    max_seq_len=32, prefill_chunk=8)
-                eng = serve_loop.ServeEngine(params, cfg, ecfg)
-                eng.warmup()
-                for i, p in enumerate(prompts):
-                    eng.submit(p, new_tokens, rid=i, arrival=i)
-                eng.run()
+                eng, _ = run_once(cfg, ecfg, prompts, new_tokens)
                 if best is None or \
                         eng.stats.decode_tok_s > best.stats.decode_tok_s:
                     best = eng
-            s = best.stats
             cost = rl.serve_decode_cost(best.params, best.cache, max_batch,
                                         ecfg.max_seq_len, num_pages,
                                         ecfg.page_size)
             kv_tokens = num_pages * ecfg.page_size
-            emit(f"serve_grid[b{max_batch},kv{kv_tokens}]",
-                 s.wall_s / max(s.steps, 1) * 1e6,
-                 f"decode_tok_s={s.decode_tok_s:.1f};"
-                 f"occupancy={s.mean_occupancy:.3f};"
-                 f"decode_tokens={s.decode_tokens};"
-                 f"recompute_tokens={s.recompute_tokens};"
-                 f"evictions={s.evictions};"
-                 f"kv_capacity_tokens={kv_tokens}",
-                 precision=s.precision, cost=cost)
+            emit_cell(f"serve_grid[b{max_batch},kv{kv_tokens}]",
+                      best.stats, kv_tokens, cost)
+
+    # ---- long-context column (DESIGN.md §16): fused vs gather at kv>=1024
+    # ~1016-token prompts + 24 decoded tokens = ~1040 valid KV tokens per
+    # sequence against a 2048-token table: the gather oracle materializes
+    # ceil(2048/8) = 256 pages per sequence per layer per step regardless
+    # of occupancy, while the fused flash-decode path touches only the
+    # ~130 live ones — this is the divergence cell the kernel exists for.
+    max_batch, page_size, max_seq_len = 2, 8, 2048
+    prompt_len, new_tokens = 1016, 24
+    num_pages = max_batch * (-(-(prompt_len + new_tokens) // page_size)) + 12
+    kv_tokens = num_pages * page_size
+    ecfg = serve_loop.EngineConfig(
+        max_batch=max_batch, page_size=page_size, num_pages=num_pages,
+        max_seq_len=max_seq_len, prefill_chunk=128)
+    lprompts = [rng.integers(0, cfg.vocab_size, size=prompt_len).tolist()
+                for _ in range(max_batch)]
+    paths = {
+        "gather": dataclasses.replace(cfg, sparsity=dataclasses.replace(
+            cfg.sparsity, fused_attention=False)),
+        "fused": dataclasses.replace(cfg, sparsity=dataclasses.replace(
+            cfg.sparsity, fused_attention=True)),
+    }
+    best: dict = dict.fromkeys(paths)
+    streams: dict = {}
+    for _rep in range(3):
+        # interleave the two paths inside each rep so host-load drift
+        # cannot masquerade as a path difference
+        for path, run_cfg in paths.items():
+            eng, toks = run_once(run_cfg, ecfg, lprompts, new_tokens)
+            streams[path] = toks
+            if best[path] is None or \
+                    eng.stats.decode_tok_s > best[path].stats.decode_tok_s:
+                best[path] = eng
+    assert streams["fused"] == streams["gather"], (
+        "fused flash-decode diverged from the gather oracle on the "
+        "long-context serve workload")
+    # one shared valid-token floor for both rows: with equal cost,
+    # efficiency ranks exactly by measured step time, so the efficiency
+    # criterion below is the same ordering --diff gates via decode_tok_s
+    cost = rl.serve_decode_cost(params, best["fused"].cache, max_batch,
+                                max_seq_len, num_pages, page_size)
+    gather_by = rl.serve_gather_overhead(best["gather"].cache, max_batch,
+                                         max_seq_len, num_pages,
+                                         page_size).bytes
+    for path in ("gather", "fused"):
+        emit_cell(f"serve_grid[b{max_batch},kv{kv_tokens},{path}]",
+                  best[path].stats, kv_tokens, cost,
+                  extra=f";gather_bytes_per_step="
+                        f"{gather_by if path == 'gather' else 0:.3e}")
+    g, f = best["gather"].stats, best["fused"].stats
+    speedup = f.decode_tok_s / max(g.decode_tok_s, 1e-9)
+    eff_g = rl.roofline_us(cost) / (g.wall_s / max(g.steps, 1) * 1e6)
+    eff_f = rl.roofline_us(cost) / (f.wall_s / max(f.steps, 1) * 1e6)
+    assert speedup >= 1.2, (
+        f"fused long-context decode speedup {speedup:.2f}x < 1.2x "
+        f"(fused {f.decode_tok_s:.1f} vs gather {g.decode_tok_s:.1f} tok/s)")
+    assert eff_f > eff_g, (
+        f"fused roofline efficiency {eff_f:.4f} does not improve on "
+        f"gather {eff_g:.4f} at the long-context cell")
 
 
 def bench_serve_spec():
@@ -1005,9 +1092,13 @@ def main(argv=None) -> int:
     if args.diff is None:
         return 0
     if baseline is None:
-        print("# no committed baseline to diff against (first run)",
-              file=sys.stderr)
-        return 0
+        # fail FAST, not open: a --diff invocation that silently passes
+        # because no BENCH_*.json is committed is a perf gate that never
+        # gated anything (a deleted/renamed baseline would turn CI green)
+        print("# --diff requested but no committed BENCH_*.json baseline "
+              "exists; commit one (PYTHONPATH=src python -m benchmarks.run) "
+              "or drop --diff", file=sys.stderr)
+        return 2
     return 1 if run_diff(payload, baseline) else 0
 
 

@@ -48,7 +48,12 @@ def engine_demo(args, base, params):
     a prompt-lookup draft source proposes up to K tokens per sequence and
     one fixed-shape [B, K+1] verify step scores them all; the longest
     agreeing prefix is accepted, so the streams remain argmax-identical
-    to the K=0 run — the same dense-reference parity check applies."""
+    to the K=0 run — the same dense-reference parity check applies.
+
+    ``--fused-attention`` routes every paged KV step (prefill chunks,
+    decode, speculative verify) through the fused flash-decode kernel
+    (DESIGN.md §16) instead of the gather-then-SDPA oracle; streams are
+    argmax-identical by contract, so the same parity check gates it."""
     z, l = args.pattern
     if args.shared_prefix >= args.prompt_len:
         raise SystemExit(f"--shared-prefix {args.shared_prefix} must be < "
@@ -56,7 +61,8 @@ def engine_demo(args, base, params):
                          "needs at least one unique suffix token)")
     cfg = dataclasses.replace(base, sparsity=SparsityConfig(
         pattern=(z, l), mode="compressed", use_pallas=False,
-        fuse_epilogue=args.fuse_epilogue))
+        fuse_epilogue=args.fuse_epilogue,
+        fused_attention=args.fused_attention))
     packed = serve_loop.pack_params(params, cfg)
 
     rng = np.random.default_rng(0)
@@ -70,7 +76,8 @@ def engine_demo(args, base, params):
 
     print(f"=== SlideSparse {z}:{l} continuous-batching engine "
           f"({args.requests} staggered requests, tp={args.tp}, "
-          f"policy={args.policy}, prefix_cache={args.prefix_cache}) ===")
+          f"policy={args.policy}, prefix_cache={args.prefix_cache}, "
+          f"attention={'fused' if args.fused_attention else 'gather'}) ===")
     plan = None
     if args.inject_faults is not None:
         plan = fl.FaultPlan(seed=args.inject_faults, alloc_fail_rate=0.08,
@@ -221,6 +228,13 @@ def main():
     ap.add_argument("--draft", default="ngram",
                     help="engine mode: draft source for --speculate "
                          "(registered: ngram, random)")
+    ap.add_argument("--fused-attention", action="store_true",
+                    help="engine mode: serve the paged KV steps through "
+                         "the fused flash-decode kernel (kernels."
+                         "paged_attention, DESIGN.md §16) instead of the "
+                         "gather-then-SDPA oracle; streams stay argmax-"
+                         "identical, so the demo's dense-reference parity "
+                         "check gates the kernel end to end")
     ap.add_argument("--async", dest="async_loop", action="store_true",
                     help="engine mode: overlapped host/device loop "
                          "(DESIGN.md §15) — on-device sampling, device-"

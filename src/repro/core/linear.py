@@ -51,6 +51,11 @@ class SparsityConfig:
     # one-shot tile-size autotuning per (op, shape) via kernels.autotune
     # (DESIGN.md §2.4); tuned tiles are cached in-process and on disk
     tune: bool = False
+    # serve the paged KV steps through the fused flash-decode kernel
+    # (kernels.paged_attention, DESIGN.md §16) instead of the
+    # gather-then-SDPA oracle; argmax parity between the two is locked by
+    # tests/test_paged_attention.py
+    fused_attention: bool = False
 
     def __post_init__(self):
         # normalize once so every reader sees a PrecisionRecipe; the frozen

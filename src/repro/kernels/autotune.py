@@ -268,6 +268,12 @@ def candidates(op: str, rows: int, m: int, k: int) -> list[TileConfig]:
     if op == "fused_quant_slide":
         return [TileConfig(block_rows=b) for b in (32, 64, 128, 256)
                 if b <= max(8, rows)] or [DEFAULT]
+    if op == "paged_attention":
+        # br = Pallas S-splits, bk = jnp-path pages per loop block
+        # (kernels.paged_attention); both dispatch paths read their knob
+        # from the same cache entry
+        return [DEFAULT] + [TileConfig(br=s, bk=bp)
+                            for s in (1, 2, 4) for bp in (1, 4, 8)]
     row_opts = [b for b in (64, 128, 256) if b <= max(64, rows)]
     out_opts = [b for b in (128, 256) if b <= max(128, m)]
     cands = [DEFAULT]

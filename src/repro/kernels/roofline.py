@@ -140,12 +140,44 @@ def compressed_matmul(rows: int, k: int, m: int, n_fam: int,
                 2.0 * rows * k * m + 8.0 * m * kc)
 
 
+def pool_gather(batch: int, table_tokens: int, kv_heads: int, head_dim: int,
+                kv_itemsize: float = 4.0, scales: bool = False,
+                out_itemsize: float = 4.0) -> Cost:
+    """The rearrange tax of ``models.attention._pool_gather``: read K+V
+    for EVERY page-table slot at stored width (+ fp32 scale rows when the
+    pool is int8-quantized) and write the dequantized contiguous copy at
+    compute width.  ``table_tokens`` is maxp * page_size — pool capacity
+    per sequence, NOT valid tokens — which is exactly why the fused
+    flash-decode kernel (DESIGN.md §16) deletes this term.  Locked to the
+    instrumented gather counter in tests/test_roofline.py."""
+    elems = batch * table_tokens * kv_heads * head_dim
+    by = 2.0 * elems * (kv_itemsize + out_itemsize)
+    fl = 0.0
+    if scales:
+        by += 2.0 * batch * table_tokens * kv_heads * 4.0
+        fl = 2.0 * elems  # dequant multiply + cast per element
+    return Cost(by, fl)
+
+
 def paged_attention_decode(batch: int, kv_len: int, kv_heads: int,
                            head_dim: int, q_heads: int | None = None,
-                           kv_itemsize: float = 4.0) -> Cost:
+                           kv_itemsize: float = 4.0,
+                           gather_tokens: int | None = None,
+                           gather_scales: bool = False) -> Cost:
     """One decode step of paged attention: the K/V pages of every active
-    sequence stream from HBM once; q/logits traffic is negligible."""
+    sequence stream from HBM once; q/logits traffic is negligible.
+
+    With ``gather_tokens`` (the per-sequence table capacity maxp * page_
+    size) this prices the UNFUSED gather path instead: materialize the
+    gathered copy (``pool_gather``), then SDPA over every table slot —
+    valid or not — at fp32.  The fused kernel's whole advantage is the
+    gap between the two calls (DESIGN.md §16)."""
     q_heads = q_heads or kv_heads
+    if gather_tokens is not None:
+        return (pool_gather(batch, gather_tokens, kv_heads, head_dim,
+                            kv_itemsize, gather_scales)
+                + paged_attention_decode(batch, gather_tokens, kv_heads,
+                                         head_dim, q_heads, 4.0))
     kv_bytes = 2.0 * batch * kv_len * kv_heads * head_dim * kv_itemsize
     return Cost(kv_bytes + batch * q_heads * head_dim * 4.0 * 2.0,
                 4.0 * batch * q_heads * kv_len * head_dim)
@@ -154,15 +186,23 @@ def paged_attention_decode(batch: int, kv_len: int, kv_heads: int,
 def paged_attention_verify(batch: int, kv_len: int, lanes: int,
                            kv_heads: int, head_dim: int,
                            q_heads: int | None = None,
-                           kv_itemsize: float = 4.0) -> Cost:
+                           kv_itemsize: float = 4.0,
+                           gather_tokens: int | None = None,
+                           gather_scales: bool = False) -> Cost:
     """One speculative verify step (DESIGN.md §14): identical K/V page
     streaming to a decode step — the pages are read once regardless of
     how many query lanes score against them, which is exactly why
     verifying K drafts is nearly free on the memory side — plus
     ``lanes = K+1`` query rows' worth of q/out traffic and attention
     FLOPs.  At lanes == 1 this degenerates to ``paged_attention_decode``.
-    """
+    ``gather_tokens`` prices the unfused gather path exactly as in
+    ``paged_attention_decode``."""
     q_heads = q_heads or kv_heads
+    if gather_tokens is not None:
+        return (pool_gather(batch, gather_tokens, kv_heads, head_dim,
+                            kv_itemsize, gather_scales)
+                + paged_attention_verify(batch, gather_tokens, lanes,
+                                         kv_heads, head_dim, q_heads, 4.0))
     kv_bytes = 2.0 * batch * kv_len * kv_heads * head_dim * kv_itemsize
     return Cost(kv_bytes + lanes * batch * q_heads * head_dim * 4.0 * 2.0,
                 lanes * 4.0 * batch * q_heads * kv_len * head_dim)
@@ -281,6 +321,17 @@ def op_cost(op: str, rows: int, m: int, k: int, **params) -> Cost | None:
         gk = lifted_k(k, n)
         return Cost(rows * k * 4.0 + m * gk * itemsize(wdt) + m * 4.0
                     + rows * m * 4.0, 2.0 * rows * gk * m + 4.0 * rows * k)
+    if op == "paged_attention":
+        # key convention (kernels.paged_attention): rows = batch * lanes,
+        # m = kv_heads * head_dim, k = table-capacity tokens.  The bound
+        # is priced at capacity — the static shape the cache key carries —
+        # so it upper-bounds the fused kernel's valid-token traffic.
+        kvh, hd = params.get("kvh"), params.get("hd")
+        lanes = int(params.get("lanes") or 1)
+        if kvh and hd:
+            return paged_attention_verify(
+                max(1, rows // lanes), k, lanes, int(kvh), int(hd),
+                int(params.get("qh") or kvh), itemsize(adt))
     return None
 
 
@@ -310,4 +361,16 @@ def tile_traffic(op: str, rows: int, m: int, k: int,
         gk = lifted_k(k, n)
         return (rows * k * 4.0
                 + m * gk * itemsize(wdt) * math.ceil(rows / br) + out)
+    if op == "paged_attention" and br:
+        # grid (B, KVH, splits, pages): K/V pages stream once regardless
+        # of the split count (br = S-splits); each extra split writes +
+        # re-reads one more unnormalized (acc, m, l) partial per cell
+        kvh, hd = params.get("kvh"), params.get("hd")
+        lanes = int(params.get("lanes") or 1)
+        qh = int(params.get("qh") or kvh or 0)
+        if kvh and hd:
+            batch = max(1, rows // lanes)
+            kv = 2.0 * batch * k * int(kvh) * int(hd) * itemsize(adt)
+            partials = 2.0 * br * batch * qh * lanes * (int(hd) + 2) * 4.0
+            return kv + partials + batch * qh * lanes * int(hd) * 4.0 * 2.0
     return None

@@ -359,6 +359,22 @@ def pool_copy_pages(pool, src_ids, dst_ids):
             for name, leaf in pool.items()}
 
 
+# trace-time gather instrumentation: bytes the oracle's rearrange step
+# materializes per call (read every table slot's K/V page at stored width
+# + scale rows, write the dequantized contiguous copy).  Locks the
+# `kernels.roofline.pool_gather` model to reality in tests/test_roofline.py
+# — the fused kernel (DESIGN.md §16) exists to delete exactly this bill.
+_GATHER_BYTES = [0.0]
+
+
+def reset_gather_bytes() -> None:
+    _GATHER_BYTES[0] = 0.0
+
+
+def gather_bytes() -> float:
+    return _GATHER_BYTES[0]
+
+
 def _pool_gather(pool, page_table, dtype):
     """page_table [B, maxp] -> contiguous logical K/V [B, maxp*P, KVH, hd].
 
@@ -376,7 +392,42 @@ def _pool_gather(pool, page_table, dtype):
     if pool["k"].dtype == jnp.int8:
         k = _dequant_kv(k, g(pool["k_scale"]), dtype)
         v = _dequant_kv(v, g(pool["v_scale"]), dtype)
+    tokens = b * maxp * pool["k"].shape[1]
+    kvh, hd = pool["k"].shape[2], pool["k"].shape[3]
+    by = 2.0 * tokens * kvh * hd * (pool["k"].dtype.itemsize
+                                    + jnp.dtype(dtype).itemsize)
+    if pool["k"].dtype == jnp.int8:
+        by += 2.0 * tokens * kvh * 4.0              # fp32 scale rows
+    _GATHER_BYTES[0] += by
     return k.astype(dtype), v.astype(dtype)
+
+
+def pool_attend(spec: AttnSpec, q, pool, page_table, kv_len,
+                sp_cfg: SparsityConfig, *, chunk_start=None):
+    """THE paged-attention entry point — every paged step (prefill chunk,
+    decode, verify) attends through here, so the gather oracle and the
+    fused flash-decode kernel stay one dispatch apart (DESIGN.md §16).
+
+    q: [B, L, H, hd] post-RoPE queries; kv_len: [B] row-0 logical KV
+    lengths (the ``_decode_sdpa`` convention — callers pass pre-write
+    length + 1; query row i sees ``kv_len + i`` positions).
+    ``chunk_start`` marks the prefill-chunk call site, whose oracle is
+    the two-level chunked scan at ``q_offset=chunk_start``; for the
+    fused kernel the same geometry is just lanes = C with row-0 length
+    ``chunk_start + 1``, so one kernel covers all three step shapes.
+    """
+    if sp_cfg.fused_attention and spec.causal:
+        from repro.kernels import paged_attention as _pa
+        return _pa.paged_attention(
+            q, pool, page_table, kv_len,
+            sliding_window=spec.sliding_window,
+            use_pallas=sp_cfg.use_pallas, tune=sp_cfg.tune)
+    kd, vd = _pool_gather(pool, page_table, q.dtype)
+    if chunk_start is not None:
+        return _chunked_sdpa(spec, q, kd, vd, q_offset=chunk_start)
+    if q.shape[1] == 1:
+        return _decode_sdpa(spec, q, kd, vd, kv_len)
+    return _verify_sdpa(spec, q, kd, vd, kv_len)
 
 
 def paged_prefill_chunk(params, spec: AttnSpec, x, positions,
@@ -404,8 +455,9 @@ def paged_prefill_chunk(params, spec: AttnSpec, x, positions,
     pool = _pool_scatter(pool, page_ids, abs_pos % page_size,
                          k_new[0], v_new[0])
 
-    kd, vd = _pool_gather(pool, page_table, x.dtype)
-    out = _chunked_sdpa(spec, q, kd, vd, q_offset=start)
+    kv_len0 = jnp.broadcast_to(start + 1, (b,)).astype(jnp.int32)
+    out = pool_attend(spec, q, pool, page_table, kv_len0, sp_cfg,
+                      chunk_start=start)
     out = out.reshape(b, c, spec.q_dim)
     return sl.apply(params["wo"], out, sp_cfg, reduce_out=True), pool
 
@@ -433,8 +485,7 @@ def paged_decode_step(params, spec: AttnSpec, x, sp_cfg: SparsityConfig,
     pool = _pool_scatter(pool, page_ids, kv_len % page_size,
                          k_new[:, 0], v_new[:, 0])
 
-    kd, vd = _pool_gather(pool, page_table, x.dtype)
-    out = _decode_sdpa(spec, q, kd, vd, kv_len + 1)
+    out = pool_attend(spec, q, pool, page_table, kv_len + 1, sp_cfg)
     out = out.reshape(b, 1, spec.q_dim)
     return sl.apply(params["wo"], out, sp_cfg, reduce_out=True), pool
 
@@ -481,8 +532,7 @@ def paged_verify_step(params, spec: AttnSpec, x, sp_cfg: SparsityConfig,
                          k_new.reshape((b * c,) + k_new.shape[2:]),
                          v_new.reshape((b * c,) + v_new.shape[2:]))
 
-    kd, vd = _pool_gather(pool, page_table, x.dtype)
-    out = _verify_sdpa(spec, q, kd, vd, kv_len + 1)
+    out = pool_attend(spec, q, pool, page_table, kv_len + 1, sp_cfg)
     out = out.reshape(b, c, spec.q_dim)
     return sl.apply(params["wo"], out, sp_cfg, reduce_out=True), pool
 

@@ -324,6 +324,10 @@ def prefill(params, cfg: ModelConfig, tokens, max_len: int | None = None,
 
 
 # ------------------------------------------------------- paged inference
+# All three paged step shapes (prefill chunk, decode, verify) attend
+# through attention.pool_attend, which dispatches between the KV-gather
+# oracle and the fused flash-decode kernel on cfg.sparsity.fused_attention
+# (DESIGN.md §16) — nothing in this module branches on the choice.
 def make_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
                      max_batch: int):
     """Stacked [U, ...] paged cache: attention layers hold a physical page

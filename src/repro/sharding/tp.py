@@ -39,6 +39,14 @@ The column→row pairing keeps each block's interior collective-free; the
 single psum per mixer/FFN happens *after* the fused epilogue
 (dequant + bias + activation) via ``linear.apply(..., reduce_out=True)``,
 so the row-parallel reduction runs on the fused output (DESIGN.md §9).
+
+The paged KV pool shards on its KV-head axis (``serve_cache_specs``), so
+the fused paged-attention kernel (DESIGN.md §16) composes for free: each
+shard runs ``kernels.paged_attention`` over its own KV-head slice of the
+pool with the replicated page table, exactly like the gather oracle, and
+the per-shard attention outputs feed the row-parallel ``wo`` whose psum
+is already the block's one collective — fused vs gather adds no
+communication either way.
 """
 from __future__ import annotations
 

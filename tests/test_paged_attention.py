@@ -1,0 +1,408 @@
+"""Fused Pallas paged attention (DESIGN.md §16): kernel + engine parity.
+
+Three layers of coverage:
+
+* kernel-level: both dispatch paths (jnp flash mirror, Pallas in
+  interpret mode) against an independent float64 numpy oracle on
+  randomized page tables — scattered physical pages, partial tail pages,
+  garbage in every unallocated page, int8 KV pages dequantized from
+  their scale pages, sliding windows that fully mask early page blocks,
+  lanes in {1, K+1} — plus exact invariance to unallocated-page garbage
+  and the OOB-page-id dropped-write convention the tables rely on;
+* engine-level: ``fused_attention=True`` streams must be identical to
+  the gather-oracle streams through ServeEngine for every serving
+  feature the oracle already covers (precision recipes, speculative
+  decode, radix prefix cache, eviction/recompute, int8 KV pools), with
+  the compile-once discipline intact;
+* tensor-parallel: tp=2 fused == tp=1 gather in a 4-forced-host-device
+  subprocess (the KVH-sharded pool composes with the kernel per shard).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.core.linear import SparsityConfig
+from repro.kernels import autotune
+from repro.kernels import paged_attention as PA
+from repro.models import attention as A
+from repro.models import model as M
+from repro.runtime import serve_loop
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------- kernel level
+def _make_case(rng, *, b=3, lanes=1, page_size=4, maxp=6, num_pages=23,
+               kv_dtype="float32", kvh=2, h=4, hd=8):
+    """Randomized paged-KV case: every pool page starts as garbage, each
+    sequence's live prefix is a scattered draw of distinct physical pages
+    (page 0 never allocated — it is the pad page unallocated table
+    entries point at), kv_len hits partial tail pages."""
+    assert num_pages > b * maxp  # distinct pages + the never-allocated pad
+    q = jnp.asarray(rng.normal(size=(b, lanes, h, hd)), jnp.float32)
+    shape = (num_pages, page_size, kvh, hd)
+    if kv_dtype == "int8":
+        pool = {
+            "k": jnp.asarray(rng.integers(-127, 128, size=shape), jnp.int8),
+            "v": jnp.asarray(rng.integers(-127, 128, size=shape), jnp.int8),
+            "k_scale": jnp.asarray(
+                rng.uniform(0.005, 0.03, size=shape[:3] + (1,)), jnp.float32),
+            "v_scale": jnp.asarray(
+                rng.uniform(0.005, 0.03, size=shape[:3] + (1,)), jnp.float32),
+        }
+    else:
+        pool = {"k": jnp.asarray(rng.normal(size=shape), jnp.float32),
+                "v": jnp.asarray(rng.normal(size=shape), jnp.float32)}
+    # row-0 lengths: off page boundaries on purpose (partial tail pages)
+    kv_len = rng.integers(1, maxp * page_size - lanes + 1, size=b)
+    pt = np.zeros((b, maxp), np.int32)
+    perm = rng.permutation(np.arange(1, num_pages))
+    used = 0
+    for i in range(b):
+        need = -(-(int(kv_len[i]) + lanes - 1) // page_size)
+        pt[i, :need] = perm[used:used + need]
+        used += need
+    return q, pool, jnp.asarray(pt), jnp.asarray(kv_len, jnp.int32)
+
+
+def _np_oracle(q, pool, page_table, kv_len, window):
+    """Independent float64 reference: gather per sequence, plain softmax
+    per (lane, head) row over its visible positions."""
+    q = np.asarray(q, np.float64)
+    k = np.asarray(pool["k"], np.float64)
+    v = np.asarray(pool["v"], np.float64)
+    if pool["k"].dtype == jnp.int8:
+        k = k * np.asarray(pool["k_scale"], np.float64)
+        v = v * np.asarray(pool["v_scale"], np.float64)
+    pt = np.asarray(page_table)
+    b, lanes, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    out = np.zeros_like(q)
+    for bi in range(b):
+        kk = k[pt[bi]].reshape(-1, kvh, hd)
+        vv = v[pt[bi]].reshape(-1, kvh, hd)
+        for li in range(lanes):
+            rl = int(kv_len[bi]) + li
+            lo = 0 if window is None else max(0, rl - window)
+            for hi in range(h):
+                g = hi // rep
+                s = (kk[lo:rl, g] @ q[bi, li, hi]) * hd ** -0.5
+                p = np.exp(s - s.max())
+                out[bi, li, hi] = (p / p.sum()) @ vv[lo:rl, g]
+    return out
+
+
+@pytest.mark.parametrize("kv_dtype", ["float32", "int8"])
+@pytest.mark.parametrize("lanes,window", [(1, None), (1, 5), (4, None),
+                                          (4, 7)])
+def test_fused_matches_numpy_oracle(kv_dtype, lanes, window):
+    """Both dispatch paths vs the independent float64 oracle, randomized
+    scattered tables, garbage pad pages, partial tails, int8 scale-page
+    dequant; window=5 at kv_len up to 23 fully masks early page blocks
+    (the exp(NEG_INF - NEG_INF) guard's reachable case)."""
+    rng = np.random.default_rng(hash((kv_dtype, lanes, window)) % 2 ** 31)
+    q, pool, pt, kv_len = _make_case(rng, lanes=lanes, kv_dtype=kv_dtype)
+    want = _np_oracle(q, pool, pt, kv_len, window)
+    got_jnp = PA.paged_attention(q, pool, pt, kv_len, sliding_window=window,
+                                 use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got_jnp, np.float64), want,
+                               atol=5e-5, rtol=1e-4)
+    got_pl = PA.paged_attention(q, pool, pt, kv_len, sliding_window=window,
+                                use_pallas=True, interpret=True, splits=3)
+    np.testing.assert_allclose(np.asarray(got_pl, np.float64), want,
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_fused_matches_gather_oracle_under_jit():
+    """Same numbers as the in-tree gather + verify-SDPA oracle when both
+    run inside jit (the engine's calling convention), lanes = K+1."""
+    spec = A.AttnSpec(d_model=32, num_heads=4, num_kv_heads=2, head_dim=8)
+    rng = np.random.default_rng(11)
+    q, pool, pt, kv_len = _make_case(rng, lanes=3)
+
+    @jax.jit
+    def fused(q, pool, pt, kv_len):
+        return PA.paged_attention(q, pool, pt, kv_len, use_pallas=False)
+
+    @jax.jit
+    def oracle(q, pool, pt, kv_len):
+        kd, vd = A._pool_gather(pool, pt, q.dtype)
+        return A._verify_sdpa(spec, q, kd, vd, kv_len)
+
+    np.testing.assert_allclose(np.asarray(fused(q, pool, pt, kv_len)),
+                               np.asarray(oracle(q, pool, pt, kv_len)),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_unallocated_page_garbage_cannot_leak():
+    """Bit-exact invariance to unallocated-page contents: the kv_len mask
+    plus the masked-softmax zero guard make garbage contribute exactly
+    0.0 on both paths, not just approximately."""
+    rng = np.random.default_rng(5)
+    q, pool, pt, kv_len = _make_case(rng, lanes=4)
+    live = np.unique(np.asarray(pt))
+    garbage = np.asarray(rng.normal(size=pool["k"].shape) * 1e3, np.float32)
+    mask = np.ones(pool["k"].shape[0], bool)
+    mask[live] = False  # only unallocated pages (incl. pad page 0) change
+    repooled = dict(pool)
+    for leaf in ("k", "v"):
+        repooled[leaf] = jnp.asarray(
+            np.where(mask[:, None, None, None], garbage,
+                     np.asarray(pool[leaf])))
+    for kw in (dict(use_pallas=False),
+               dict(use_pallas=True, interpret=True, splits=2)):
+        a = PA.paged_attention(q, pool, pt, kv_len, **kw)
+        bb = PA.paged_attention(q, repooled, pt, kv_len, **kw)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_oob_page_id_writes_are_dropped():
+    """The page_id == num_pages convention: pad tokens and inactive slots
+    scatter out of bounds and the write must vanish, for value AND scale
+    leaves — the fused kernel trusts the pool only because of this."""
+    rng = np.random.default_rng(6)
+    for kv_dtype in ("float32", "int8"):
+        _, pool, _, _ = _make_case(rng, kv_dtype=kv_dtype)
+        num_pages, _, kvh, hd = pool["k"].shape
+        k_new = jnp.asarray(rng.normal(size=(3, kvh, hd)), jnp.float32)
+        v_new = jnp.asarray(rng.normal(size=(3, kvh, hd)), jnp.float32)
+        ids = jnp.asarray([num_pages, 2, num_pages], jnp.int32)  # 1 lands
+        out = A._pool_scatter(pool, ids, jnp.asarray([0, 1, 2], jnp.int32),
+                              k_new, v_new)
+        for name, leaf in out.items():
+            before, after = np.asarray(pool[name]), np.asarray(leaf)
+            assert not np.array_equal(before[2], after[2]), name  # landed
+            np.testing.assert_array_equal(  # everything else untouched
+                np.delete(before, 2, axis=0), np.delete(after, 2, axis=0))
+
+
+def test_split_and_block_tiling_invariance():
+    """The (max, sum) split merge and the jnp block width are pure
+    tilings: any splits / block_pages choice gives the same answer (what
+    lets the autotuner pick freely)."""
+    rng = np.random.default_rng(8)
+    q, pool, pt, kv_len = _make_case(rng, lanes=2, kv_dtype="int8")
+    base = np.asarray(PA.paged_attention(q, pool, pt, kv_len,
+                                         use_pallas=False, block_pages=1))
+    for bp in (2, 3, 6):
+        np.testing.assert_allclose(
+            np.asarray(PA.paged_attention(q, pool, pt, kv_len,
+                                          use_pallas=False, block_pages=bp)),
+            base, atol=2e-6, rtol=2e-6)
+    for s in (1, 2, 4, 6):
+        np.testing.assert_allclose(
+            np.asarray(PA.paged_attention(q, pool, pt, kv_len,
+                                          use_pallas=True, interpret=True,
+                                          splits=s)),
+            base, atol=2e-6, rtol=2e-6)
+
+
+def test_autotune_cache_keyed_by_kv_dtype(monkeypatch):
+    """tune=True records a 'paged_attention' winner keyed by the KV pool
+    dtype (adt=) and the step geometry — an int8-tuned winner must never
+    be reused for fp32 pools (DESIGN.md §2.4 discipline)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", "")  # no disk persistence
+    rng = np.random.default_rng(9)
+    autotune.clear()
+    try:
+        keys = {}
+        for kv_dtype in ("float32", "int8"):
+            q, pool, pt, kv_len = _make_case(rng, kv_dtype=kv_dtype)
+            got = PA.paged_attention(q, pool, pt, kv_len, use_pallas=False,
+                                     tune=True)
+            np.testing.assert_allclose(
+                np.asarray(got),
+                _np_oracle(q, pool, pt, kv_len, None), atol=5e-5, rtol=1e-4)
+            b, lanes, h, hd = q.shape
+            key = autotune.make_key(
+                "paged_attention", rows=autotune.rows_bucket(b * lanes),
+                m=pool["k"].shape[2] * hd,
+                k=pt.shape[1] * pool["k"].shape[1],
+                adt=str(pool["k"].dtype), lanes=lanes,
+                kvh=pool["k"].shape[2], hd=hd, qh=h, window=0,
+                interpret=False)
+            assert autotune.lookup(key) is not None, key
+            keys[kv_dtype] = key
+        assert keys["float32"] != keys["int8"]
+    finally:
+        autotune.clear()
+
+
+def test_rejects_ragged_gqa():
+    rng = np.random.default_rng(10)
+    q, pool, pt, kv_len = _make_case(rng, h=4, kvh=2)
+    with pytest.raises(ValueError, match="not a multiple"):
+        PA.paged_attention(q[:, :, :3], pool, pt, kv_len)
+
+
+# ---------------------------------------------------------- engine level
+def _fused_vs_gather(cfg, params, prompts, max_new, ecfg):
+    """Run the SAME engine workload through both attention paths and
+    assert identical streams; returns {fused: engine} for extra asserts."""
+    outs, engines = {}, {}
+    for fused in (False, True):
+        rcfg = dataclasses.replace(cfg, sparsity=dataclasses.replace(
+            cfg.sparsity, fused_attention=fused))
+        eng = serve_loop.ServeEngine(params, rcfg, ecfg)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new, rid=i, arrival=i)
+        out = eng.run()
+        eng.kv.check()
+        if not ecfg.prefix_cache:  # prefix cache retains pages by design
+            assert eng.kv.pool.num_free == ecfg.num_pages, "pages leaked"
+        outs[fused] = {i: c.tokens for i, c in out.items()}
+        engines[fused] = eng
+    assert outs[True] == outs[False], \
+        "fused flash-decode diverged from the gather oracle"
+    return engines
+
+
+def _shrunk():
+    base = registry.smoke_config("h2o-danube-3-4b")
+    return dataclasses.replace(base, d_model=48, num_heads=4, num_kv_heads=2,
+                               head_dim=12, d_ff=96, num_layers=2)
+
+
+def _prompts(rng, cfg, n=3, lo=8, hi=15):
+    return [rng.integers(0, cfg.vocab_size,
+                         size=int(rng.integers(lo, hi))).tolist()
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("recipe", ["none", "int8", "fp8", "w4"])
+def test_engine_fused_parity_per_recipe(recipe):
+    """ISSUE 10 acceptance: fused == gather streams per precision recipe
+    through the compressed serving pipeline (chunked prefill + batched
+    decode + sliding-window layers all ride pool_attend)."""
+    base = _shrunk()
+    cfg = dataclasses.replace(base, sparsity=SparsityConfig(
+        pattern=(4, 6), mode="compressed", use_pallas=False,
+        recipe=None if recipe == "none" else recipe))
+    params = serve_loop.pack_params(M.init(base, jax.random.PRNGKey(0)), cfg)
+    prompts = _prompts(np.random.default_rng(7), cfg)
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=8)
+    engines = _fused_vs_gather(cfg, params, prompts, 6, ecfg)
+    assert engines[True].stats.decode_steps > 0
+
+
+def test_engine_fused_parity_speculate():
+    """The [B, K+1] verify step through the fused kernel (lanes > 1 with
+    per-row kv_len offsets) keeps speculative streams identical."""
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(np.random.default_rng(7), cfg)
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=8,
+                                   speculate=3)
+    engines = _fused_vs_gather(cfg, params, prompts, 6, ecfg)
+    assert engines[True].stats.verify_steps > 0
+
+
+def test_engine_fused_parity_prefix_cache_and_eviction():
+    """Prefix-cache COW pages and recompute-preemption reshuffle the page
+    tables mid-serve; the fused kernel must follow the table, not any
+    cached layout."""
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    prompts = [shared + rng.integers(0, cfg.vocab_size,
+                                     size=int(rng.integers(3, 7))).tolist()
+               for _ in range(3)]
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=8,
+                                   prefix_cache=True)
+    engines = _fused_vs_gather(cfg, params, prompts, 6, ecfg)
+    assert engines[True].stats.prefix_hit_tokens > 0
+
+    evict_ecfg = serve_loop.EngineConfig(max_batch=3, page_size=4,
+                                         num_pages=7, max_seq_len=24,
+                                         prefill_chunk=8)
+    eprompts = [rng.integers(0, cfg.vocab_size, size=k).tolist()
+                for k in (10, 12, 9)]
+    engines = _fused_vs_gather(cfg, params, eprompts, 8, evict_ecfg)
+    assert engines[True].stats.evictions > 0, "test needs page pressure"
+
+
+def test_engine_fused_parity_int8_kv_pool():
+    """int8 KV pages (KIVI scale rows) through the in-kernel dequant."""
+    cfg = dataclasses.replace(_shrunk(), kv_cache_dtype="int8")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(np.random.default_rng(4), cfg)
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=8)
+    _fused_vs_gather(cfg, params, prompts, 6, ecfg)
+
+
+def test_fused_engine_compiles_once():
+    """The fused path must keep the fixed-shape step contract: warmup
+    compiles each jitted step exactly once (asserted inside warmup) and
+    the serve retraces nothing."""
+    cfg = registry.smoke_config("h2o-danube-3-4b")
+    cfg = dataclasses.replace(cfg, sparsity=dataclasses.replace(
+        cfg.sparsity, fused_attention=True))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=8,
+                                   speculate=3)
+    eng = serve_loop.ServeEngine(params, cfg, ecfg)
+    eng.warmup()  # asserts compile-once for every jitted step internally
+    for i, p in enumerate(_prompts(np.random.default_rng(2), cfg)):
+        eng.submit(p, 6, rid=i, arrival=i)
+    eng.run()
+    assert eng._prefill_fn._cache_size() == 1, "prefill retraced"
+    assert eng._decode_fn._cache_size() == 1, "decode retraced"
+
+
+def test_tp2_fused_matches_tp1_gather():
+    """tp=2 fused == tp=1 gather: the KVH-sharded page pool slices per
+    shard and the kernel composes with no extra collective (DESIGN.md
+    §9 + §16).  Subprocess with 4 forced host devices."""
+    code = """
+    import dataclasses, numpy as np, jax
+    from repro.configs import registry
+    from repro.models import model as M
+    from repro.runtime import serve_loop
+
+    base = registry.smoke_config("h2o-danube-3-4b")
+    base = dataclasses.replace(base, num_layers=2)
+    params = M.init(base, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, base.vocab_size,
+                            size=int(rng.integers(8, 15))).tolist()
+               for _ in range(3)]
+    ecfg = serve_loop.EngineConfig(max_batch=2, page_size=4, num_pages=24,
+                                   max_seq_len=32, prefill_chunk=8)
+
+    def run(cfg, ecfg):
+        eng = serve_loop.ServeEngine(params, cfg, ecfg)
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6, rid=i, arrival=i)
+        return {i: c.tokens for i, c in eng.run().items()}
+
+    fused = dataclasses.replace(base, sparsity=dataclasses.replace(
+        base.sparsity, fused_attention=True))
+    ref = run(base, ecfg)
+    got = run(fused, dataclasses.replace(ecfg, tp=2))
+    assert got == ref, (ref, got)
+    print("tp2 fused parity OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, \
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "tp2 fused parity OK" in out.stdout

@@ -134,6 +134,92 @@ def test_w4_halves_weight_bytes():
     assert d == m * gk * 0.5
 
 
+# ------------------------------------- paged attention: gather vs fused
+@pytest.mark.parametrize("kv_dtype", ["float32", "int8"])
+def test_pool_gather_model_matches_instrumented_counter(kv_dtype):
+    """ISSUE 10 satellite: the ``pool_gather`` byte model equals what the
+    oracle's rearrange actually materializes, via the trace-time counter
+    in models.attention — read K+V for every table slot at stored width
+    (+ fp32 scale rows for int8 pools), write the dequantized fp32 copy.
+    This is the term the fused flash-decode kernel deletes."""
+    from repro.models import attention as A
+
+    b, maxp, P, kvh, hd, num_pages = 3, 5, 4, 2, 8, 17
+    rng = np.random.default_rng(0)
+    shape = (num_pages, P, kvh, hd)
+    if kv_dtype == "int8":
+        pool = {
+            "k": jnp.asarray(rng.integers(-127, 128, size=shape), jnp.int8),
+            "v": jnp.asarray(rng.integers(-127, 128, size=shape), jnp.int8),
+            "k_scale": jnp.ones(shape[:3] + (1,), jnp.float32),
+            "v_scale": jnp.ones(shape[:3] + (1,), jnp.float32)}
+    else:
+        pool = {"k": jnp.asarray(rng.normal(size=shape), jnp.float32),
+                "v": jnp.asarray(rng.normal(size=shape), jnp.float32)}
+    pt = jnp.asarray(rng.integers(0, num_pages, size=(b, maxp)), jnp.int32)
+    A.reset_gather_bytes()
+    try:
+        k, v = A._pool_gather(pool, pt, jnp.float32)
+        jax.block_until_ready((k, v))
+        model = rl.pool_gather(b, maxp * P, kvh, hd,
+                               kv_itemsize=pool["k"].dtype.itemsize,
+                               scales=kv_dtype == "int8")
+        assert A.gather_bytes() == model.bytes
+    finally:
+        A.reset_gather_bytes()
+
+
+def test_gather_path_cost_is_rearrange_plus_capacity_attention():
+    """``gather_tokens`` algebra: the unfused decode/verify bound is
+    EXACTLY the rearrange tax plus fused attention at table capacity —
+    and the fused bound at any valid kv_len <= capacity is strictly
+    cheaper, the analytic side of the long-context bench's efficiency
+    criterion (DESIGN.md §16)."""
+    b, cap, kvh, hd, qh, lanes = 2, 2048, 2, 16, 4, 4
+    for scales, isz in ((False, 4.0), (True, 1.0)):
+        tax = rl.pool_gather(b, cap, kvh, hd, isz, scales)
+        unf = rl.paged_attention_decode(b, 512, kvh, hd, qh, isz,
+                                        gather_tokens=cap,
+                                        gather_scales=scales)
+        want = tax + rl.paged_attention_decode(b, cap, kvh, hd, qh, 4.0)
+        assert (unf.bytes, unf.flops) == (want.bytes, want.flops)
+        unfv = rl.paged_attention_verify(b, 512, lanes, kvh, hd, qh, isz,
+                                         gather_tokens=cap,
+                                         gather_scales=scales)
+        wantv = tax + rl.paged_attention_verify(b, cap, lanes, kvh, hd,
+                                                qh, 4.0)
+        assert (unfv.bytes, unfv.flops) == (wantv.bytes, wantv.flops)
+    for kv_len in (64, 512, 2048):  # fused strictly cheaper at every cell
+        fused = rl.paged_attention_decode(b, kv_len, kvh, hd, qh)
+        gath = rl.paged_attention_decode(b, kv_len, kvh, hd, qh,
+                                         gather_tokens=cap)
+        assert fused.bytes < gath.bytes and fused.flops <= gath.flops
+
+
+def test_paged_attention_op_cost_and_tile_traffic():
+    """Autotune pricing for the 'paged_attention' op key: op_cost prices
+    the capacity-shaped verify bound (rows = batch * lanes convention),
+    and tile_traffic streams the K/V pages once regardless of split
+    count while charging each extra S-split its (acc, m, l) partial
+    round trip — more splits model strictly more traffic, so the pruner
+    can rank them."""
+    params = dict(adt="float32", lanes=4, kvh=2, hd=8, qh=4, window=0)
+    cost = rl.op_cost("paged_attention", rows=8, m=16, k=96, **params)
+    want = rl.paged_attention_verify(2, 96, 4, 2, 8, 4, 4.0)
+    assert (cost.bytes, cost.flops) == (want.bytes, want.flops)
+    t1 = rl.tile_traffic("paged_attention", 8, 16, 96, br=1, bm=None,
+                         **params)
+    t4 = rl.tile_traffic("paged_attention", 8, 16, 96, br=4, bm=None,
+                         **params)
+    kv_stream = 2.0 * 2 * 96 * 2 * 8 * 4.0
+    assert t1 > kv_stream                      # pages once + partials
+    per_split = 2.0 * 2 * 4 * 4 * (8 + 2) * 4.0
+    assert t4 - t1 == 3 * per_split
+    assert rl.op_cost("paged_attention", rows=8, m=16, k=96) is None
+    assert rl.tile_traffic("paged_attention", 8, 16, 96, br=None, bm=None,
+                           **params) is None
+
+
 def test_roofline_us_takes_binding_term():
     p = rl.Peaks(bw_gbps=10.0, gflops=100.0)
     assert rl.roofline_us(rl.Cost(bytes=1e9, flops=0.0), p) == 1e5
@@ -333,22 +419,34 @@ def test_serve_grid_and_spec_row_schema_is_diff_gateable():
     src_spec = inspect.getsource(bench.bench_serve_spec)
     # row-name templates (renaming a row orphans its committed baseline)
     assert 'f"serve_grid[b{max_batch},kv{kv_tokens}]"' in src_grid
+    # long-context fused-vs-gather cells (DESIGN.md §16)
+    assert 'f"serve_grid[b{max_batch},kv{kv_tokens},{path}]"' in src_grid
     assert '"serve_spec[off,b4]"' in src_spec
     assert 'f"serve_spec[on,K{speculate},b4]"' in src_spec
-    # every row leads its derived column with the gated throughput key
+    # every row leads its derived column with the gated throughput key —
+    # the count==1 pin forces all grid cells (small AND long-context)
+    # through ONE emitter, so the schema cannot fork between columns
     assert src_grid.count('f"decode_tok_s={s.decode_tok_s:.1f};"') == 1
     for key in ("decode_tok_s=", "acceptance_rate=", "spec_speedup="):
         assert key in src_spec
-    # and rows of exactly that shape gate on throughput, not wall time
+    # and the in-bench acceptance asserts for the long-context cells
+    # must stay in the source (fused >= 1.2x gather, efficiency ordering)
+    assert "speedup >= 1.2" in src_grid
+    assert "eff_f > eff_g" in src_grid
+    # rows of exactly these shapes gate on throughput, not wall time
     mk = lambda tok: _payload(
         [_row("serve_grid[b4,kv64]", 2000.0,
               f"decode_tok_s={tok};occupancy=0.55;decode_tokens=42;"
               "recompute_tokens=0;evictions=2;kv_capacity_tokens=64"),
+         _row("serve_grid[b2,kv2176,fused]", 2500.0,
+              f"decode_tok_s={tok};occupancy=0.74;decode_tokens=46;"
+              "recompute_tokens=0;evictions=0;kv_capacity_tokens=2176;"
+              "gather_bytes_per_step=0.000e+00"),
          _row("serve_spec[on,K4,b4]", 3700.0,
               f"decode_tok_s={tok};decode_tokens=92;verify_steps=11;"
               "draft_tokens=70;accepted_tokens=69;acceptance_rate=0.986;"
               "spec_speedup=1.479")])
     assert bench.diff_payloads(mk(700.0), mk(680.0))[0] == []   # -3%
     fails, _ = bench.diff_payloads(mk(700.0), mk(500.0))        # -29%
-    assert len(fails) == 2
+    assert len(fails) == 3
     assert all("decode_tok_s" in f for f in fails)

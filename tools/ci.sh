@@ -43,7 +43,13 @@
 #    The overlap economics are gated by step 2: the bench_serve filter
 #    picks up bench_serve_async, whose in-bench asserts fail the run on
 #    async/sync stream divergence or < 1.15x decode throughput.
-# 9. API-docs drift check: docs/api.md must match what
+# 9. Fused paged-attention smokes (DESIGN.md §16): the flash-decode
+#    kernel that consumes the page table in-kernel (no KV gather)
+#    through the same demo at tp=1 and tp=2 — the dense-reference
+#    parity check gates the kernel end to end; its >= 1.2x long-context
+#    decode win is gated by step 2 (bench_serve_grid's fused-vs-gather
+#    cells assert it in-bench and --diff gates every committed row).
+# 10. API-docs drift check: docs/api.md must match what
 #    tools/gen_api_docs.py generates from the live docstrings.
 #
 # The pytest run is wrapped in a hard timeout so a wedged scheduler (the
@@ -55,9 +61,12 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # perf gate: rerun the kernel + serving benches and diff against the
 # newest committed baseline json (exit 1 on out-of-tolerance regressions).
 # bench_serve matches bench_serve_grid, bench_serve_spec and
-# bench_serve_async too — the batch x cache-size sweep cells, the
-# speculative-decode rows and the overlapped-loop rows are diff-gated on
-# decode_tok_s like every throughput row.
+# bench_serve_async too — the batch x cache-size sweep cells (including
+# the long-context fused-vs-gather attention cells), the speculative-
+# decode rows and the overlapped-loop rows are diff-gated on decode_tok_s
+# like every throughput row.  --diff FAILS (exit 2) if no BENCH_*.json
+# baseline is committed: a perf gate with nothing to gate against must
+# not pass silently.
 timeout 900 python -m benchmarks.run fused_pipeline bench_serve --diff
 
 timeout 300 python examples/serve_batched.py --engine --requests 3 \
@@ -81,6 +90,16 @@ timeout 300 python -m repro.launch.serve --arch h2o-danube-3-4b --smoke \
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 timeout 300 python examples/serve_batched.py --engine --tp 2 --requests 3 \
     --batch 2 --prompt-len 16 --new-tokens 6
+
+# fused paged-attention smokes (DESIGN.md §16): flash-decode over the
+# page table, no KV gather — streams must stay argmax-identical to the
+# dense reference (the demo asserts it); the tp=2 variant runs the
+# kernel per KV-head shard with no extra collective
+timeout 300 python examples/serve_batched.py --engine --fused-attention \
+    --requests 3 --batch 2 --prompt-len 16 --new-tokens 6
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+timeout 300 python examples/serve_batched.py --engine --fused-attention \
+    --tp 2 --requests 3 --batch 2 --prompt-len 16 --new-tokens 6
 
 # fault-injection smoke (DESIGN.md §12): seeded alloc failures + step
 # errors + a 20% cancellation schedule under the invariant watchdog;
